@@ -1,0 +1,29 @@
+"""Allocator solve-time hillclimb measurements (§Perf, measured CPU wall):
+
+  paper-faithful serial loop  ->  jit whole-game  (->  Pallas RM sweep on TPU)
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import (sample_scenario, solve_centralized,
+                        solve_distributed, solve_distributed_python)
+
+
+def run(sizes=(100, 500, 1000, 2000)):
+    for n in sizes:
+        scn = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=0.95)
+        t0 = time.perf_counter()
+        _, iters, _ = solve_distributed_python(scn)
+        t_serial = time.perf_counter() - t0
+        t_jit = timed(lambda: solve_distributed(scn).total, iters=3)
+        t_cent = timed(lambda: solve_centralized(scn).total, iters=3)
+        row(f"alloc_n{n}", t_jit,
+            f"paper_serial_s={t_serial:.4f};jit_s={t_jit:.5f};"
+            f"centralized_s={t_cent:.5f};speedup={t_serial/t_jit:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

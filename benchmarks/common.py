@@ -1,0 +1,21 @@
+import time
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+
+def timed(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name, seconds, derived=""):
+    print(f"{name},{seconds*1e6:.1f},{derived}")

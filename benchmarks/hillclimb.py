@@ -1,0 +1,79 @@
+"""§Perf hillclimb runner: re-lower a cell under config variants and compare
+roofline terms against the paper-faithful baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3-32b \
+        --shape train_4k --variants baseline,triangle,seqpar
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "perf"
+
+VARIANTS = {
+    "baseline": {},
+    "triangle": {"attn_triangle": True},
+    "seqpar": {"seq_parallel": True},
+    "triangle+seqpar": {"attn_triangle": True, "seq_parallel": True},
+    "remat_dots": {"remat": "dots"},
+    "accum_half": {},          # handled specially: grad_accum // 2
+    "accum_double": {},        # grad_accum * 2
+    "cf1.0": {},               # MoE capacity_factor 1.0
+    "loss_chunks16": {"loss_chunks": 16},
+    "no_flash_decode": {"flash_decode": False},
+    "flash_decode": {"flash_decode": True},
+    "serve_tp_only": {"fsdp": False},   # serving: weights replicated over
+                                        # 'data', sharded on 'model' only —
+                                        # no FSDP gathers per token
+}
+
+
+def apply_variant(cfg, name):
+    if name == "accum_half":
+        return cfg.replace(grad_accum=max(1, cfg.grad_accum // 2))
+    if name == "accum_double":
+        return cfg.replace(grad_accum=cfg.grad_accum * 2)
+    if name == "cf1.0":
+        assert cfg.moe is not None
+        import dataclasses
+        return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                   capacity_factor=1.0))
+    return cfg.replace(**VARIANTS[name])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline,triangle")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    base_terms = None
+    for name in args.variants.split(","):
+        cfg = apply_variant(get_config(args.arch), name)
+        rec = lower_cell(args.arch, args.shape, cfg_override=cfg,
+                         verbose=False)
+        rf = rec["roofline"]
+        out = RESULTS / f"{args.arch}__{args.shape}__{name}.json"
+        out.write_text(json.dumps(rec, indent=1))
+        msg = (f"{name:18s} t_c={rf['t_compute']:.4f} t_m={rf['t_memory']:.3f} "
+               f"t_coll={rf['t_collective']:.4f} peak={rec['memory'].get('peak_gb', -1):.1f}GB "
+               f"useful={rec['useful_ratio']:.2f} compile={rec['compile_s']}s")
+        if base_terms is None:
+            base_terms = rf
+        else:
+            msg += (f"  [d_c {rf['t_compute']/max(base_terms['t_compute'],1e-12)-1:+.1%}"
+                    f" d_coll {rf['t_collective']/max(base_terms['t_collective'],1e-12)-1:+.1%}]")
+        print(msg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSONs.  Usage:  PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+import json
+from pathlib import Path
+
+from benchmarks.roofline import enrich, load
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def fmt(x, p=3):
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{p}f}"
+
+
+def dryrun_table(mesh="single"):
+    rows = ["| arch | shape | status | peak GB/dev | per-dev GFLOPs | "
+            "per-dev GB moved | coll GB (wire) | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "ok":
+            pd = r["per_device"]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{r['memory'].get('peak_gb', -1):.1f} | "
+                f"{pd['flops']/1e9:.0f} | {pd['bytes']/1e9:.0f} | "
+                f"{pd['coll_bytes']/1e9:.2f} | {r['compile_s']} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped "
+                        f"(long-context, full-attn) | - | - | - | - | - |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - "
+                        f"| - | - |")
+    return "\n".join(rows)
+
+
+def roofline_table():
+    recs = [enrich(r) for r in load("single")]
+    rows = ["| arch | shape | t_compute s | t_mem(HLO) s | t_mem(model) s | "
+            "t_coll s | bottleneck | roofline frac | useful 6ND/HLO | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        note = ""
+        if r["memory"].get("peak_gb", 0) > 16:
+            note = "exceeds 16GB/dev single-pod"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['t_compute'])} | "
+            f"{fmt(rf['t_memory'])} | {fmt(rf['t_memory_model'])} | "
+            f"{fmt(rf['t_collective'])} | {rf['bottleneck_model']} | "
+            f"{rf['compute_fraction_model']:.3f} | "
+            f"{min(r['useful_ratio'], 9.99):.2f} | {note} |")
+    return "\n".join(rows)
+
+
+def main():
+    print("### Dry-run table (single-pod 16x16)\n")
+    print(dryrun_table("single"))
+    multi = list(RESULTS.glob("*__multi.json"))
+    if multi:
+        print("\n### Dry-run table (multi-pod 2x16x16)\n")
+        print(dryrun_table("multi"))
+    print("\n### Roofline table (single-pod)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Figs. 2/3 — decreasing capacity at fixed deadlines (100 & 1000 CMs).
+
+Expected: flat cost with slack capacity, penalties as R approaches the
+minimum aggregate requirement, infeasible below sum(r_low)."""
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import sample_scenario, solve_centralized, solve_distributed
+
+
+def run(n_values=(100, 1000), factors=(1.1, 1.05, 1.0, 0.95, 0.9, 0.85, 0.8)):
+    out = []
+    for n in n_values:
+        # one dataset, shrunk capacity (paper Sec. 5.2)
+        base = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=1.0)
+        R_o = float(jax.numpy.sum(base.r_up))
+        for f in factors:
+            scn = base.replace(R=jax.numpy.asarray(f * R_o, base.A.dtype))
+            c = solve_centralized(scn)
+            d = solve_distributed(scn)
+            feas = bool(c.feasible)
+            gap = (float(d.total) - float(c.total)) / max(abs(float(c.total)),
+                                                          1e-9)
+            t = timed(lambda: solve_distributed(scn).total, iters=2)
+            derived = (f"N={n};R/Ro={f:.2f};feasible={feas};"
+                       f"Cc={float(c.total):.0f};Cd={float(d.total):.0f};"
+                       f"chi={gap:.4f}")
+            row(f"fig2_capacity_n{n}_f{f:.2f}", t, derived)
+            out.append((n, f, feas, float(c.total), float(d.total)))
+    # monotonicity check (the paper's qualitative claim): rows are ordered by
+    # decreasing capacity, so cost must be non-decreasing
+    for n in n_values:
+        tots = [c for (nn, f, feas, c, d) in out if nn == n and feas]
+        assert all(t2 >= t1 - 1e-6 for t1, t2 in zip(tots, tots[1:])), tots
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Figs. 4/5 — decreasing deadlines at fixed capacity (100 & 1000 CMs)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import sample_scenario, solve_centralized, solve_distributed
+
+
+def run(n_values=(100, 1000), scales=(1.0, 0.9, 0.8, 0.7, 0.6, 0.5)):
+    out = []
+    for n in n_values:
+        base = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=1.1)
+        R = float(base.R)
+        D0 = -(base.E) + 0.0  # D - C
+        for s in scales:
+            # tighten deadlines: E = C - s*D  => E' = E - (s-1)*D
+            scn = sample_scenario(jax.random.PRNGKey(0), n,
+                                  deadline_scale=s, capacity=R)
+            c = solve_centralized(scn)
+            d = solve_distributed(scn)
+            feas = bool(c.feasible)
+            t = timed(lambda: solve_distributed(scn).total, iters=2)
+            gap = (float(d.total) - float(c.total)) / max(abs(float(c.total)),
+                                                          1e-9)
+            row(f"fig4_deadline_n{n}_s{s:.1f}", t,
+                f"N={n};Dscale={s};feasible={feas};Cc={float(c.total):.0f};"
+                f"Cd={float(d.total):.0f};chi={gap:.4f}")
+            out.append((n, s, feas, float(c.total)))
+    for n in n_values:
+        tots = [c for (nn, s, feas, c) in out if nn == n and feas]
+        assert all(t2 >= t1 - 1e-6 for t1, t2 in zip(tots, tots[1:])), tots
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 8 — sensitivity of the cost gap to the stopping tolerance."""
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import sample_scenario, solve_centralized, solve_distributed
+
+
+def run(sizes=(60, 180, 300), seeds=(0, 1, 2),
+        tolerances=(0.01, 0.03, 0.05, 0.10)):
+    for eps in tolerances:
+        gaps = []
+        for n in sizes:
+            for s in seeds:
+                scn = sample_scenario(jax.random.PRNGKey(s), n,
+                                      capacity_factor=0.93)
+                c = solve_centralized(scn)
+                d = solve_distributed(scn, eps_bar=eps)
+                gaps.append((float(d.total) - float(c.total))
+                            / max(abs(float(c.total)), 1e-9))
+        t = timed(lambda: solve_distributed(scn, eps_bar=eps).total, iters=2)
+        row(f"fig8_tolerance_eps{eps:.2f}", t,
+            f"chi_mean={np.mean(gaps):.4f};chi_max={np.max(gaps):.4f}")
+
+
+if __name__ == "__main__":
+    run()

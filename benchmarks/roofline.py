@@ -1,0 +1,95 @@
+"""Roofline table assembly from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Prints one CSV row per (arch x shape) cell with the three terms, bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and flags the hillclimb candidates (worst compute
+fraction / most collective-bound / technique-representative)."""
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+HBM_BW = 819e9
+
+
+def load(mesh="single"):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def memory_model_seconds(rec, chips=256):
+    """Analytic per-device HBM-traffic estimate (XLA:CPU 'bytes accessed' is
+    an UN-FUSED upper bound; this models what a fused TPU executable reads/
+    writes: weights per pass, residuals, KV cache, optimizer state).
+
+    Returns seconds at 819 GB/s.  See EXPERIMENTS.md §Roofline notes."""
+    from repro.configs import get_config
+    from repro.models.config import SHAPES_BY_NAME
+    cfg = get_config(rec["arch"])
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    pb = rec["params_total"] * 2 / chips                 # bf16 weights/device
+    B, S = shape.global_batch, shape.seq_len
+    L, d = cfg.n_layers, cfg.d_model
+    if shape.kind == "train":
+        M = cfg.grad_accum
+        tok_dev = B * S / 16 / max(M, 1)                 # dp=16, per micro
+        act = 8 * tok_dev * d * 2 * L                    # r/w few times/layer
+        resid = 2 * 2 * tok_dev * d * 2 * L              # save+read residuals
+        opt = rec["params_total"] * 12 / chips           # m/v/master r/w
+        bytes_ = M * (3 * pb + act + resid) + opt
+    elif shape.kind == "prefill":
+        tok_dev = B * S / 16
+        bytes_ = pb + 8 * tok_dev * d * 2 * L
+    else:  # decode: every weight + the whole cache read once per token
+        n_attn = sum(1 for m, _ in cfg.layer_kinds() if m == "attn")
+        cache = (2 * B * S * cfg.n_kv * cfg.hd * 2 * n_attn) / chips
+        bytes_ = pb + cache + B * d * 2 * L / chips * 8
+    return bytes_ / HBM_BW
+
+
+def enrich(r):
+    """Add the model-based memory term + model bottleneck/fraction."""
+    rf = r["roofline"]
+    tm_model = memory_model_seconds(r)
+    terms = {"compute": rf["t_compute"], "memory": tm_model,
+             "collective": rf["t_collective"]}
+    rf["t_memory_model"] = tm_model
+    rf["bottleneck_model"] = max(terms, key=terms.get)
+    rf["compute_fraction_model"] = rf["t_compute"] / max(max(terms.values()),
+                                                         1e-30)
+    return r
+
+
+def run(mesh="single"):
+    recs = [enrich(r) for r in load(mesh)]
+    for r in recs:
+        rf = r["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        t_bound = max(rf["t_compute"], rf["t_memory_model"],
+                      rf["t_collective"])
+        derived = (f"t_compute={rf['t_compute']:.4g};"
+                   f"t_memory_hlo={rf['t_memory']:.4g};"
+                   f"t_memory_model={rf['t_memory_model']:.4g};"
+                   f"t_collective={rf['t_collective']:.4g};"
+                   f"bottleneck={rf['bottleneck_model']};"
+                   f"compute_frac={rf['compute_fraction_model']:.3f};"
+                   f"useful_ratio={r['useful_ratio']:.3f};"
+                   f"peak_gb={r['memory'].get('peak_gb', -1):.1f}")
+        row(name, t_bound, derived)
+    if recs:
+        worst = min(recs, key=lambda r: r["roofline"]["compute_fraction_model"])
+        coll = max(recs, key=lambda r: (r["roofline"]["t_collective"]
+                                        / max(r["roofline"]["t_compute"],
+                                              1e-12)))
+        print(f"# hillclimb candidates: worst_fraction="
+              f"{worst['arch']}:{worst['shape']}  most_collective="
+              f"{coll['arch']}:{coll['shape']}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

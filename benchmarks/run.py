@@ -1,0 +1,31 @@
+"""Benchmark harness — one module per paper table/figure + roofline/perf.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (allocator_perf, paper_capacity, paper_deadlines,
+                            paper_scalability, paper_tolerance, roofline)
+
+    print("name,us_per_call,derived")
+    paper_capacity.run(n_values=(100,) if args.quick else (100, 1000))
+    paper_deadlines.run(n_values=(100,) if args.quick else (100, 1000))
+    paper_scalability.run(sizes=(20, 100) if args.quick
+                          else (20, 100, 200, 300, 400, 500))
+    paper_tolerance.run(sizes=(60,) if args.quick else (60, 180, 300))
+    allocator_perf.run(sizes=(100, 500) if args.quick
+                       else (100, 500, 1000, 2000))
+    roofline.run()
+
+
+if __name__ == '__main__':
+    main()

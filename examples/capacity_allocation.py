@@ -1,0 +1,56 @@
+"""Reproduce the paper's experimental campaign in miniature: the
+decreasing-capacity sweep (Fig. 2), decreasing deadlines (Fig. 4) and the
+tolerance analysis (Fig. 8), printed as tables.
+
+    PYTHONPATH=src python examples/capacity_allocation.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import sample_scenario, solve_centralized, solve_distributed
+
+
+def sweep_capacity(n=100):
+    print(f"=== Fig. 2: decreasing capacity (N={n}) ===")
+    base = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=1.0)
+    R_o = float(jnp.sum(base.r_up))
+    print(f"{'R/R^o':>6} {'feasible':>9} {'C_centralized':>14} "
+          f"{'C_distributed':>14} {'chi':>8}")
+    for f in (1.1, 1.0, 0.95, 0.9, 0.85, 0.8, 0.75):
+        scn = base.replace(R=jnp.asarray(f * R_o, base.A.dtype))
+        c, d = solve_centralized(scn), solve_distributed(scn)
+        chi = (float(d.total) - float(c.total)) / max(float(c.total), 1e-9)
+        print(f"{f:6.2f} {str(bool(c.feasible)):>9} {float(c.total):14.0f} "
+              f"{float(d.total):14.0f} {chi:8.4f}")
+
+
+def sweep_deadlines(n=100):
+    print(f"\n=== Fig. 4: decreasing deadlines (N={n}) ===")
+    base = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=1.1)
+    R = float(base.R)
+    print(f"{'Dscale':>7} {'feasible':>9} {'C_centralized':>14} {'penalty':>12}")
+    for s in (1.0, 0.9, 0.8, 0.7, 0.6):
+        scn = sample_scenario(jax.random.PRNGKey(0), n, deadline_scale=s,
+                              capacity=R)
+        c = solve_centralized(scn)
+        print(f"{s:7.1f} {str(bool(c.feasible)):>9} {float(c.total):14.0f} "
+              f"{float(c.penalty):12.0f}")
+
+
+def sweep_tolerance(n=100):
+    print(f"\n=== Fig. 8: tolerance sensitivity (N={n}) ===")
+    scn = sample_scenario(jax.random.PRNGKey(1), n, capacity_factor=0.93)
+    c = solve_centralized(scn)
+    for eps in (0.01, 0.03, 0.05, 0.10):
+        d = solve_distributed(scn, eps_bar=eps)
+        chi = (float(d.total) - float(c.total)) / float(c.total)
+        print(f"eps_bar={eps:5.2f}: chi={chi:.4f} iters={int(d.iters)}")
+
+
+if __name__ == "__main__":
+    sweep_capacity()
+    sweep_deadlines()
+    sweep_tolerance()

@@ -1,0 +1,71 @@
+"""End-to-end fleet simulation: the paper's game allocates TPU chips across
+tenant (arch x shape) classes, with a live node-failure event (capacity drop
+-> re-solve -> elastic re-mesh) and a straggler mitigation event.
+
+Profiles are fitted from the dry-run roofline terms when available, else from
+built-in estimates, via core.profiles.from_roofline.
+
+    PYTHONPATH=src python examples/multi_tenant_cluster.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.cluster import FleetSimulator, TenantSpec
+
+# (compute_s, collective_s, overhead_s) per job at 256 chips — taken from the
+# dry-run roofline table (fallbacks if the sweep hasn't been run)
+FALLBACK = {
+    "qwen3-8b-train": (1.8, 0.9, 1.0),
+    "qwen3-32b-serve": (0.6, 0.24, 1.0),
+    "deepseek-serve": (0.3, 0.2, 1.0),
+    "rwkv6-long": (0.2, 0.1, 1.0),
+}
+
+TENANTS = [
+    TenantSpec("qwen3-8b-train", "qwen3-8b", "train_4k", deadline_s=120.0,
+               H_up=12, H_low=4, penalty_per_job=20000.0),
+    TenantSpec("qwen3-32b-serve", "qwen3-32b", "prefill_32k", deadline_s=30.0,
+               H_up=16, H_low=8, penalty_per_job=30000.0),
+    TenantSpec("deepseek-serve", "deepseek-moe-16b", "decode_32k",
+               deadline_s=15.0, H_up=20, H_low=8, penalty_per_job=15000.0),
+    TenantSpec("rwkv6-long", "rwkv6-7b", "long_500k", deadline_s=60.0,
+               H_up=8, H_low=2, penalty_per_job=18000.0),
+]
+
+
+def show(tag, alloc):
+    print(f"\n--- {tag}: total cost {alloc.total_cost:.0f} cents, "
+          f"{alloc.iters} game iterations ---")
+    for name, chips in alloc.chips.items():
+        print(f"  {name:18s} chips={chips:5d} mesh={alloc.meshes[name]} "
+              f"admitted_jobs={alloc.h[name]}")
+
+
+def main():
+    fleet = FleetSimulator(total_chips=900, tenants=TENANTS)
+    try:
+        alloc = fleet.epoch()
+        print("(profiles fitted from dry-run roofline JSONs)")
+    except (FileNotFoundError, AssertionError, KeyError):
+        alloc = fleet.epoch(profiles=FALLBACK)
+        print("(dry-run results not found; using fallback profiles)")
+    profiles = None if fleet.history else FALLBACK
+    show("epoch 0: steady state", alloc)
+
+    # node failure: 256 chips (a pod slice) die -> capacity drop -> re-solve.
+    # Running jobs re-mesh from checkpoints (repro.checkpoint reshards).
+    alloc = fleet.fail_nodes(300)
+    show("epoch 1: after losing 300 chips (paper Fig. 2, live)", alloc)
+
+    # straggler mitigation: qwen3-8b-train shows stragglers; over-provision
+    alloc = fleet.mark_straggler("qwen3-8b-train", factor=1.3)
+    show("epoch 2: straggler over-provisioning on qwen3-8b-train", alloc)
+
+    # capacity restored
+    alloc = fleet.restore_nodes(300)
+    show("epoch 3: capacity restored", alloc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — game-theoretic runtime capacity allocation (GNEP) for multi-pod
+TPU fleets, with a 10-architecture JAX model zoo and Pallas kernels.
+
+Public surface:
+    repro.core      — the paper (solvers, game, rounding, profiles)
+    repro.cluster   — fleet simulation (tenants, failures, elastic epochs)
+    repro.models    — model zoo + distribution-aware layers
+    repro.configs   — the assigned architectures and input shapes
+    repro.launch    — meshes, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

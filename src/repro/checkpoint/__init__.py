@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (latest_step, restore, save,
+                                    save_async, wait_pending)
+
+__all__ = ["latest_step", "restore", "save", "save_async", "wait_pending"]

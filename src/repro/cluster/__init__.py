@@ -1,0 +1,3 @@
+from repro.cluster.fleet import FleetSimulator, TenantSpec
+
+__all__ = ["FleetSimulator", "TenantSpec"]

@@ -1,0 +1,144 @@
+"""Fleet-level integration of the paper's GNEP allocator.
+
+Tenant classes (arch x shape cells with SLAs) bid for TPU chips through the
+RM/CM game exactly as the paper's job classes bid for VMs:
+
+  * job profiles (A_i, B_i, C_i) are FITTED FROM THE DRY-RUN ROOFLINE TERMS
+    of each tenant's cell (compute seconds -> map wave, collective seconds ->
+    reduce wave) via core.profiles.from_roofline;
+  * every allocator epoch (the paper's hourly re-solve), the distributed
+    best-reply game allocates chips; Algorithm 4.2 integerizes; chips are
+    factored into (data, model) sub-meshes per tenant;
+  * node failures shrink R and trigger a re-solve (the paper's Fig. 2
+    decreasing-capacity experiment, run live); running jobs elastically
+    re-mesh from their latest checkpoint (repro.checkpoint reshards);
+  * stragglers are mitigated at the allocator level by inflating A_i with an
+    over-provisioning factor (speculative-execution analog).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Scenario, from_roofline, round_solution, solve
+from repro.utils import fdtype
+
+
+@dataclass
+class TenantSpec:
+    name: str
+    arch_id: str
+    shape: str
+    deadline_s: float          # SLA: per-window completion time for one job
+    H_up: int                  # max concurrent jobs (SLA)
+    H_low: int                 # guaranteed minimum
+    penalty_per_job: float     # m_i [cents]
+    max_bid: float = 20.0      # rho_i^up
+    tp_required: int = 16      # model-parallel degree the arch needs
+    straggler_factor: float = 1.0
+
+
+@dataclass
+class Allocation:
+    chips: Dict[str, int]
+    h: Dict[str, int]
+    meshes: Dict[str, tuple]
+    total_cost: float
+    method: str
+    iters: int
+
+
+class FleetSimulator:
+    """Chips-for-tenants market driven by the paper's game."""
+
+    def __init__(self, total_chips: int, tenants: List[TenantSpec], *,
+                 chip_cost: float = 1.0, profile_dir: Optional[str] = None):
+        self.R = total_chips
+        self.tenants = tenants
+        self.chip_cost = chip_cost
+        self.profile_dir = profile_dir
+        self.history: List[Allocation] = []
+
+    # ---------------- profiles from the dry-run roofline ------------------
+    def _roofline_record(self, t: TenantSpec) -> dict:
+        d = Path(self.profile_dir or "benchmarks/results/dryrun")
+        fn = d / f"{t.arch_id}__{t.shape}__single.json"
+        rec = json.loads(fn.read_text())
+        assert rec["status"] == "ok", f"no roofline for {t.name}"
+        return rec
+
+    def scenario(self, *, profiles: Optional[dict] = None) -> Scenario:
+        comp, coll, over, dl, hu, hl, m, bid = [], [], [], [], [], [], [], []
+        for t in self.tenants:
+            if profiles and t.name in profiles:
+                c, x, o = profiles[t.name]
+            else:
+                rec = self._roofline_record(t)
+                rf = rec["roofline"]
+                c, x, o = rf["t_compute"], rf["t_collective"], 1.0
+            comp.append(c * 256 * t.straggler_factor)  # chip-seconds per job
+            coll.append(max(x, 1e-6) * 256)
+            over.append(o)
+            dl.append(t.deadline_s)
+            hu.append(t.H_up)
+            hl.append(t.H_low)
+            m.append(t.penalty_per_job)
+            bid.append(t.max_bid)
+        return from_roofline(
+            np.asarray(comp) / 256.0, np.asarray(coll) / 256.0,
+            np.asarray(over), np.asarray(dl), chips_ref=256.0,
+            H_up=np.asarray(hu, float), H_low=np.asarray(hl, float),
+            m=np.asarray(m, float), rho_up=np.asarray(bid, float),
+            R=float(self.R), rho_bar=self.chip_cost)
+
+    # ---------------- epoch: solve the game, plan meshes -------------------
+    def epoch(self, *, method: str = "distributed",
+              profiles: Optional[dict] = None) -> Allocation:
+        if profiles is not None:
+            self._profiles = profiles
+        profiles = getattr(self, "_profiles", None)
+        scn = self.scenario(profiles=profiles)
+        res = solve(scn, method=method)
+        it = res.integer
+        chips, hmap, meshes = {}, {}, {}
+        for i, t in enumerate(self.tenants):
+            c = int(it.r[i])
+            chips[t.name] = c
+            hmap[t.name] = int(it.h[i])
+            meshes[t.name] = self.mesh_plan(c, t.tp_required)
+        alloc = Allocation(chips=chips, h=hmap, meshes=meshes,
+                           total_cost=float(it.total), method=method,
+                           iters=res.iters)
+        self.history.append(alloc)
+        return alloc
+
+    @staticmethod
+    def mesh_plan(chips: int, tp: int) -> tuple:
+        """Factor a chip grant into (data, model); unusable remainder chips
+        are returned to the pool (reported)."""
+        if chips < tp:
+            return (1, max(1, chips))
+        return (chips // tp, tp)
+
+    # ---------------- fault tolerance --------------------------------------
+    def fail_nodes(self, n_chips: int, *, method: str = "distributed"):
+        """Capacity drop -> immediate re-solve (paper Sec. 5.2.1, live)."""
+        self.R = max(0, self.R - n_chips)
+        return self.epoch(method=method)
+
+    def restore_nodes(self, n_chips: int, *, method: str = "distributed"):
+        self.R += n_chips
+        return self.epoch(method=method)
+
+    def mark_straggler(self, tenant_name: str, factor: float = 1.3,
+                       *, method: str = "distributed"):
+        """Inflate a tenant's map-wave profile (speculative re-execution
+        headroom) and re-solve."""
+        for t in self.tenants:
+            if t.name == tenant_name:
+                t.straggler_factor = factor
+        return self.epoch(method=method)

@@ -1,0 +1,28 @@
+"""Registry of the 10 assigned architectures + their input-shape cells."""
+from __future__ import annotations
+
+from repro.configs import (deepseek_moe_16b, jamba_v0_1_52b, kimi_k2_1t_a32b,
+                           minicpm_2b, qwen2_vl_7b, qwen3_0_6b, qwen3_32b,
+                           qwen3_8b, rwkv6_7b, whisper_base)
+from repro.configs.specs import cell_is_live, input_specs, live_cells
+from repro.models.config import ALL_SHAPES, SHAPES_BY_NAME, ShapeConfig
+
+_MODULES = (qwen2_vl_7b, deepseek_moe_16b, kimi_k2_1t_a32b, qwen3_32b,
+            qwen3_8b, minicpm_2b, qwen3_0_6b, rwkv6_7b, jamba_v0_1_52b,
+            whisper_base)
+
+ARCHS = {m.ID: m for m in _MODULES}
+ARCH_IDS = tuple(ARCHS)
+
+
+def get_config(arch_id: str):
+    return ARCHS[arch_id].get_config()
+
+
+def reduced_config(arch_id: str):
+    return ARCHS[arch_id].reduced_config()
+
+
+__all__ = ["ALL_SHAPES", "ARCHS", "ARCH_IDS", "SHAPES_BY_NAME", "ShapeConfig",
+           "cell_is_live", "get_config", "input_specs", "live_cells",
+           "reduced_config"]

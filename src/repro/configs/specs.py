@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation happens here; the dry-run lowers against these specs.
+``long_500k`` is live only for sub-quadratic archs (SSM / hybrid), per the
+assignment; encoder-only archs would skip decode but none are assigned
+(whisper is enc-dec, so its decode cells run).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.models.config import ModelConfig, ShapeConfig
+
+SUBQUADRATIC = ("rwkv6-7b", "jamba-v0.1-52b")
+
+
+def cell_is_live(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, ("skipped: pure full-attention arch at 512k decode is "
+                       "quadratic-cost (assignment: run only for SSM/hybrid)")
+    return True, ""
+
+
+def live_cells(archs: Dict[str, Any], shapes) -> list:
+    out = []
+    for aid, mod in archs.items():
+        cfg = mod.get_config()
+        for s in shapes:
+            if cell_is_live(cfg, s)[0]:
+                out.append((aid, s.name))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Returns kwargs-specs for the step function of this cell.
+
+    train/prefill -> {"batch": {...}}
+    decode        -> {"cache": ..., "token": ..., "pos": ...}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    adt = cfg.adtype
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = _sds((B, S, cfg.d_model), adt)
+            batch["mrope_positions"] = _sds((3, B, S), i32)
+        elif cfg.is_encdec:
+            batch["enc_embeds"] = _sds((B, S, cfg.d_model), adt)
+            batch["tokens"] = _sds((B, S), i32)
+        else:
+            batch["tokens"] = _sds((B, S), i32)
+        if shape.kind == "train":
+            batch["targets"] = _sds((B, S), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a cache of S positions
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, enc_len=S if cfg.is_encdec else 0))
+    return {"cache": cache, "token": _sds((B,), i32),
+            "pos": _sds((), i32)}

@@ -1,0 +1,18 @@
+"""The paper's contribution: GNEP-based runtime capacity allocation."""
+from repro.core.allocator import AllocationResult, InfeasibleError, solve
+from repro.core.centralized import kkt_residual, objective_of_r, solve_centralized
+from repro.core.game import (cm_best_response, distributed_walltime_estimate,
+                             rm_solve, solve_distributed,
+                             solve_distributed_python)
+from repro.core.profiles import from_roofline, sample_scenario
+from repro.core.rounding import IntegerSolution, round_solution
+from repro.core.types import Scenario, Solution, deadline_lhs, derive, objective
+
+__all__ = [
+    "AllocationResult", "InfeasibleError", "IntegerSolution", "Scenario",
+    "Solution", "cm_best_response", "deadline_lhs", "derive",
+    "distributed_walltime_estimate", "from_roofline", "kkt_residual",
+    "objective", "objective_of_r", "rm_solve", "round_solution",
+    "sample_scenario", "solve", "solve_centralized", "solve_distributed",
+    "solve_distributed_python",
+]

@@ -1,0 +1,64 @@
+"""High-level allocator facade: solve + round, centralized or distributed."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import game
+from repro.core.centralized import solve_centralized
+from repro.core.rounding import IntegerSolution, round_solution
+from repro.core.types import Scenario, Solution
+
+
+@dataclass
+class AllocationResult:
+    method: str
+    fractional: Solution
+    integer: Optional[IntegerSolution]
+    iters: int
+
+    @property
+    def r(self):
+        return self.integer.r if self.integer is not None else self.fractional.r
+
+    @property
+    def total(self):
+        return (self.integer.total if self.integer is not None
+                else self.fractional.total)
+
+
+def solve(scn: Scenario, method: str = "distributed", *, eps_bar: float = 0.03,
+          lam: float = 0.05, max_iters: int = 200,
+          integer: bool = True) -> AllocationResult:
+    """Solve the joint admission-control + capacity-allocation problem.
+
+    method: "centralized" (exact optimum of P2/P3) or "distributed"
+    (Algorithm 4.1 GNEP best-reply) — both feed Algorithm 4.2 when
+    ``integer=True``, mirroring the paper's experimental pipeline (Sec. 5).
+    """
+    if method == "centralized":
+        sol = solve_centralized(scn)
+    elif method == "distributed":
+        sol = game.solve_distributed(scn, eps_bar=eps_bar, lam=lam,
+                                     max_iters=max_iters)
+    elif method == "distributed-python":
+        sol, _, _ = game.solve_distributed_python(
+            scn, eps_bar=eps_bar, lam=lam, max_iters=max_iters)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    if not bool(sol.feasible):
+        raise InfeasibleError(
+            f"instance infeasible: sum(r_low)={float(jnp.sum(scn.r_low)):.1f} "
+            f"> R={float(scn.R):.1f} or some E_i >= 0")
+
+    integer_sol = (round_solution(scn, sol.r, sol.sM, sol.sR, sol.psi)
+                   if integer else None)
+    return AllocationResult(method=method, fractional=sol,
+                            integer=integer_sol, iters=int(sol.iters))
+
+
+class InfeasibleError(RuntimeError):
+    """Deadlines/SLAs cannot be met with the available capacity."""

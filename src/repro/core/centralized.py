@@ -1,0 +1,94 @@
+"""Centralized solver for the reduced convex program (P3).
+
+The paper solves (P2)/(P3) with AMPL+Knitro.  (P3) is separable with a single
+coupling constraint, so its KKT system is solved *exactly* by water-filling on
+the capacity multiplier ``a``:
+
+    stationarity:  rho_bar + a - alpha_i K_i / r_i^2 = 0   (interior)
+    =>             r_i(a) = clip( sqrt(alpha_i K_i / (rho_bar + a)),
+                                  r_i^low, r_i^up )
+
+``sum_i r_i(a)`` is continuous and non-increasing in ``a``; complementary
+slackness picks a = 0 if the box solution fits in R, else the unique root of
+``sum r_i(a) = R``, found by bisection to machine precision.  The full
+(psi, s^M, s^R) solution is recovered through Prop. 3.3.  This replaces the
+paper's generic NLP solver with a closed-form method (see DESIGN.md Sec. 3).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Scenario, Solution, objective
+
+_BISECT_ITERS = 120
+
+
+def _r_of_a(scn: Scenario, a):
+    r_unc = jnp.sqrt(scn.alpha * scn.K / (scn.rho_bar + a))
+    return jnp.clip(r_unc, scn.r_low, scn.r_up)
+
+
+@partial(jax.jit, static_argnames=())
+def solve_centralized(scn: Scenario) -> Solution:
+    """Exact optimum of (P3) + Prop. 3.3 recovery. Pure function, jittable."""
+    feasible = (jnp.sum(scn.r_low) <= scn.R) & jnp.all(scn.E < 0)
+
+    r0 = _r_of_a(scn, 0.0)
+    fits = jnp.sum(r0) <= scn.R
+
+    # upper bracket: multiplier pushing every class to its lower bound
+    a_hi = jnp.max(scn.alpha * scn.K / (scn.r_low ** 2)) - scn.rho_bar + 1.0
+    a_hi = jnp.maximum(a_hi, 1.0)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_big = jnp.sum(_r_of_a(scn, mid)) > scn.R
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body,
+                               (jnp.zeros_like(a_hi), a_hi))
+    a = jnp.where(fits, 0.0, hi)
+    r = _r_of_a(scn, a)
+
+    # Prop. 3.3 recovery
+    sM = scn.xiM * r
+    sR = scn.xiR * r
+    psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
+
+    cost = scn.rho_bar * jnp.sum(r)
+    penalty = jnp.sum(scn.alpha * psi - scn.beta)
+    return Solution(r=r, psi=psi, sM=sM, sR=sR, cost=cost, penalty=penalty,
+                    total=cost + penalty, feasible=feasible,
+                    iters=jnp.asarray(_BISECT_ITERS), aux=a)
+
+
+def kkt_residual(scn: Scenario, r, a) -> jnp.ndarray:
+    """Max KKT violation of a candidate (P3) solution (used by tests).
+
+    Checks stationarity with box multipliers eliminated by sign conditions,
+    primal feasibility and complementary slackness of the capacity constraint.
+    """
+    g = scn.rho_bar + a - scn.alpha * scn.K / (r ** 2)   # dL/dr (box mults out)
+    tol_r = 1e-6 * jnp.maximum(scn.r_up, 1.0)
+    at_low = r <= scn.r_low + tol_r
+    at_up = r >= scn.r_up - tol_r
+    interior = ~(at_low | at_up)
+    scale = jnp.maximum(scn.rho_bar + a, 1.0)
+    stat = jnp.max(jnp.where(interior, jnp.abs(g), 0.0) / scale)
+    sign_low = jnp.max(jnp.where(at_low, jnp.maximum(-g, 0.0), 0.0) / scale)
+    sign_up = jnp.max(jnp.where(at_up, jnp.maximum(g, 0.0), 0.0) / scale)
+    primal = jnp.maximum(jnp.sum(r) - scn.R, 0.0) / jnp.maximum(scn.R, 1.0)
+    box = jnp.max(jnp.maximum(scn.r_low - r, r - scn.r_up) /
+                  jnp.maximum(scn.r_up, 1.0))
+    comp = jnp.abs(a * (jnp.sum(r) - scn.R)) / jnp.maximum(scn.R * scale, 1.0)
+    return jnp.max(jnp.stack([stat, sign_low, sign_up, primal, box, comp]))
+
+
+def objective_of_r(scn: Scenario, r) -> jnp.ndarray:
+    """(P3a) objective for an arbitrary feasible r (psi via Prop. 3.3)."""
+    psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
+    return objective(scn, r, psi)

@@ -1,0 +1,102 @@
+"""Job-profile generation (paper Sec. 5.1, Tables 5/6) and roofline-fitted
+profiles for TPU tenant classes (hardware adaptation, DESIGN.md Sec. 2).
+
+The paper extracts ``A_i, B_i, C_i`` from Hadoop logs via [13]; the exact
+aggregation is not reproduced in the text, so we use the ARIA-style form
+(documented in DESIGN.md Sec. 6):
+
+    A = n^M * M^avg                    (map-phase work, chip-seconds)
+    B = n^R * (Sh^avg_typ + R^avg)     (shuffle+reduce-phase work)
+    C = M^max + R^max + Sh^max_1 + Sh^max_typ   (constant tail)
+
+with ``X^avg = 0.8 X^max`` exactly as in Table 6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Scenario, derive
+from repro.utils import fdtype
+
+
+def _u(key, lo, hi, shape=(), dtype=None):
+    dtype = dtype or fdtype()
+    return jax.random.uniform(key, shape, dtype=dtype, minval=lo, maxval=hi)
+
+
+def _ui(key, lo, hi, shape=()):  # inclusive integer uniform
+    return jax.random.randint(key, shape, lo, hi + 1)
+
+
+def sample_scenario(key, n_classes: int, *, capacity_factor: float = 1.1,
+                    capacity=None, deadline_scale: float = 1.0) -> Scenario:
+    """Random instance per the paper's design of experiments (Table 5).
+
+    ``capacity_factor``: R = factor * R^o with R^o = sum(r_up) (Sec. 5.2.1).
+    ``deadline_scale``: multiplies D_i (Sec. 5.2.2 uses < 1 to tighten).
+    ``capacity``: overrides R directly when given.
+    """
+    dt = fdtype()
+    ks = jax.random.split(key, 16)
+    n = n_classes
+
+    rho_up = _u(ks[0], 5.0, 20.0, (n,))                   # [cents]
+    H_up = _ui(ks[1], 5, 20, (n,)).astype(dt)
+    cM = _ui(ks[2], 1, 4, (n,)).astype(dt)
+    cR = _ui(ks[3], 1, 4, (n,)).astype(dt)
+    m = _u(ks[4], 15000.0, 30000.0, (n,))                 # [cents]
+    nM = _ui(ks[5], 70, 1120, (n,)).astype(dt)
+    nR = jnp.full((n,), 64.0, dt)
+    M_max = _u(ks[6], 16.0, 120.0, (n,))                  # [s]
+    R_max = _u(ks[7], 15.0, 75.0, (n,))
+    Sh1_max = _u(ks[8], 10.0, 30.0, (n,))
+    Shtyp_max = _u(ks[9], 30.0, 150.0, (n,))
+    D = _u(ks[10], 900.0, 1500.0, (n,)) * deadline_scale  # [s]
+
+    # cost model, Eq. 15 (v=2 fixed; one draw per cluster)
+    v = 2.0
+    d = _u(ks[11], 3.0, 5.0)
+    pue = _u(ks[12], 1.2, 2.2)
+    energy = _u(ks[13], 0.06009, 0.06690)
+    srv = 2.0615
+    rho_bar = (pue * energy + srv) * v / d
+
+    # Table 6 derivations
+    M_avg, R_avg, Shtyp_avg = 0.8 * M_max, 0.8 * R_max, 0.8 * Shtyp_max
+    H_low = jnp.maximum(jnp.floor(0.8 * H_up), 1.0)
+
+    A = nM * M_avg
+    B = nR * (Shtyp_avg + R_avg)
+    C = M_max + R_max + Sh1_max + Shtyp_max
+    E = C - D
+
+    scn = derive(A, B, E, cM, cR, H_up, H_low, m, rho_up,
+                 R=jnp.asarray(0.0, dt), rho_bar=rho_bar)
+    if capacity is None:
+        capacity = capacity_factor * jnp.sum(scn.r_up)
+    return scn.replace(R=jnp.asarray(capacity, dt))
+
+
+def from_roofline(compute_s, collective_s, overhead_s, deadline_s, *,
+                  chips_ref: float, H_up, H_low, m, rho_up, R,
+                  rho_bar: float = 1.0) -> Scenario:
+    """Fit paper job profiles from dry-run roofline terms (TPU adaptation).
+
+    A tenant job profiled at ``chips_ref`` chips spends ``compute_s`` seconds in
+    math (the "map wave"), ``collective_s`` seconds in collectives (the
+    "reduce wave") and ``overhead_s`` fixed time per SLA window.  Both wave
+    terms scale ~1/chips, exactly the paper's ``A h / s`` form with h=1 job:
+
+        T(r) = A / sM + B / sR + C,  sM = sR = r  (cM = cR = 1 slot/chip).
+    """
+    dt = fdtype()
+    A = jnp.asarray(compute_s, dt) * chips_ref
+    B = jnp.asarray(collective_s, dt) * chips_ref
+    C = jnp.asarray(overhead_s, dt)
+    E = C - jnp.asarray(deadline_s, dt)
+    ones = jnp.ones_like(A)
+    return derive(A, B, E, ones, ones, jnp.asarray(H_up, dt),
+                  jnp.asarray(H_low, dt), jnp.asarray(m, dt),
+                  jnp.asarray(rho_up, dt), R=jnp.asarray(R, dt),
+                  rho_bar=jnp.asarray(rho_bar, dt))

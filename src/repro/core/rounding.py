@@ -1,0 +1,81 @@
+"""Algorithm 4.2 — integer solution heuristic (paper Sec. 4.5).
+
+The paper's pseudocode, vectorized exactly:
+
+1. sort classes by increasing alpha;
+2. r <- ceil(r_hat); one pass decrements each r_j (in sorted order) while
+   sum(r) > R.  Prop. 4.2 guarantees a single pass suffices, hence exactly
+   k = max(0, sum(ceil(r_hat)) - floor(R)) decrements happen: the first k
+   classes in alpha-order.
+3. s <- ceil(s_hat); per class, decrement s^R (then s^M if still violated)
+   until s^M/c^M + s^R/c^R <= r.  Prop. 4.3 bounds this by
+   omega_i + 1 <= min(c^M, c^R) + 1 iterations, so a fixed-bound fori_loop
+   implements it exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Scenario
+
+
+class IntegerSolution(NamedTuple):
+    r: jnp.ndarray
+    sM: jnp.ndarray
+    sR: jnp.ndarray
+    h: jnp.ndarray      # integer admitted concurrency after rounding
+    psi: jnp.ndarray
+    cost: jnp.ndarray
+    penalty: jnp.ndarray
+    total: jnp.ndarray
+
+
+def round_solution(scn: Scenario, r_hat, sM_hat, sR_hat, psi_hat=None,
+                   max_slot_iters: int = 8) -> IntegerSolution:
+    """Vectorized Algorithm 4.2; returns an integer-feasible allocation.
+
+    Per the paper (Sec. 4.5) the rounded solution is feasible w.r.t. all
+    constraints *except* the approximate deadline formula (P4d): admission h
+    is kept at the continuous optimum (rounded to the nearest integer in the
+    SLA box), it is NOT re-tightened against the rounded slots.
+    """
+    dt = r_hat.dtype
+
+    # ---- lines 1-7: capacity-feasible integer r -----------------------------
+    r = jnp.ceil(r_hat)
+    overshoot = jnp.maximum(jnp.sum(r) - jnp.floor(scn.R), 0.0)
+    order = jnp.argsort(scn.alpha)               # increasing alpha
+    rank = jnp.argsort(order).astype(dt)         # rank[i] = position of i
+    r = r - (rank < overshoot).astype(dt)
+
+    # ---- lines 8-17: slot rounding ------------------------------------------
+    sM = jnp.ceil(sM_hat)
+    sR = jnp.ceil(sR_hat)
+
+    def body(_, sMsR):
+        sM, sR = sMsR
+        viol = sM / scn.cM + sR / scn.cR > r
+        sR = sR - viol.astype(dt)                          # line 12
+        viol2 = sM / scn.cM + sR / scn.cR > r              # line 13
+        sM = sM - (viol & viol2).astype(dt)                # line 14
+        return sM, sR
+
+    sM, sR = jax.lax.fori_loop(0, max_slot_iters, body, (sM, sR))
+    sM = jnp.maximum(sM, 1.0)
+    sR = jnp.maximum(sR, 1.0)
+
+    # ---- integer admission ---------------------------------------------------
+    # (P4d) is approximate and relaxed during rounding (paper Sec. 4.5):
+    # round the continuous concurrency to the nearest integer in the SLA box.
+    if psi_hat is None:
+        psi_hat = jnp.clip(scn.K / r_hat, scn.psi_low, scn.psi_up)
+    h = jnp.clip(jnp.round(1.0 / psi_hat), scn.H_low, scn.H_up)
+    psi = 1.0 / h
+
+    cost = scn.rho_bar * jnp.sum(r)
+    penalty = jnp.sum(scn.alpha * psi - scn.beta)
+    return IntegerSolution(r=r, sM=sM, sR=sR, h=h, psi=psi, cost=cost,
+                           penalty=penalty, total=cost + penalty)

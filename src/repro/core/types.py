@@ -1,0 +1,119 @@
+"""Scenario / solution containers for the GNEP capacity-allocation problem.
+
+All per-class quantities are (N,) arrays; scalars are 0-d arrays so every
+container is a jittable pytree.  Notation follows the paper (Tables 1-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda s: (tuple(getattr(s, f) for f in fields), None),
+        lambda _, xs: cls(*xs),
+    )
+    return cls
+
+
+@_register
+@dataclass
+class Scenario:
+    """One allocation problem instance over N job classes (paper Tables 1, 5, 6).
+
+    Raw SLA / profile parameters plus the derived constants of Props. 3.3/4.1.
+    """
+    # -- raw, per class (N,) -------------------------------------------------
+    A: jnp.ndarray          # map-phase profile coefficient           [s]
+    B: jnp.ndarray          # reduce/shuffle-phase profile coefficient[s]
+    E: jnp.ndarray          # C_i - D_i  (< 0 for feasibility)        [s]
+    cM: jnp.ndarray         # map slots per VM/chip
+    cR: jnp.ndarray         # reduce slots per VM/chip
+    H_up: jnp.ndarray       # max SLA concurrency
+    H_low: jnp.ndarray      # min SLA concurrency
+    m: jnp.ndarray          # penalty per rejected job                [cents]
+    rho_up: jnp.ndarray     # max bid CM i can place                  [cents]
+    # -- raw, scalars --------------------------------------------------------
+    R: jnp.ndarray          # cluster capacity (number of VMs/chips)
+    rho_bar: jnp.ndarray    # unit-time cost of one VM/chip           [cents]
+    # -- derived, per class (N,) ---------------------------------------------
+    psi_low: jnp.ndarray    # 1 / H_up
+    psi_up: jnp.ndarray     # 1 / H_low
+    alpha: jnp.ndarray      # penalty slope   (Eq. 17a)
+    beta: jnp.ndarray       # penalty offset  (Eq. 17b)
+    xiM: jnp.ndarray        # Eq. 7a
+    xiR: jnp.ndarray        # Eq. 7b
+    K: jnp.ndarray          # Eq. 7c: chips per job to meet deadline
+    r_up: jnp.ndarray       # Eq. 8a: K * H_up
+    r_low: jnp.ndarray      # Eq. 8b: K * H_low
+    p: jnp.ndarray          # Eq. 18: m / K
+    rho_hat: jnp.ndarray    # max_i rho_up  (scalar)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+def derive(A, B, E, cM, cR, H_up, H_low, m, rho_up, R, rho_bar) -> Scenario:
+    """Compute the closed-form constants (Props. 3.3, Eqs. 7/8/17/18)."""
+    A, B, E = jnp.asarray(A), jnp.asarray(B), jnp.asarray(E)
+    cM, cR = jnp.asarray(cM, A.dtype), jnp.asarray(cR, A.dtype)
+    H_up, H_low = jnp.asarray(H_up, A.dtype), jnp.asarray(H_low, A.dtype)
+    m, rho_up = jnp.asarray(m, A.dtype), jnp.asarray(rho_up, A.dtype)
+    psi_low = 1.0 / H_up
+    psi_up = 1.0 / H_low
+    alpha = m * H_up * H_low
+    beta = m * H_low
+    xiM = cM / (1.0 + jnp.sqrt(B * cM / (A * cR)))
+    xiR = cR / (1.0 + jnp.sqrt(A * cR / (B * cM)))
+    K = (jnp.sqrt(A / cM) + jnp.sqrt(B / cR)) ** 2 / (-E)
+    r_up = K * H_up
+    r_low = K * H_low
+    p = m / K
+    return Scenario(
+        A=A, B=B, E=E, cM=cM, cR=cR, H_up=H_up, H_low=H_low, m=m,
+        rho_up=rho_up, R=jnp.asarray(R, A.dtype),
+        rho_bar=jnp.asarray(rho_bar, A.dtype),
+        psi_low=psi_low, psi_up=psi_up, alpha=alpha, beta=beta,
+        xiM=xiM, xiR=xiR, K=K, r_up=r_up, r_low=r_low, p=p,
+        rho_hat=jnp.max(rho_up),
+    )
+
+
+@_register
+@dataclass
+class Solution:
+    """A (possibly fractional) solution of the allocation problem."""
+    r: jnp.ndarray       # chips per class
+    psi: jnp.ndarray     # 1 / concurrency
+    sM: jnp.ndarray      # map slots
+    sR: jnp.ndarray      # reduce slots
+    cost: jnp.ndarray    # rho_bar * sum(r)
+    penalty: jnp.ndarray # sum(alpha * psi - beta)
+    total: jnp.ndarray   # cost + penalty   (objective P2a)
+    feasible: jnp.ndarray
+    iters: jnp.ndarray   # solver iterations (0 for closed-form)
+    aux: jnp.ndarray     # method-specific: KKT multiplier a / final price rho
+
+    @property
+    def h(self) -> jnp.ndarray:
+        return 1.0 / self.psi
+
+
+def objective(scn: Scenario, r, psi) -> jnp.ndarray:
+    """Paper objective (P2a) = running cost + rejection penalties."""
+    return scn.rho_bar * jnp.sum(r) + jnp.sum(scn.alpha * psi - scn.beta)
+
+
+def deadline_lhs(scn: Scenario, psi, sM, sR) -> jnp.ndarray:
+    """LHS of (P2d): A/(sM psi) + B/(sR psi) + E  (<= 0 when deadline met)."""
+    return scn.A / (sM * psi) + scn.B / (sR * psi) + scn.E

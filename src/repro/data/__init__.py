@@ -1,0 +1,3 @@
+from repro.data.pipeline import MemmapTokens, SyntheticLM, make_source
+
+__all__ = ["MemmapTokens", "SyntheticLM", "make_source"]

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the perf-critical hot spots:
+#   flash_attention/ - blocked GQA flash attention (prefill/train)
+#   rwkv6/           - chunked WKV6 linear-attention scan
+#   gnep_sweep/      - the paper's RM candidate-price sweep (P5 inner loop)
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper) and
+# ref.py (pure-jnp oracle); validated on CPU with interpret=True.

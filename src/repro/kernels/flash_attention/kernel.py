@@ -1,0 +1,120 @@
+"""Blocked GQA flash attention (forward) as a Pallas TPU kernel.
+
+Grid: (B, Hq, Sq/BQ, Skv/BK) — the last axis is sequential ("arbitrary");
+online-softmax running stats (m, l, acc) live in VMEM scratch and are
+finalized on the last kv step.  Block shapes keep the (BQ x hd) / (BK x hd)
+tiles MXU-aligned (hd is 64/128 in every assigned config; BQ/BK default 128
+-> ~(128,128) matmuls on the MXU, VMEM footprint ~4 tiles + scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional under interpret=True
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, causal, n_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=False):
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    n_q, n_k = Sq // block_q, Skv // block_k
+
+    # (B, H, S, hd) layout inside the kernel
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5, block_q=block_q,
+                               block_k=block_k, causal=causal, n_k=n_k)
+    grid = (B, Hq, n_q, n_k)
+    scratch = ([_VMEM((block_q,), jnp.float32),
+                _VMEM((block_q,), jnp.float32),
+                _VMEM((block_q, hd), jnp.float32)] if _VMEM is not None else
+               [pl.ANY] * 3)
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary"))
+        except Exception:
+            pass
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

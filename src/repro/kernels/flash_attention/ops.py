@@ -1,0 +1,17 @@
+"""Jit'd public wrapper: Pallas on TPU, interpret-mode kernel or jnp oracle
+elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import reference
+
+
+def attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+              force_pallas=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=not on_tpu)
+    return reference(q, k, v, causal=causal)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash-attention kernel (O(S^2) memory)."""
+import jax.numpy as jnp
+
+from repro.models.attention import reference as _model_reference
+
+
+def reference(q, k, v, *, causal=True):
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    return _model_reference(q, k, v, causal=causal)

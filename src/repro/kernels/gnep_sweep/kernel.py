@@ -1,0 +1,106 @@
+"""The paper's hot spot, tiled: the RM (P5) candidate-price sweep.
+
+At N classes the exact RM solve is an O(N^2) masked running-sum: for each of
+~N candidate prices, a greedy knapsack fill in fixed p-order.  This kernel
+tiles it (BC candidates x BN classes per step); the running per-candidate
+cumulative fill is VMEM scratch carried across the sequential class axis, so
+each (BC, BN) tile does a cumsum + clip on the VPU with one pass over HBM.
+
+Grid: (Nc/BC, N/BN) with the class axis sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(inc_ref, spare_ref, p_ref, fill_ref, sumf_ref, pf_ref,
+            cum_scr, sacc_scr, pacc_scr, *, n_blocks):
+    ji = pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        cum_scr[...] = jnp.zeros_like(cum_scr)
+        sacc_scr[...] = jnp.zeros_like(sacc_scr)
+        pacc_scr[...] = jnp.zeros_like(pacc_scr)
+
+    inc = inc_ref[...].astype(jnp.float32)            # (BC, BN)
+    spare = spare_ref[0, 0]
+    pv = p_ref[...].astype(jnp.float32)               # (BN,)
+
+    cum_in = cum_scr[...]                             # (BC,)
+    local_cum = jnp.cumsum(inc, axis=1)
+    before = cum_in[:, None] + local_cum - inc        # filled before each cls
+    fill = jnp.clip(spare - before, 0.0, inc)
+    fill_ref[...] = fill.astype(fill_ref.dtype)
+
+    cum_scr[...] = cum_in + local_cum[:, -1]
+    sacc_scr[...] = sacc_scr[...] + jnp.sum(fill, axis=1)
+    pacc_scr[...] = pacc_scr[...] + fill @ pv
+
+    @pl.when(ji == n_blocks - 1)
+    def _final():
+        sumf_ref[...] = sacc_scr[...].astype(sumf_ref.dtype)
+        pf_ref[...] = pacc_scr[...].astype(pf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n",
+                                             "interpret"))
+def rm_sweep(inc, spare, p_sorted, *, block_c=128, block_n=512,
+             interpret=False):
+    """inc: (Nc, N) f32; spare: scalar; p_sorted: (N,).
+    Returns (fill (Nc, N), sum_fill (Nc,), p_fill (Nc,))."""
+    Nc, N = inc.shape
+    block_c = min(block_c, Nc)
+    block_n = min(block_n, N)
+    # pad to tile multiples (padding classes have inc=0 -> no effect)
+    pc = (-Nc) % block_c
+    pn = (-N) % block_n
+    inc_p = jnp.pad(inc, ((0, pc), (0, pn)))
+    p_p = jnp.pad(p_sorted, (0, pn))
+    Ncp, Np = Nc + pc, N + pn
+    n_blocks = Np // block_n
+    spare_arr = jnp.asarray(spare, jnp.float32).reshape(1, 1)
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary"))
+        except Exception:
+            pass
+    scratch = ([_VMEM((block_c,), jnp.float32)] * 3 if _VMEM is not None
+               else [pl.ANY] * 3)
+    fill, sumf, pf = pl.pallas_call(
+        functools.partial(_kernel, n_blocks=n_blocks),
+        grid=(Ncp // block_c, n_blocks),
+        in_specs=[
+            pl.BlockSpec((block_c, block_n), lambda ci, ji: (ci, ji)),
+            pl.BlockSpec((1, 1), lambda ci, ji: (0, 0)),
+            pl.BlockSpec((block_n,), lambda ci, ji: (ji,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c, block_n), lambda ci, ji: (ci, ji)),
+            pl.BlockSpec((block_c,), lambda ci, ji: (ci,)),
+            pl.BlockSpec((block_c,), lambda ci, ji: (ci,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Ncp, Np), inc.dtype),
+            jax.ShapeDtypeStruct((Ncp,), jnp.float32),
+            jax.ShapeDtypeStruct((Ncp,), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(inc_p, spare_arr, p_p)
+    return fill[:Nc, :N], sumf[:Nc], pf[:Nc]

@@ -1,0 +1,23 @@
+"""Jit'd wrapper + plug-in for repro.core.game.rm_solve(sweep_fn=...)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gnep_sweep.kernel import rm_sweep
+from repro.kernels.gnep_sweep.ref import reference
+
+
+def sweep(inc, spare, p_sorted, *, force_pallas=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return rm_sweep(inc.astype(jnp.float32), spare,
+                        p_sorted.astype(jnp.float32),
+                        interpret=not on_tpu)
+    return reference(inc, spare, p_sorted)
+
+
+def make_sweep_fn(force_pallas=False):
+    def fn(inc, spare, p_sorted):
+        return sweep(inc, spare, p_sorted, force_pallas=force_pallas)
+    return fn

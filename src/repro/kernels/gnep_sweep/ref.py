@@ -1,0 +1,16 @@
+"""Oracle for the GNEP RM candidate-price sweep (paper problem P5 inner loop).
+
+Given ``inc`` (Nc candidate prices x N classes, already permuted into
+p-descending greedy order) and the slack capacity ``spare``, compute for each
+candidate row the greedy knapsack fill, its total, and its p-weighted total.
+"""
+import jax.numpy as jnp
+
+
+def reference(inc, spare, p_sorted):
+    """inc: (Nc, N); spare: scalar; p_sorted: (N,).
+
+    Returns (fill (Nc,N), sum_fill (Nc,), p_fill (Nc,))."""
+    cum = jnp.cumsum(inc, axis=1)
+    fill = jnp.clip(spare - (cum - inc), 0.0, inc)
+    return fill, jnp.sum(fill, axis=1), fill @ p_sorted

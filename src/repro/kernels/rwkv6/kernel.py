@@ -1,0 +1,120 @@
+"""Chunked RWKV6 WKV as a Pallas TPU kernel.
+
+Grid: (B, H, T/L) — the chunk axis is sequential; the (K x V) state lives in
+VMEM scratch and is carried across chunks.  Within a chunk the recurrence is
+evaluated in the matmul ("chunked linear attention") form so the MXU does the
+work: one (L x L) intra-chunk attention matmul + two (L x K)@(K x V) matmuls
+per chunk, with log-space cumulative decays clamped at +-30 (DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+CLAMP = 30.0
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scr, *,
+            chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)            # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)            # (L, V)
+    w = w_ref[0, 0].astype(jnp.float32)            # (L, K) log decay <= 0
+    u = u_ref[0].astype(jnp.float32)               # (K,)
+    S = s_scr[...]                                 # (K, V)
+
+    LW = jnp.cumsum(w, axis=0)
+    LWp = LW - w                                   # LW_{t-1}
+    Z = LW[chunk // 2][None, :]
+    Q = r * jnp.exp(jnp.clip(LWp - Z, -CLAMP, CLAMP))
+    Kf = k * jnp.exp(jnp.clip(Z - LW, -CLAMP, CLAMP))
+    A = jax.lax.dot_general(Q, Kf, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(mi < li, A, 0.0)                 # strictly lower triangular
+    diag = jnp.sum(r * u[None, :] * k, axis=1)     # (L,)
+    inter = jax.lax.dot_general(r * jnp.exp(LWp), S,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = (jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + diag[:, None] * v + inter)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    LW_end = LW[-1]                                # (K,)
+    K2 = k * jnp.exp(LW_end[None, :] - LW)         # exponent <= 0
+    s_scr[...] = (jnp.exp(LW_end)[:, None] * S
+                  + jax.lax.dot_general(K2, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        s_out_ref[0, 0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w_log, u, *, chunk=64, interpret=False):
+    """r/k/v/w_log: (B,T,H,K); u: (H,K) -> (y (B,T,H,V), S (B,H,K,V)).
+
+    Zero initial state (prefill/train form; the decode step is a single
+    jnp expression and needs no kernel).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0
+    n = T // chunk
+
+    def to_bhtk(x):
+        return jnp.swapaxes(x, 1, 2)               # (B,H,T,K)
+
+    args = [to_bhtk(x) for x in (r, k, v, w_log)]
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n)
+    scratch = ([_VMEM((K, V), jnp.float32)] if _VMEM is not None
+               else [pl.ANY])
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+        except Exception:
+            pass
+    y, S = pl.pallas_call(
+        kernel,
+        grid=(B, H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(*args, u)
+    return jnp.swapaxes(y, 1, 2), S

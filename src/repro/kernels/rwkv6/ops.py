@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6
+from repro.kernels.rwkv6.ref import reference
+
+
+def wkv(r, k, v, w_log, u, *, chunk=64, force_pallas=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return wkv6(r, k, v, w_log, u, chunk=chunk, interpret=not on_tpu)
+    B, H = r.shape[0], r.shape[2]
+    K, V = r.shape[3], v.shape[3]
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    return reference(r, k, v, w_log, u, S0)

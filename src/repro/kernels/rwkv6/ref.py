@@ -1,0 +1,7 @@
+"""Oracle for the WKV6 kernel: exact per-step recurrence."""
+from repro.models.rwkv import wkv_recurrent
+
+
+def reference(r, k, v, w_log, u, S0):
+    """r/k/v/w_log: (B,T,H,K); u: (H,K); S0: (B,H,K,V) -> (y, S_final)."""
+    return wkv_recurrent(r, k, v, w_log, u, S0)

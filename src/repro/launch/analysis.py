@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled artifacts.
+
+Terms per (arch x shape x mesh), per device (cost_analysis is reported
+post-partitioning per device — verified empirically):
+
+    compute term    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory term     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective term = wire_bytes / link_bw            (~50 GB/s/link ICI)
+
+**Scan correction** (DESIGN.md): XLA cost analysis counts a while-loop body
+exactly once, so scanned-layer stacks undercount by the trip count.  The
+dry-run additionally lowers each scan body standalone (with identical
+shardings, chunk loops unrolled) and adds ``(trips - 1) x body_cost``.
+
+Collective wire bytes use a ring model on the parsed HLO:
+    all-reduce:          2 (n-1)/n * result
+    all-gather:            (n-1)/n * result          (result = gathered full)
+    reduce-scatter:        (n-1)   * result          (result = shard)
+    all-to-all:            (n-1)/n * result
+    collective-permute:               result
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+# ---- TPU v5e hardware model (assignment constants) -------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (effective, one link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o):
+        by = dict(self.coll_by_op)
+        for k, v in o.coll_by_op.items():
+            by[k] = by.get(k, 0.0) + v
+        return CostSummary(self.flops + o.flops,
+                           self.bytes_accessed + o.bytes_accessed,
+                           self.coll_bytes + o.coll_bytes, by)
+
+    def scaled(self, k: float):
+        return CostSummary(self.flops * k, self.bytes_accessed * k,
+                           self.coll_bytes * k,
+                           {a: b * k for a, b in self.coll_by_op.items()})
+
+
+def collective_wire_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    total, by_op = 0.0, {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line:
+            continue
+        dtype, dims, op = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g2 = _GROUPS_BRACE_RE.search(line)
+            if g2:
+                n = len(g2.group(1).split(","))
+        if op == "collective-permute":
+            # participation is via source_target_pairs, not replica_groups
+            total += float(nbytes)
+            by_op[op] = by_op.get(op, 0.0) + float(nbytes)
+            continue
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif op in ("all-gather", "all-to-all"):
+            wire = (n - 1) / n * nbytes
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * nbytes
+        else:   # collective-permute
+            wire = float(nbytes)
+        total += wire
+        by_op[op] = by_op.get(op, 0.0) + wire
+    return total, by_op
+
+
+def analyze_compiled(compiled) -> CostSummary:
+    ca = compiled.cost_analysis()
+    coll, by_op = collective_wire_bytes(compiled.as_text())
+    return CostSummary(flops=float(ca.get("flops", 0.0)),
+                       bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                       coll_bytes=coll, coll_by_op=by_op)
+
+
+@dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the bound spent on useful math = how close to the
+        compute roofline this cell can get (1.0 = perfectly compute-bound)."""
+        return self.t_compute / max(self.t_bound, 1e-30)
+
+
+def roofline(cost: CostSummary) -> Roofline:
+    return Roofline(t_compute=cost.flops / PEAK_FLOPS,
+                    t_memory=cost.bytes_accessed / HBM_BW,
+                    t_collective=cost.coll_bytes / LINK_BW)
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {"argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+            "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes
+                        - ma.alias_size_in_bytes) / 1e9}
+
+
+def model_flops(cfg, shape, n_params: int, active_params: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (N = active)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active_params * tokens

@@ -1,0 +1,157 @@
+"""Standalone scan-body lowering for the roofline scan-correction.
+
+XLA cost analysis counts while-loop bodies once (DESIGN.md), so the dry-run
+lowers each layer-stack scan body separately — with identical shardings and
+all chunk loops unrolled — and adds ``(trips - 1) x body_cost`` to the
+full-step cost.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import param_specs
+from repro.models import transformer as T
+from repro.models.sharding import Distribution
+
+
+def _strip_lead(spec: P) -> P:
+    return P(*tuple(spec)[1:])
+
+
+def _block_slice(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+
+
+def _ns(dist, tree_of_specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(dist.mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def scan_bodies(cfg, dist: Distribution, shape, params_sds,
+                cache_sds=None) -> List[Dict[str, Any]]:
+    """Returns [{name, trips, lower() -> jax.stages.Lowered}] per scan group."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train" and cfg.grad_accum > 1:
+        B = B // cfg.grad_accum          # bodies run at microbatch size
+    if shape.kind != "decode" and S > 8192 and not cfg.attn_triangle:
+        # cost-only lowering: larger attention chunks = identical FLOPs,
+        # far fewer unrolled blocks (compile time)
+        cfg = cfg.replace(attn_q_chunk=S // 8, attn_kv_chunk=S // 8)
+    adt = cfg.adtype
+    dp = dist.dp_axes
+    h_sds = jax.ShapeDtypeStruct((B, 1 if shape.kind == "decode" else S,
+                                  cfg.d_model), adt)
+    h_sh = NamedSharding(dist.mesh, P(dp, None, None))
+    pspecs_full = param_specs(cfg, params_sds, dist)
+
+    out = []
+
+    def mk_ctx(positions, cache_pos=None, causal=True, mrope=None):
+        return {"dist": dist, "loops": "unroll", "collect": False,
+                "causal": causal, "positions": positions,
+                "cache_pos": cache_pos, "mrope_positions": mrope}
+
+    def add_group(name, blocks_key, block_kinds, trips, cross=False):
+        bp_sds = _block_slice(params_sds[blocks_key])
+        bp_spec = jax.tree_util.tree_map(_strip_lead,
+                                         pspecs_full[blocks_key],
+                                         is_leaf=lambda x: isinstance(x, P))
+        bp_sh = _ns(dist, bp_spec)
+        mrope_sds = None
+        if cfg.mrope_sections and shape.kind != "decode":
+            mrope_sds = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        enc_sds = (jax.ShapeDtypeStruct((B, S, cfg.d_model), adt)
+                   if cross else None)
+
+        def fwd(bp, h, mrope=None, enc=None, bc=None, pos=None):
+            positions = (jnp.arange(h.shape[1])[None, :] if pos is None
+                         else jnp.full((1, 1), pos))
+            ctx = mk_ctx(positions, cache_pos=pos,
+                         causal=(blocks_key != "enc_blocks"), mrope=mrope)
+            if enc is not None:
+                ctx["cross_kv"] = T._cross_kv(cfg, bp["l0"]["cross"], enc)
+            ncache = {}
+            for p_ix in range(len(block_kinds)):
+                h, _, c = T._apply_layer(
+                    cfg, bp[f"l{p_ix}"], h, block_kinds[p_ix], ctx,
+                    cache=None if bc is None else bc[f"l{p_ix}"])
+                ncache[f"l{p_ix}"] = c
+            return h, ncache
+
+        mrope_sh = NamedSharding(dist.mesh, P(None, dp, None))
+        if shape.kind == "train":
+            def grad_of(f, bp, h, dy):
+                f = T._remat_wrap(cfg, f)
+                y, vjp = jax.vjp(f, bp, h)
+                return (y,) + vjp(dy)
+            if mrope_sds is not None:
+                def body(bp, h, dy, mrope):
+                    return grad_of(lambda bp, h: fwd(bp, h, mrope=mrope)[0],
+                                   bp, h, dy)
+                args, shards = ([bp_sds, h_sds, h_sds, mrope_sds],
+                                [bp_sh, h_sh, h_sh, mrope_sh])
+            elif enc_sds is not None:
+                def body(bp, h, dy, enc):
+                    return grad_of(lambda bp, h: fwd(bp, h, enc=enc)[0],
+                                   bp, h, dy)
+                args, shards = ([bp_sds, h_sds, h_sds, enc_sds],
+                                [bp_sh, h_sh, h_sh, h_sh])
+            else:
+                def body(bp, h, dy):
+                    return grad_of(lambda bp, h: fwd(bp, h)[0], bp, h, dy)
+                args, shards = [bp_sds, h_sds, h_sds], [bp_sh, h_sh, h_sh]
+        elif shape.kind == "prefill":
+            if mrope_sds is not None:
+                def body(bp, h, mrope):
+                    return fwd(bp, h, mrope=mrope)
+                args, shards = ([bp_sds, h_sds, mrope_sds],
+                                [bp_sh, h_sh, mrope_sh])
+            elif enc_sds is not None:
+                def body(bp, h, enc):
+                    return fwd(bp, h, enc=enc)
+                args, shards = [bp_sds, h_sds, enc_sds], [bp_sh, h_sh, h_sh]
+            else:
+                def body(bp, h):
+                    return fwd(bp, h)
+                args, shards = [bp_sds, h_sds], [bp_sh, h_sh]
+        else:  # decode
+            from repro.launch.steps import cache_specs
+            bc_sds = _block_slice(cache_sds["blocks"])
+            bc_sh = jax.tree_util.tree_map(
+                lambda ns: NamedSharding(dist.mesh, _strip_lead(ns.spec)),
+                cache_specs(cfg, cache_sds, dist)["blocks"])
+
+            def body(bp, bc, h, pos):
+                return fwd(bp, h, bc=bc, pos=pos)
+            args = [bp_sds, bc_sds, h_sds,
+                    jax.ShapeDtypeStruct((), jnp.int32)]
+            shards = [bp_sh, bc_sh, h_sh, NamedSharding(dist.mesh, P())]
+
+        def lower(body=body, args=args, shards=shards):
+            from repro.launch.steps import sanitize
+            shards = [sanitize(s, a, dist.mesh)
+                      for s, a in zip(shards, args)]
+            return jax.jit(body, in_shardings=tuple(shards)).lower(*args)
+
+        out.append({"name": name, "trips": trips, "lower": lower})
+
+    kinds = cfg.layer_kinds()
+    if cfg.is_encdec:
+        if shape.kind != "decode":
+            add_group("enc_block", "enc_blocks", [("attn", "dense")],
+                      cfg.encoder_layers)
+        add_group("dec_block", "dec_blocks", [("attn", "dense")],
+                  cfg.n_layers, cross=(shape.kind != "decode"))
+    else:
+        first = cfg.moe.first_k_dense if cfg.moe else 0
+        bl = cfg.block_len
+        add_group("block", "blocks", kinds[first:first + bl],
+                  (cfg.n_layers - first) // bl)
+    return out

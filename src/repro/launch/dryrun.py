@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes (16x16 single-pod and 2x16x16 multi-pod), print
+# memory_analysis / cost_analysis, and emit roofline terms (with the scan
+# correction) to JSON for EXPERIMENTS.md.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+#
+# NOTE: the os.environ lines above MUST stay the first statements — jax locks
+# the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.configs.specs import cell_is_live, input_specs
+from repro.launch import analysis as an
+from repro.launch.bodies import scan_bodies
+from repro.launch.mesh import dist_for, make_production_mesh
+from repro.launch.steps import (jit_decode_step, jit_prefill_step,
+                                jit_train_step)
+from repro.models import init_params
+from repro.models.config import ALL_SHAPES, SHAPES_BY_NAME
+from repro.optim import OptConfig, adamw_init
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# optimizer state tier per arch (what makes the big ones fit — DESIGN.md 5)
+OPT_TIER = {"kimi-k2-1t-a32b": "int8", "jamba-v0.1-52b": "bf16",
+            "qwen3-32b": "bf16", "deepseek-moe-16b": "bf16"}
+
+
+def count_params(params_sds):
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params_sds))
+
+
+def active_params(cfg, total):
+    if cfg.moe is None:
+        return total
+    n_moe = sum(1 for _, f in cfg.layer_kinds() if f == "moe")
+    per_layer_routed = cfg.moe.n_experts * 3 * cfg.d_model * cfg.moe.d_ff_expert
+    used = cfg.moe.top_k * 3 * cfg.d_model * cfg.moe.d_ff_expert
+    return total - n_moe * (per_layer_routed - used)
+
+
+def lower_cell(arch_id, shape_name, *, multi_pod=False, body_correction=True,
+               cfg_override=None, verbose=True):
+    """Lower + compile one cell; returns the result record (dict)."""
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = cfg_override or get_config(arch_id)
+    live, why = cell_is_live(cfg, shape)
+    if not live:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    if shape_name == "long_500k":
+        cfg = cfg.replace(kv_cache_seq_shard=True)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    fsdp = cfg.fsdp
+    if cfg_override is None and shape.kind != "train":
+        # serving policy (EXPERIMENTS §Perf P3): TP-only weights when they
+        # fit replicated over 'data' — FSDP gathers per decoded token are
+        # pure waste.  Sharding strategy is per shape-kind, not per arch.
+        tp = mesh.shape.get("model", 1)
+        fsdp = count_params(params) * 2 / tp > 8e9
+    dist = dist_for(mesh, fsdp=fsdp)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        oc = OptConfig(state_dtype=OPT_TIER.get(arch_id, "f32"))
+        opt = jax.eval_shape(partial(adamw_init, oc=oc), params)
+        step = jit_train_step(cfg, dist, oc, params, opt, specs["batch"])
+        lowered = step.lower(params, opt, specs["batch"])
+    elif shape.kind == "prefill":
+        step = jit_prefill_step(cfg, dist, params, specs["batch"])
+        lowered = step.lower(params, specs["batch"])
+    else:
+        step = jit_decode_step(cfg, dist, params, specs["cache"])
+        lowered = step.lower(params, specs["cache"], specs["token"],
+                             specs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = an.memory_summary(compiled)
+    full_cost = an.analyze_compiled(compiled)
+    if verbose:
+        print(f"  memory_analysis: {compiled.memory_analysis()}")
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.4g} "
+              f"bytes={ca.get('bytes accessed', 0):.4g}")
+
+    # ---- roofline cost assembly -------------------------------------------
+    # train: cost = M x (microbatch grad step, scan-corrected) + optimizer
+    #        (the full compile's microbatch scan is counted once by XLA).
+    # other: cost = full + (trips - 1) x scan body.
+    M = cfg.grad_accum if shape.kind == "train" else 1
+    body_records = []
+    if shape.kind == "train":
+        from repro.launch.steps import (jit_grad_step_micro, jit_opt_step)
+        gcomp = jit_grad_step_micro(cfg, dist, params, specs["batch"],
+                                    M).compile()
+        ocomp = jit_opt_step(cfg, dist, oc, params, opt).compile()
+        micro = an.analyze_compiled(gcomp)
+        optc = an.analyze_compiled(ocomp)
+        corrected = micro.scaled(M) + optc
+        body_records.append({"name": "opt", "trips": 1,
+                             "flops": optc.flops, "bytes": optc.bytes_accessed,
+                             "coll_bytes": optc.coll_bytes})
+    else:
+        corrected = full_cost
+    if body_correction:
+        for grp in scan_bodies(cfg, dist, shape, params,
+                               cache_sds=specs.get("cache")):
+            bcomp = grp["lower"]().compile()
+            bcost = an.analyze_compiled(bcomp)
+            corrected = corrected + bcost.scaled(M * (grp["trips"] - 1))
+            body_records.append({"name": grp["name"], "trips": grp["trips"],
+                                 "microbatches": M,
+                                 "flops": bcost.flops,
+                                 "bytes": bcost.bytes_accessed,
+                                 "coll_bytes": bcost.coll_bytes})
+
+    rf = an.roofline(corrected)
+    total = count_params(params)
+    act = active_params(cfg, total)
+    mf = an.model_flops(cfg, shape, total, act)
+    chips = int(np.prod(mesh.devices.shape))
+    hlo_global_flops = corrected.flops * chips
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "status": "ok", "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "per_device": {"flops": corrected.flops,
+                       "bytes": corrected.bytes_accessed,
+                       "coll_bytes": corrected.coll_bytes,
+                       "coll_by_op": corrected.coll_by_op,
+                       "raw_flops_uncorrected": full_cost.flops},
+        "bodies": body_records,
+        "roofline": {"t_compute": rf.t_compute, "t_memory": rf.t_memory,
+                     "t_collective": rf.t_collective,
+                     "bottleneck": rf.bottleneck,
+                     "compute_fraction": rf.compute_fraction},
+        "params_total": total, "params_active": act,
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_global_flops, 1.0),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-body", action="store_true",
+                    help="skip the scan-correction body compiles")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for aid in ARCHS:
+            for s in ALL_SHAPES:
+                cells.append((aid, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for aid, sname in cells:
+        tag = f"{aid}:{sname}:{'2x16x16' if args.multi_pod else '16x16'}"
+        print(f"[dryrun] {tag}")
+        try:
+            rec = lower_cell(aid, sname, multi_pod=args.multi_pod,
+                             body_correction=not args.no_body)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": aid, "shape": sname, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        fn = out_dir / f"{aid}__{sname}__{'multi' if args.multi_pod else 'single'}.json"
+        fn.write_text(json.dumps(rec, indent=1))
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  -> ok: bottleneck={r['bottleneck']} "
+                  f"t=(c {r['t_compute']:.4f}, m {r['t_memory']:.4f}, "
+                  f"coll {r['t_collective']:.4f})s "
+                  f"useful={rec['useful_ratio']:.2f} "
+                  f"peak_mem={rec['memory'].get('peak_gb', -1):.1f}GB "
+                  f"compile={rec['compile_s']}s")
+        elif rec["status"] == "skipped":
+            print(f"  -> skipped: {rec['reason']}")
+    print(f"[dryrun] done, {failures} failures / {len(cells)} cells")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production meshes.  A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, cluster-sim sub-meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dist_for(mesh, *, fsdp: bool):
+    from repro.models.sharding import Distribution
+    axes = mesh.axis_names
+    dp_axes = tuple(a for a in axes if a != "model")
+    tp = "model" if "model" in axes else None
+    return Distribution(mesh=mesh, dp_axes=dp_axes, tp_axis=tp, fsdp=fsdp)

@@ -1,0 +1,292 @@
+"""Jitted step functions + their sharding specs for every cell kind."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn, param_specs, prefill)
+from repro.models.sharding import Distribution
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------
+# sharding specs
+# --------------------------------------------------------------------------
+
+def _ns(dist, spec):
+    return NamedSharding(dist.mesh, spec)
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize(shardings, tree, mesh):
+    """jit in_shardings require exact divisibility: drop spec axes that do
+    not divide the corresponding dim (e.g. odd vocab 122753 on 16-way TP,
+    int8 optimizer scale tails).  The dropped dims are replicated — the
+    padding waste is reported per-cell in the roofline notes."""
+    def one(sh, x):
+        spec = tuple(sh.spec)
+        spec = spec + (None,) * (x.ndim - len(spec))
+        new = tuple(e if x.shape[i] % _axis_size(mesh, e) == 0 else None
+                    for i, e in enumerate(spec))
+        return NamedSharding(mesh, P(*new))
+    return jax.tree_util.tree_map(one, shardings, tree)
+
+
+def _div(n, dist):
+    ts = dist.tp_size()
+    return dist.tp if (ts > 1 and n % ts == 0) else None
+
+
+def batch_specs(cfg, batch_tree, dist: Distribution):
+    dp = dist.dp_axes
+
+    def one(path, x):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = keys[-1]
+        if name == "mrope_positions":
+            return _ns(dist, P(None, dp, None))
+        if x.ndim >= 3:                      # embeds / enc_embeds
+            return _ns(dist, P(dp, None, None))
+        return _ns(dist, P(dp, None))        # tokens / targets
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, dist: Distribution):
+    """KV caches: batch on dp + kv-heads on tp (when divisible); with
+    cfg.kv_cache_seq_shard the sequence dim is sharded over the whole mesh
+    instead (context-parallel decode — required for long_500k)."""
+    dp = dist.dp_axes
+
+    def one(path, x):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        leaf, parent = keys[-1], keys[-2] if len(keys) > 1 else ""
+        stacked = keys[0] == "blocks"
+        lead = (None,) if stacked else ()
+        if parent in ("attn", "cross") or leaf in ("ck", "cv"):
+            # (B, S, kv, hd)
+            if cfg.kv_cache_seq_shard:
+                all_axes = tuple(dp) + ((dist.tp,) if dist.tp else ())
+                return _ns(dist, P(*lead, None, all_axes, None, None))
+            kv_ax = _div(cfg.n_kv, dist)
+            if kv_ax is None and dist.tp is not None:
+                # kv heads don't divide TP: shard the sequence over 'model'
+                # instead of replicating the cache (context-parallel decode)
+                return _ns(dist, P(*lead, dp, dist.tp, None, None))
+            return _ns(dist, P(*lead, dp, None, kv_ax, None))
+        if leaf == "S":                        # rwkv state (B,H,k,v)
+            H = cfg.d_model // cfg.rwkv_head_dim
+            return _ns(dist, P(*lead, dp, _div(H, dist), None, None))
+        if leaf == "h" and parent == "mamba":  # (B, d_in, N)
+            return _ns(dist, P(*lead, dp, _div(cfg.mamba.expand *
+                                               cfg.d_model, dist), None))
+        if leaf == "conv":                     # (B, dc-1, d_in)
+            return _ns(dist, P(*lead, dp, None,
+                               _div(cfg.mamba.expand * cfg.d_model, dist)))
+        if leaf in ("shift", "cshift"):        # (B, d)
+            return _ns(dist, P(*lead, dp, None))
+        return _ns(dist, P(*([None] * x.ndim)))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_specs(pspecs, oc: OptConfig, dist: Distribution):
+    def one(s):
+        if oc.state_dtype == "f32":
+            return {"m": s, "v": s, "master": s}
+        if oc.state_dtype == "bf16":
+            return {"m": s, "v": s}
+        return {"m": {"q": s, "scale": s}, "v": {"q": s, "scale": s}}
+    mu = jax.tree_util.tree_map(one, pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+    return {"mu": mu, "step": P()}
+
+
+def param_shardings(cfg, params_tree, dist: Distribution):
+    specs = param_specs(cfg, params_tree, dist)
+    return jax.tree_util.tree_map(lambda s: _ns(dist, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def _stack_micro(batch, n):
+    """Reshape every batch leaf (B, ...) -> (n, B/n, ...) for the microbatch
+    scan (mrope_positions carries batch on axis 1)."""
+    def one(path, x):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if keys[-1] == "mrope_positions":
+            r = x.reshape(x.shape[0], n, x.shape[1] // n, *x.shape[2:])
+            return jnp.moveaxis(r, 1, 0)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def make_grad_step(cfg, dist: Distribution, *, loops: str = "scan"):
+    """fwd+bwd of one microbatch (no optimizer) — also lowered standalone by
+    the dry-run for roofline cost assembly."""
+    def step(params, mb):
+        def lf(p):
+            return loss_fn(cfg, p, mb, dist, loops=loops)
+        (loss, metrics), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return g, loss, metrics
+    return step
+
+
+def make_opt_step(cfg, oc: OptConfig):
+    def step(params, opt_state, grads):
+        return adamw_update(params, grads, opt_state, oc)
+    return step
+
+
+def make_train_step(cfg, dist: Distribution, oc: OptConfig, *,
+                    loops: str = "scan"):
+    """One optimizer step = cfg.grad_accum microbatches via lax.scan (bounds
+    activation memory to one microbatch by construction), f32 grad
+    accumulation, then AdamW.  Roofline costs are assembled by the dry-run as
+    M x grad_step + opt_step (the scan body is counted once by XLA cost
+    analysis — DESIGN.md)."""
+    M = max(1, cfg.grad_accum)
+    gstep = make_grad_step(cfg, dist, loops=loops)
+    ostep = make_opt_step(cfg, oc)
+
+    def step(params, opt_state, batch):
+        if M == 1:
+            g, loss, metrics = gstep(params, batch)
+            g32 = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), g)
+            params2, opt2, om = ostep(params, opt_state, g32)
+            return params2, opt2, {"loss": loss, **metrics, **om}
+
+        stacked = _stack_micro(batch, M)
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            grads, loss_sum = carry
+            g, loss, _ = gstep(params, mb)
+            grads = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), grads, g)
+            return (grads, loss_sum + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32)), stacked)
+        grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+        params2, opt2, om = ostep(params, opt_state, grads)
+        return params2, opt2, {"loss": loss_sum / M, **om}
+    return step
+
+
+def make_prefill_step(cfg, dist: Distribution, *, loops: str = "scan"):
+    def step(params, batch):
+        return prefill(cfg, params, batch, dist, loops=loops)
+    return step
+
+
+def make_decode_step(cfg, dist: Distribution):
+    def step(params, cache, token, pos):
+        return decode_step(cfg, params, cache, token, pos, dist)
+    return step
+
+
+def jit_train_step(cfg, dist, oc, params_tree, opt_tree, batch_tree, *,
+                   loops="scan", donate=True):
+    pspec = param_specs(cfg, params_tree, dist)
+    psh = jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                 is_leaf=lambda x: isinstance(x, P))
+    osh = jax.tree_util.tree_map(lambda s: _ns(dist, s),
+                                 opt_specs(pspec, oc, dist),
+                                 is_leaf=lambda x: isinstance(x, P))
+    bsh = batch_specs(cfg, batch_tree, dist)
+    psh = sanitize(psh, params_tree, dist.mesh)
+    osh = sanitize(osh, opt_tree, dist.mesh)
+    bsh = sanitize(bsh, batch_tree, dist.mesh)
+    fn = make_train_step(cfg, dist, oc, loops=loops)
+    return jax.jit(fn, in_shardings=(psh, osh, bsh),
+                   donate_argnums=(0, 1) if donate else ())
+
+
+def _micro_batch_sds(batch_tree, M):
+    def one(path, x):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        ax = 1 if keys[-1] == "mrope_positions" else 0
+        shp = list(x.shape)
+        shp[ax] //= M
+        return jax.ShapeDtypeStruct(tuple(shp), x.dtype)
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def jit_grad_step_micro(cfg, dist, params_tree, batch_tree, M, *,
+                        loops="unroll"):
+    """Lowered fwd+bwd of ONE microbatch — the dry-run's train cost unit.
+    Chunk loops unrolled so FLOPs/collectives are counted exactly."""
+    mb = _micro_batch_sds(batch_tree, M)
+    pspec = param_specs(cfg, params_tree, dist)
+    psh = sanitize(jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                   params_tree, dist.mesh)
+    bsh = sanitize(batch_specs(cfg, mb, dist), mb, dist.mesh)
+    fn = make_grad_step(cfg, dist, loops=loops)
+    return jax.jit(fn, in_shardings=(psh, bsh)).lower(params_tree, mb)
+
+
+def jit_opt_step(cfg, dist, oc, params_tree, opt_tree):
+    pspec = param_specs(cfg, params_tree, dist)
+    psh = sanitize(jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                   params_tree, dist.mesh)
+    osh = sanitize(jax.tree_util.tree_map(lambda s: _ns(dist, s),
+                                          opt_specs(pspec, oc, dist),
+                                          is_leaf=lambda x: isinstance(x, P)),
+                   opt_tree, dist.mesh)
+    g32 = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_tree)
+    gsh = sanitize(jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                   g32, dist.mesh)
+    fn = make_opt_step(cfg, oc)
+    return jax.jit(fn, in_shardings=(psh, osh, gsh)).lower(params_tree,
+                                                           opt_tree, g32)
+
+
+def jit_prefill_step(cfg, dist, params_tree, batch_tree, *, loops="scan"):
+    pspec = param_specs(cfg, params_tree, dist)
+    psh = jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                 is_leaf=lambda x: isinstance(x, P))
+    bsh = batch_specs(cfg, batch_tree, dist)
+    psh = sanitize(psh, params_tree, dist.mesh)
+    bsh = sanitize(bsh, batch_tree, dist.mesh)
+    return jax.jit(make_prefill_step(cfg, dist, loops=loops),
+                   in_shardings=(psh, bsh))
+
+
+def jit_decode_step(cfg, dist, params_tree, cache_tree, *, donate=True):
+    pspec = param_specs(cfg, params_tree, dist)
+    psh = jax.tree_util.tree_map(lambda s: _ns(dist, s), pspec,
+                                 is_leaf=lambda x: isinstance(x, P))
+    csh = cache_specs(cfg, cache_tree, dist)
+    psh = sanitize(psh, params_tree, dist.mesh)
+    csh = sanitize(csh, cache_tree, dist.mesh)
+    # token sharding: dp when batch divides, else replicated
+    B = jax.tree_util.tree_leaves(cache_tree)[0].shape[1]
+    dpn = 1
+    for a in dist.dp_axes:
+        dpn *= dist.mesh.shape[a]
+    tsh = _ns(dist, P(dist.dp_axes) if B % dpn == 0 else P(None))
+    possh = _ns(dist, P())
+    return jax.jit(make_decode_step(cfg, dist),
+                   in_shardings=(psh, csh, tsh, possh),
+                   donate_argnums=(1,) if donate else ())

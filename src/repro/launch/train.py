@@ -1,0 +1,121 @@
+"""Training driver: data pipeline -> jitted train step -> checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 200 --global-batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Auto-resumes from the latest checkpoint (fault tolerance: kill it mid-run and
+relaunch).  ``--mesh dp,tp`` uses host devices (XLA_FLAGS) for multi-device
+runs; default is single-device LOCAL.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, reduced_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import dist_for, make_mesh
+from repro.launch.steps import jit_train_step, param_shardings
+from repro.models import init_params
+from repro.models.sharding import LOCAL
+from repro.optim import OptConfig, adamw_init
+
+
+def main(argv=None, cfg_override=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="wsd" if False else "cosine",
+                    choices=["cosine", "wsd", "const"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None, help="dp,tp over host devices")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = cfg_override or (reduced_config(args.arch) if args.reduced
+                           else get_config(args.arch))
+    cfg = cfg.replace(grad_accum=args.grad_accum)
+    if args.arch == "minicpm-2b":
+        args.schedule = "wsd"        # MiniCPM trains with WSD (DESIGN.md)
+
+    if args.mesh:
+        dp, tp = map(int, args.mesh.split(","))
+        mesh = make_mesh((dp, tp), ("data", "model"))
+        dist = dist_for(mesh, fsdp=cfg.fsdp)
+    else:
+        dist = LOCAL
+
+    oc = OptConfig(lr=args.lr, schedule=args.schedule,
+                   total_steps=args.steps, warmup_steps=min(20, args.steps))
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt = adamw_init(params, oc)
+    data = SyntheticLM(cfg.vocab, args.seq, args.global_batch,
+                       seed=args.seed)
+
+    start = 0
+    if args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            shardings = (param_shardings(cfg, params, dist)
+                         if dist.mesh is not None else None)
+            state, _ = ckpt.restore({"params": params, "opt": opt}, last,
+                                    args.ckpt_dir,
+                                    shardings={"params": shardings,
+                                               "opt": None} if shardings
+                                    else None)
+            params, opt = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    batch0 = data(start)
+    batch_sds = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch0)
+    if dist.mesh is not None:
+        opt_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt)
+        params_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        step_fn = jit_train_step(cfg, dist, oc, params_sds, opt_sds,
+                                 batch_sds, donate=True)
+    else:
+        from repro.launch.steps import make_train_step
+        step_fn = jax.jit(make_train_step(cfg, dist, oc),
+                          donate_argnums=(0, 1))
+
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, data(step))
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            print(f"[train] step {step+1} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms/step")
+            t0 = time.time()
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async({"params": params, "opt": opt}, step + 1,
+                            args.ckpt_dir)
+    if args.ckpt_dir:
+        ckpt.wait_pending()
+        ckpt.save({"params": params, "opt": opt}, args.steps, args.ckpt_dir)
+    print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

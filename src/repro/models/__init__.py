@@ -1,0 +1,15 @@
+from repro.models.config import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                 PREFILL_32K, SHAPES_BY_NAME, TRAIN_4K,
+                                 MambaConfig, ModelConfig, MoEConfig,
+                                 ShapeConfig)
+from repro.models.sharding import LOCAL, Distribution, named_shardings, param_specs
+from repro.models.transformer import (decode_step, encode, forward,
+                                      init_cache, init_params, loss_fn,
+                                      prefill)
+
+__all__ = [
+    "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "SHAPES_BY_NAME",
+    "TRAIN_4K", "MambaConfig", "ModelConfig", "MoEConfig", "ShapeConfig",
+    "LOCAL", "Distribution", "named_shardings", "param_specs", "decode_step",
+    "encode", "forward", "init_cache", "init_params", "loss_fn", "prefill",
+]

@@ -1,0 +1,182 @@
+"""Attention: GQA flash-style chunked softmax attention in pure jnp.
+
+Three execution modes (cfg-controlled via ``loops``):
+
+* ``scan``     — lax.scan over kv chunks with running (m, l, acc); O(S*chunk)
+                 memory.  The production runtime path: a 32k-token prefill
+                 never materializes the S x S score matrix.
+* ``unroll``   — identical math with python loops (static HLO).  Used when
+                 lowering layer bodies for roofline cost measurement, because
+                 XLA's cost analysis counts a while-loop body exactly once
+                 (verified; see DESIGN.md) and would undercount scanned FLOPs.
+* ``dense``    — single full-score einsum; same FLOPs as masked ``scan``,
+                 smallest HLO.  Cost-measurement default for non-causal /
+                 baseline-causal cells (never executed at large S).
+
+``triangle=True`` (causal only) skips fully-masked kv blocks: q-chunk i only
+visits kv chunks 0..i.  This halves attention FLOPs exactly — a beyond-paper
+performance lever recorded in EXPERIMENTS.md §Perf.  It implies ``unroll``.
+
+The Pallas flash-attention kernel (repro/kernels/flash_attention) is the TPU
+drop-in for the ``scan`` path; it is validated against `reference` here.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """Pure O(S^2)-memory oracle (also ref.py for the Pallas kernel)."""
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s *= dh ** -0.5
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def _chunk_step(qc, kc, vc, m, l, acc, qpos, kpos, causal, kv_len, scale):
+    """One (q-chunk x kv-chunk) flash update in f32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+    return m_new, l, acc
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+              q_chunk=1024, kv_chunk=1024, loops="scan", triangle=False):
+    """GQA attention.  q: (B,Sq,Hq,dh); k,v: (B,Skv,Hkv,dh) -> (B,Sq,Hq,dh).
+
+    ``kv_len``: scalar (traced ok) valid-length mask for decode caches.
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = dh ** -0.5
+
+    if triangle:
+        assert causal, "triangle blocking is causal-only"
+        loops = "unroll"
+
+    if loops == "dense" or (Sq * Skv <= q_chunk * kv_chunk):
+        return reference(q, k, v, causal=causal, q_offset=q_offset,
+                         kv_len=kv_len)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    if Sq % q_chunk or Skv % kv_chunk:
+        # production shapes are chunk-divisible; odd sizes (tests, tails)
+        # fall back to the dense oracle
+        return reference(q, k, v, causal=causal, q_offset=q_offset,
+                         kv_len=kv_len)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, dh)
+    kr = k.reshape(B, nk, kv_chunk, Hkv, dh)
+    vr = v.reshape(B, nk, kv_chunk, Hkv, dh)
+
+    def one_q_chunk(qi, qc, nk_visit):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, dh), jnp.float32)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            return _chunk_step(qc, kc, vc, m, l, acc, qpos, kpos,
+                               causal, kv_len, scale), None
+
+        if loops == "scan":
+            # flash-style bwd: recompute the block softmax instead of saving
+            # per-step probability matrices as scan residuals
+            (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                          jnp.arange(nk_visit))
+        else:  # unroll
+            m, l, acc = m0, l0, a0
+            for ki in range(nk_visit):
+                (m, l, acc), _ = body((m, l, acc), ki)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, Hkv, G, q_chunk, dh)
+
+    if triangle:
+        outs = [one_q_chunk(qi, qr[:, qi], min(nk, qi * q_chunk // kv_chunk + 1))
+                for qi in range(nq)]
+        out = jnp.stack(outs, axis=3)          # (B,Hkv,G,nq,q_chunk,dh)
+    elif loops == "unroll":
+        outs = [one_q_chunk(qi, qr[:, qi], nk) for qi in range(nq)]
+        out = jnp.stack(outs, axis=3)
+    else:
+        qr_t = jnp.moveaxis(qr, 1, 0)          # (nq,B,q_chunk,Hkv,G,dh)
+
+        def scan_q(_, qi_qc):
+            qi, qc = qi_qc
+            return None, one_q_chunk(qi, qc, nk)
+
+        _, out = jax.lax.scan(scan_q, None, (jnp.arange(nq), qr_t))
+        out = jnp.moveaxis(out, 0, 3)          # (B,Hkv,G,nq,q_chunk,dh)
+
+    out = jnp.moveaxis(out, (1, 2), (3, 4))    # (B,nq,q_chunk,Hkv,G,dh)
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, dist=None,
+                     seq_sharded=False):
+    """Single-token decode: q (B,1,Hq,dh) vs cache (B,Smax,Hkv,dh).
+
+    Dense over the cache (scores are (B,H,Smax): small), masked at kv_len.
+    With ``seq_sharded`` (cache sharded on S over the TP axis), sharding
+    constraints pin the distributed-flash schedule: scores/softmax stay
+    S-sharded (local cache reads; only tiny max/sum/output all-reduces) —
+    without them GSPMD all-gathers the V cache (measured 55 MB/layer on
+    qwen2-vl decode_32k; see EXPERIMENTS.md §Perf).
+    """
+    if not seq_sharded or dist is None or dist.tp is None:
+        return reference(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                   k_cache.astype(jnp.float32)) * dh ** -0.5
+    s = dist.constrain(s, dist.dp_axes, None, None, None, dist.tp)
+    kpos = jnp.arange(Skv)
+    s = jnp.where((kpos < kv_len)[None, None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)          # all-reduce max (tiny)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)          # all-reduce sum (tiny)
+    p = dist.constrain(p / l, dist.dp_axes, None, None, None, dist.tp)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    o = dist.constrain(o.reshape(B, Sq, Hq, dh),
+                       dist.dp_axes, None, None, None)
+    return o.astype(q.dtype)

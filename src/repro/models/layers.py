@@ -1,0 +1,130 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embeddings.
+
+Everything is a pure function over explicit param pytrees.  Matmuls accumulate
+in f32 (`preferred_element_type`) and normalizations run in f32, which is the
+TPU-idiomatic mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dot(x, w):
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"gamma": jnp.zeros((d,), cfg.pdtype)}
+    return {"gamma": jnp.ones((d,), cfg.pdtype),
+            "beta": jnp.zeros((d,), cfg.pdtype)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["gamma"], cfg.rms_eps)
+    return layernorm(x, p["gamma"], p["beta"])
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def _rope_freqs(hd_half, theta, dtype=jnp.float32):
+    return (theta ** (-jnp.arange(0, hd_half, dtype=dtype) / hd_half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd // 2, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    angles = angles[..., None, :]                                   # head axis
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections):
+    """Qwen2-VL multimodal RoPE: the half-dim frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position ids.
+
+    x: (B, S, H, hd); positions3: (3, B, S) int32; sum(sections) == hd // 2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, "mrope sections must cover hd/2"
+    import numpy as np
+    freqs = _rope_freqs(hd // 2, theta)
+    # static band -> position-stream map: band j uses positions3[sec_id[j]]
+    sec_id = np.repeat(np.arange(len(sections)), np.asarray(sections))
+    pos = positions3.astype(jnp.float32)                            # (3,B,S)
+    pos_bands = pos[sec_id]                                         # (hd/2,B,S)
+    angles = jnp.moveaxis(pos_bands, 0, -1) * freqs                 # (B,S,hd/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(cfg, key, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wg": dense_init(k1, d, f, cfg.pdtype),
+                "wu": dense_init(k2, d, f, cfg.pdtype),
+                "wd": dense_init(k3, f, d, cfg.pdtype)}
+    return {"wu": dense_init(k1, d, f, cfg.pdtype),
+            "bu": jnp.zeros((f,), cfg.pdtype),
+            "wd": dense_init(k2, f, d, cfg.pdtype),
+            "bd": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+
+
+def mlp_apply(cfg, p, x):
+    if cfg.act == "swiglu":
+        g = dot(x, p["wg"])
+        u = dot(x, p["wu"])
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+        return dot(h, p["wd"]).astype(x.dtype)
+    h = dot(x, p["wu"]) + p["bu"].astype(jnp.float32)
+    h = jax.nn.gelu(h).astype(x.dtype)
+    return (dot(h, p["wd"]) + p["bd"].astype(jnp.float32)).astype(x.dtype)

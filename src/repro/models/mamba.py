@@ -1,0 +1,126 @@
+"""Mamba (S6) selective-state-space mixer, as used by Jamba (arXiv:2403.19887).
+
+Selective scan:  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t,
+                 y_t = <C_t, h_t> + D * x_t
+with per-channel diagonal A (d_in, N).  The chunked path runs an associative
+scan *within* chunks (log-depth, MXU/VPU-friendly, correctly counted by cost
+analysis) and a lax.scan *across* chunks carrying (h, conv tail).  Jamba's
+dt/B/C RMS-norms are included.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def mamba_init(cfg, key):
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    R = mc.rank(d)
+    N = mc.d_state
+    ks = jax.random.split(key, 6)
+    pd = cfg.pdtype
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (d_in, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * d_in, pd),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_in), jnp.float32)
+                   * (1.0 / mc.d_conv)).astype(pd),
+        "conv_b": jnp.zeros((d_in,), pd),
+        "x_proj": layers.dense_init(ks[2], d_in, R + 2 * N, pd),
+        "dt_w": layers.dense_init(ks[3], R, d_in, pd, scale=R ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_in,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+        )).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], d_in, d, pd),
+        "dt_norm": jnp.zeros((R,), pd),
+        "b_norm": jnp.zeros((N,), pd),
+        "c_norm": jnp.zeros((N,), pd),
+    }
+
+
+def _ssm_scan_chunked(decay, inc, h0, *, chunk, loops):
+    """h_t = decay_t * h_{t-1} + inc_t over axis 1.  (B,T,d_in,N) f32."""
+    B, T, d_in, N = decay.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n = T // chunk
+    dec = decay.reshape(B, n, chunk, d_in, N)
+    inc = inc.reshape(B, n, chunk, d_in, N)
+
+    def combine(a, b):
+        (ad, ai), (bd, bi) = a, b
+        return ad * bd, ai * bd + bi
+
+    def one_chunk(h, ci):
+        dc = jax.lax.dynamic_index_in_dim(dec, ci, 1, keepdims=False)
+        ic = jax.lax.dynamic_index_in_dim(inc, ci, 1, keepdims=False)
+        cum_d, cum_i = jax.lax.associative_scan(combine, (dc, ic), axis=1)
+        h_all = cum_d * h[:, None] + cum_i                 # (B,chunk,d_in,N)
+        return h_all[:, -1], h_all
+
+    if loops == "scan":
+        h, ys = jax.lax.scan(one_chunk, h0, jnp.arange(n))
+        ys = jnp.moveaxis(ys, 0, 1)                        # (B,n,chunk,...)
+    else:
+        h, parts = h0, []
+        for ci in range(n):
+            h, y = one_chunk(h, ci)
+            parts.append(y)
+        ys = jnp.stack(parts, axis=1)
+    return ys.reshape(B, T, d_in, N), h
+
+
+def _causal_conv(x, w, b, tail):
+    """Depthwise causal conv1d via shifted adds.  x: (B,T,d_in); w: (dc,d_in);
+    tail: (B, dc-1, d_in) history (zeros at sequence start)."""
+    dc = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = jnp.zeros(x.shape, jnp.float32)
+    T = x.shape[1]
+    for j in range(dc):
+        out = out + xp[:, j:j + T].astype(jnp.float32) * w[j].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype), xp[:, -(dc - 1):]
+
+
+def mamba_mixer(cfg, p, x, state, *, loops="scan", chunk=64):
+    """x: (B,T,d). state: {"h": (B,d_in,N) f32, "conv": (B,dc-1,d_in)} or None."""
+    mc = cfg.mamba
+    B, T, d = x.shape
+    d_in = mc.expand * d
+    N = mc.d_state
+    R = mc.rank(d)
+    if state is None:
+        state = {"h": jnp.zeros((B, d_in, N), jnp.float32),
+                 "conv": jnp.zeros((B, mc.d_conv - 1, d_in), x.dtype)}
+
+    xz = layers.dot(x, p["in_proj"]).astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    proj = layers.dot(xc, p["x_proj"])                     # (B,T,R+2N) f32
+    dt_low, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt_low = layers.rmsnorm(dt_low, p["dt_norm"])
+    Bc = layers.rmsnorm(Bc, p["b_norm"]).astype(jnp.float32)
+    Cc = layers.rmsnorm(Cc, p["c_norm"]).astype(jnp.float32)
+    dt = jax.nn.softplus(layers.dot(dt_low, p["dt_w"])
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,d_in) f32
+
+    A = -jnp.exp(p["A_log"])                               # (d_in,N)
+    decay = jnp.exp(dt[..., None] * A[None, None])         # (B,T,d_in,N)
+    inc = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    h_all, h_last = _ssm_scan_chunked(decay, inc, state["h"],
+                                      chunk=chunk, loops=loops)
+    y = jnp.einsum("btdn,btn->btd", h_all, Cc)             # f32
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = layers.dot(y, p["out_proj"]).astype(x.dtype)
+    return out, {"h": h_last, "conv": conv_tail}

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts with shard_map expert parallelism.
+
+Design (DESIGN.md Sec. 5): routing is computed in the GSPMD region (so the
+load-balance aux loss is free); dispatch/compute/combine run inside a
+``shard_map`` over the whole mesh with experts sharded on the ``model`` axis:
+
+* every model-rank sees the full data-shard's tokens (TP activations are
+  replicated over ``model``), routes them redundantly (cheap), and *gathers
+  only the tokens destined to its local experts* — no all-to-all and no
+  phantom one-hot dispatch FLOPs (cf. GShard dispatch einsums);
+* per-expert capacity ``C = ceil(T*k*cf/E)`` bounds the gather buffer — this
+  is the paper's admission-control idea applied at the token->expert level:
+  over-capacity tokens are "rejected" (dropped) exactly like jobs beyond
+  ``H_i^up``;
+* local expert outputs scatter-add into a partial (T, d) buffer which is
+  ``psum`` over ``model`` — the same collective a Megatron MLP already pays.
+
+With FSDP, expert weights arrive sharded on the hidden dim over ``data`` and
+are all-gathered inside the block (per-layer FSDP gather); the backward pass
+reduce-scatters automatically through shard_map's collective transposes.
+
+``moe_dense_ref`` is the no-drop oracle used by the tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+try:
+    from jax import shard_map
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.sharding import Distribution
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def moe_init(cfg, key):
+    mo = cfg.moe
+    d, f, E = cfg.d_model, mo.d_ff_expert, mo.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"wr_router": layers.dense_init(ks[0], d, E, jnp.float32)},
+        "experts": {
+            "wg": _expert_init(ks[1], E, d, f, cfg.pdtype),
+            "wu": _expert_init(ks[2], E, d, f, cfg.pdtype),
+            "wd": _expert_init(ks[3], E, f, d, cfg.pdtype),
+        },
+    }
+    if mo.n_shared:
+        p["shared"] = layers.mlp_init(cfg, ks[4], d_ff=mo.n_shared * f)
+    return p
+
+
+def _expert_init(key, E, d_in, d_out, dtype):
+    x = jax.random.normal(key, (E, d_in, d_out), jnp.float32) * d_in ** -0.5
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# routing (GSPMD region)
+# --------------------------------------------------------------------------
+
+def route(cfg, p, x):
+    """Top-k routing. x: (B,S,d) -> gates (B,S,k) f32, idx (B,S,k) i32, aux."""
+    mo = cfg.moe
+    logits = layers.dot(x, p["router"]["wr_router"])       # (B,S,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mo.top_k)
+    if mo.renorm_top_k:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style load-balance loss
+    E = mo.n_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0].reshape(-1), E,
+                                  dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = (E * jnp.sum(me * ce)).astype(jnp.float32)
+    return gates, idx, aux
+
+
+# --------------------------------------------------------------------------
+# dispatch / compute / combine (per-device body)
+# --------------------------------------------------------------------------
+
+def _moe_body(cfg, experts, x, gates, idx, *, n_shards, shard_id,
+              dgather_axis=None, psum_axis=None):
+    """Per-device MoE over local tokens x: (T, d).
+
+    experts: local slice {"wg": (E_loc,d,f), ...} (hidden dim possibly
+    sharded over ``dgather_axis`` -> all-gathered here).
+    """
+    mo = cfg.moe
+    E, k = mo.n_experts, mo.top_k
+    E_loc = E // n_shards
+    T, d = x.shape
+
+    if dgather_axis is not None:
+        experts = {
+            "wg": jax.lax.all_gather(experts["wg"], dgather_axis, axis=1,
+                                     tiled=True),
+            "wu": jax.lax.all_gather(experts["wu"], dgather_axis, axis=1,
+                                     tiled=True),
+            "wd": jax.lax.all_gather(experts["wd"], dgather_axis, axis=2,
+                                     tiled=True),
+        }
+
+    cap = int(-(-T * k * mo.capacity_factor // E))
+    cap = max(8, -(-cap // 8) * 8)
+
+    e_flat = idx.reshape(-1)                                # (T*k,)
+    g_flat = gates.reshape(-1).astype(jnp.float32)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+
+    # position of each (token, expert) pair within its expert's queue
+    sort_ix = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[sort_ix]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[e_sorted]
+
+    tok_sorted = tok_flat[sort_ix]
+    g_sorted = g_flat[sort_ix]
+
+    # local-expert slots; invalid -> OOB index (dropped by scatter mode)
+    e_local = e_sorted - shard_id * E_loc
+    valid = (e_local >= 0) & (e_local < E_loc) & (pos < cap)
+    slot = jnp.where(valid, e_local * cap + pos, E_loc * cap)
+
+    # Invert pair->slot so all buffers are (E_loc*cap, ...) — never (T*k, d).
+    tok_for_slot = jnp.zeros((E_loc * cap,), jnp.int32).at[slot].set(
+        tok_sorted.astype(jnp.int32), mode="drop")
+    g_for_slot = jnp.zeros((E_loc * cap,), jnp.float32).at[slot].set(
+        g_sorted, mode="drop")
+
+    x_g = x[tok_for_slot].reshape(E_loc, cap, d)   # empty slots read token 0
+
+    g = jnp.einsum("ecd,edf->ecf", x_g, experts["wg"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x_g, experts["wu"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, experts["wd"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = y.reshape(E_loc * cap, d)
+
+    out = jnp.zeros((T, d), x.dtype)
+    out = out.at[tok_for_slot].add(
+        y * g_for_slot[:, None].astype(x.dtype), mode="drop")
+    if psum_axis is not None:
+        out = jax.lax.psum(out, psum_axis)
+    return out
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def moe_apply(cfg, p, x, gates, idx, dist: Distribution):
+    """Routed-experts output (+ shared experts if configured).
+
+    x: (B, S, d); gates/idx: (B, S, k).  Under a mesh, runs the dispatch in a
+    shard_map with experts on ``model``; without a mesh runs locally.
+    """
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    gf, idf = gates.reshape(B * S, -1), idx.reshape(B * S, -1)
+
+    if dist.mesh is None or dist.tp is None:
+        out = _moe_body(cfg, p["experts"], xf, gf, idf,
+                        n_shards=1, shard_id=0)
+    else:
+        tp = dist.tp
+        fa = dist.fsdp_axis
+        mesh = dist.mesh
+        n_shards = dist.tp_size()
+        espec = {"wg": P(tp, fa, None), "wu": P(tp, fa, None),
+                 "wd": P(tp, None, fa)}
+        dp_size = 1
+        for a in dist.dp_axes:
+            dp_size *= mesh.shape[a]
+        # tokens split over dp when divisible (train/prefill); tiny decode
+        # batches are routed redundantly on every dp rank instead
+        dp = P(dist.dp_axes) if (B * S) % dp_size == 0 else P(None)
+
+        def body(experts, xl, gl, il):
+            sid = jax.lax.axis_index(tp)
+            return _moe_body(cfg, experts, xl, gl, il, n_shards=n_shards,
+                             shard_id=sid, dgather_axis=fa, psum_axis=tp)
+
+        import inspect
+        kw = ({"check_vma": False}
+              if "check_vma" in inspect.signature(shard_map).parameters
+              else {"check_rep": False})
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(espec, dp, dp, dp),
+            out_specs=dp,
+            **kw,
+        )(p["experts"], xf, gf, idf)
+
+    out = out.reshape(B, S, d)
+    if cfg.moe.n_shared:
+        out = out + layers.mlp_apply(cfg, p["shared"], x)
+    return out
+
+
+def moe_dense_ref(cfg, p, x, gates, idx):
+    """No-drop oracle: evaluates every selected expert densely."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    out = jnp.zeros((B * S, d), jnp.float32)
+    for j in range(mo.top_k):
+        e = idx.reshape(B * S, -1)[:, j]
+        g = gates.reshape(B * S, -1)[:, j]
+        # per-token expert weights (gather) — O(T*d*f) memory, tests only
+        wg = p["experts"]["wg"][e]
+        wu = p["experts"]["wu"][e]
+        wd = p["experts"]["wd"][e]
+        a = jnp.einsum("td,tdf->tf", xf.astype(jnp.float32),
+                       wg.astype(jnp.float32))
+        b = jnp.einsum("td,tdf->tf", xf.astype(jnp.float32),
+                       wu.astype(jnp.float32))
+        h = jax.nn.silu(a) * b
+        y = jnp.einsum("tf,tfd->td", h, wd.astype(jnp.float32))
+        out = out + y * g[:, None].astype(jnp.float32)
+    out = out.astype(x.dtype).reshape(B, S, d)
+    if mo.n_shared:
+        out = out + layers.mlp_apply(cfg, p["shared"], x)
+    return out

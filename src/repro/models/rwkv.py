@@ -1,0 +1,242 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): data-dependent-decay linear
+attention (time-mix) + squared-ReLU channel-mix.
+
+Three evaluation paths:
+* ``wkv_recurrent``  — exact per-step recurrence (lax.scan over time); the
+  oracle for tests and the Pallas kernel's ref.
+* ``wkv_chunked``    — chunk-parallel form: intra-chunk attention-like matmuls
+  with cumulative-decay factors (log-space, exponent-clamped at +-30 for
+  stability; error <= e^-30 relative, see DESIGN.md), inter-chunk state carry.
+  This is the production path: O(T/L) sequential steps, MXU-friendly matmuls.
+* single-step ``wkv_step`` — decode.
+
+State per layer: S (B,H,K,V) + token-shift tails for time/channel mix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+TM_LORA = 32
+DECAY_LORA = 64
+CLAMP = 30.0
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def time_mix_init(cfg, key):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    pd = cfg.pdtype
+
+    def vec(k, scale=0.5):
+        return (jax.random.uniform(k, (d,), jnp.float32) * scale).astype(pd)
+
+    return {
+        "mu_x": vec(ks[0]), "mu_w": vec(ks[1]), "mu_k": vec(ks[2]),
+        "mu_v": vec(ks[3]), "mu_r": vec(ks[4]), "mu_g": vec(ks[5]),
+        "tm_lora_a": layers.dense_init(ks[6], d, 5 * TM_LORA, pd, scale=0.01),
+        "tm_lora_b": (jax.random.normal(ks[7], (5, TM_LORA, d), jnp.float32)
+                      * 0.01).astype(pd),
+        "w0": (jax.random.normal(ks[8], (d,), jnp.float32) * 0.3 - 0.6
+               ).astype(jnp.float32),
+        "wA": layers.dense_init(ks[9], d, DECAY_LORA, pd, scale=0.01),
+        "wB": layers.dense_init(ks[10], DECAY_LORA, d, pd, scale=0.01),
+        "u": (jax.random.normal(ks[11], (H, hd), jnp.float32) * 0.3
+              ).astype(jnp.float32),
+        "rwkv_wr": layers.dense_init(ks[0], d, d, pd),
+        "rwkv_wk": layers.dense_init(ks[1], d, d, pd),
+        "rwkv_wv": layers.dense_init(ks[2], d, d, pd),
+        "rwkv_wg": layers.dense_init(ks[3], d, d, pd),
+        "rwkv_wo": layers.dense_init(ks[4], d, d, pd),
+        "gn_gamma": jnp.ones((d,), pd),
+        "gn_beta": jnp.zeros((d,), pd),
+    }
+
+
+def channel_mix_init(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    pd = cfg.pdtype
+    return {
+        "mu_ck": (jax.random.uniform(ks[0], (d,), jnp.float32) * 0.5).astype(pd),
+        "mu_cr": (jax.random.uniform(ks[1], (d,), jnp.float32) * 0.5).astype(pd),
+        "wu": layers.dense_init(ks[2], d, f, pd),
+        "wd": layers.dense_init(ks[3], f, d, pd),
+        "rwkv_wr_c": layers.dense_init(ks[4], d, d, pd),
+    }
+
+
+# --------------------------------------------------------------------------
+# WKV core
+# --------------------------------------------------------------------------
+
+def wkv_recurrent(r, k, v, w_log, u, S0):
+    """Oracle recurrence.  r/k/v/w_log: (B,T,H,K); u: (H,K); S0: (B,H,K,V)."""
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,K)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None] * kt[..., None] * vt[..., None, :])
+        S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 1, 0), (r, k, v, w_log))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S                          # (B,T,H,V), state
+
+
+def wkv_step(r, k, v, w_log, u, S):
+    """Single decode step. r/k/v/w_log: (B,H,K)."""
+    y = jnp.einsum("bhk,bhkv->bhv", r,
+                   S + u[None, :, :, None] * k[..., None] * v[..., None, :])
+    S = jnp.exp(w_log)[..., None] * S + k[..., None] * v[..., None, :]
+    return y, S
+
+
+def wkv_chunked(r, k, v, w_log, u, S0, *, chunk=64, loops="scan"):
+    """Chunk-parallel WKV.  Shapes as in wkv_recurrent."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if T % chunk:
+        raise ValueError(f"T={T} must be divisible by chunk={chunk}")
+    n = T // chunk
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(B, n, chunk, H, K), 3, 2)  # (B,n,H,L,K)
+
+    r_, k_, v_, w_ = map(resh, (r, k, v, w_log))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def one_chunk(S, ci):
+        rc, kc, vc, wc = (x[:, ci].astype(jnp.float32)
+                          for x in (r_, k_, v_, w_))      # (B,H,L,K)
+        LW = jnp.cumsum(wc, axis=2)                       # LW_t = sum_{1..t}
+        LWp = LW - wc                                     # LW_{t-1}
+        Z = LW[:, :, chunk // 2][:, :, None, :]           # per-channel ref
+        Q = rc * jnp.exp(jnp.clip(LWp - Z, -CLAMP, CLAMP))
+        Kf = kc * jnp.exp(jnp.clip(Z - LW, -CLAMP, CLAMP))
+        A = jnp.einsum("bhlk,bhmk->bhlm", Q, Kf)
+        A = jnp.where(causal[None, None], A, 0.0)
+        diag = jnp.einsum("bhlk,hk,bhlk->bhl", rc, u, kc)
+        inter = jnp.einsum("bhlk,bhkv->bhlv", rc * jnp.exp(LWp), S)
+        y = (jnp.einsum("bhlm,bhmv->bhlv", A, vc)
+             + diag[..., None] * vc + inter)              # (B,H,L,V)
+        LW_end = LW[:, :, -1]                             # (B,H,K)
+        K2 = kc * jnp.exp(LW_end[:, :, None, :] - LW)     # exponent <= 0
+        S = (jnp.exp(LW_end)[..., None] * S
+             + jnp.einsum("bhlk,bhlv->bhkv", K2, vc))
+        return S, y
+
+    if loops == "scan":
+        S, ys = jax.lax.scan(one_chunk, S0.astype(jnp.float32),
+                             jnp.arange(n))
+    else:
+        S = S0.astype(jnp.float32)
+        ys = []
+        for ci in range(n):
+            S, y = one_chunk(S, ci)
+            ys.append(y)
+        ys = jnp.stack(ys)
+    # ys: (n,B,H,L,V) -> (B,T,H,V)
+    out = jnp.moveaxis(ys, 0, 1)                          # (B,n,H,L,V)
+    out = jnp.moveaxis(out, 2, 3).reshape(B, T, H, V)
+    return out.astype(r.dtype), S
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift interpolation (the RWKV6 'ddlerp')."""
+    xx = sx - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(layers.dot(xxx, p["tm_lora_a"]))        # (B,T,5*32) f32
+    lo = lo.reshape(*lo.shape[:-1], 5, TM_LORA)
+    mods = jnp.einsum("btsk,skd->sbtd", lo,
+                      p["tm_lora_b"].astype(jnp.float32))  # (5,B,T,d)
+    outs = []
+    for i, mu in enumerate(("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")):
+        mix = p[mu].astype(jnp.float32) + mods[i]
+        outs.append((x.astype(jnp.float32)
+                     + xx.astype(jnp.float32) * mix).astype(x.dtype))
+    return outs                                           # xw, xk, xv, xr, xg
+
+
+def _group_norm(x, gamma, beta, H, eps=64e-5):
+    """Per-head layer norm over the head channel (RWKV GroupNorm(H, d))."""
+    B, T, d = x.shape
+    xr = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = xr.mean(-1, keepdims=True)
+    var = xr.var(-1, keepdims=True)
+    xr = (xr - mu) * jax.lax.rsqrt(var + eps)
+    out = xr.reshape(B, T, d) * gamma.astype(jnp.float32) \
+        + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def time_mix(cfg, p, x, state, *, loops="scan", chunk=64):
+    """x: (B,T,d); state: {"S": (B,H,K,V), "shift": (B,d)} or None."""
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    if state is None:
+        state = {"S": jnp.zeros((B, H, hd, hd), jnp.float32),
+                 "shift": jnp.zeros((B, d), x.dtype)}
+    sx = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+
+    def heads(z, w):
+        return layers.dot(z, w).astype(x.dtype).reshape(B, T, H, hd)
+
+    r = heads(xr, p["rwkv_wr"])
+    kk = heads(xk, p["rwkv_wk"])
+    v = heads(xv, p["rwkv_wv"])
+    g = layers.dot(xg, p["rwkv_wg"])
+    w_log = -jnp.exp(p["w0"].astype(jnp.float32)
+                     + layers.dot(jnp.tanh(layers.dot(xw, p["wA"])),
+                                  p["wB"]))
+    w_log = jnp.clip(w_log, -8.0, -1e-5).reshape(B, T, H, hd)
+
+    u = p["u"].astype(jnp.float32)
+    if T == 1:
+        y, S = wkv_step(r[:, 0].astype(jnp.float32),
+                        kk[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32),
+                        w_log[:, 0], u, state["S"])
+        y = y[:, None]
+    elif T <= chunk:
+        y, S = wkv_recurrent(r.astype(jnp.float32), kk.astype(jnp.float32),
+                             v.astype(jnp.float32), w_log, u, state["S"])
+    else:
+        y, S = wkv_chunked(r.astype(jnp.float32), kk.astype(jnp.float32),
+                           v.astype(jnp.float32), w_log, u, state["S"],
+                           chunk=chunk, loops=loops)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    y = _group_norm(y, p["gn_gamma"], p["gn_beta"], H)
+    y = (y * jax.nn.silu(g).astype(x.dtype))
+    out = layers.dot(y, p["rwkv_wo"]).astype(x.dtype)
+    new_state = {"S": S, "shift": x[:, -1]}
+    return out, new_state
+
+
+def channel_mix(cfg, p, x, shift_state):
+    """Squared-ReLU channel mix. shift_state: (B,d) or None."""
+    if shift_state is None:
+        shift_state = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
+    sx = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    xx = sx - x
+    xk = x + xx * p["mu_ck"].astype(x.dtype)
+    xr = x + xx * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(layers.dot(xk, p["wu"]))).astype(x.dtype)
+    out = jax.nn.sigmoid(layers.dot(xr, p["rwkv_wr_c"])).astype(x.dtype) \
+        * layers.dot(kk, p["wd"]).astype(x.dtype)
+    return out, x[:, -1]

@@ -1,0 +1,124 @@
+"""Distribution context + sharding rules.
+
+``Distribution`` carries the mesh and axis names through the model code; with
+``mesh=None`` everything degrades to single-device semantics (used by CPU
+smoke tests).  Parameter PartitionSpecs follow Megatron-style tensor
+parallelism on the ``model`` axis, with optional FSDP sharding of the
+d_model/d_ff dimension over the ``data`` axis for large architectures
+(DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Distribution:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)   # ("pod","data") on multi-pod
+    tp_axis: Optional[str] = "model"
+    fsdp: bool = False
+
+    @property
+    def dp(self):
+        return self.dp_axes if self.mesh is not None else None
+
+    @property
+    def tp(self):
+        return self.tp_axis if self.mesh is not None else None
+
+    @property
+    def fsdp_axis(self):
+        # FSDP shards the hidden param dim over the innermost dp axis ("data")
+        return self.dp_axes[-1] if (self.fsdp and self.mesh is not None) else None
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+LOCAL = Distribution(mesh=None)
+
+
+def _head_axis(dist: Distribution, n: int):
+    """Shard a head-count dim on tp when it divides evenly; else let GSPMD
+    pad (documented per-cell in the roofline table)."""
+    return dist.tp
+
+
+def param_specs(cfg, params, dist: Distribution):
+    """PartitionSpec pytree matching ``params`` (path-based rules)."""
+    fa = dist.fsdp_axis
+    tp = dist.tp
+
+    def spec_for(path: str, x):
+        nd = x.ndim
+        stacked = path.startswith("blocks/") or path.startswith("enc_blocks/") \
+            or path.startswith("dec_blocks/")
+        lead = (None,) if stacked else ()
+        core = nd - len(lead)
+
+        def S(*s):
+            return P(*(lead + s))
+
+        leaf = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+        if leaf in ("embed", "unembed_w"):
+            return P(tp, fa) if leaf == "embed" else P(fa, tp)
+        if leaf == "pos_embed":
+            return P(None, fa)
+        if parent == "experts" or parent.endswith("experts"):
+            # (E, d, f) / (E, f, d): experts on tp, hidden dim on fsdp
+            return S(tp, fa, None) if core == 3 else S(tp, None)
+        if leaf in ("wq", "wk", "wv", "wg", "wu"):        # column parallel
+            return S(fa, tp) if core == 2 else S(None)
+        if leaf in ("wo", "wd"):                          # row parallel
+            return S(tp, fa) if core == 2 else S(None)
+        if leaf == "wr_router":
+            return S(None, None)
+        if leaf in ("in_proj",):                          # mamba (d, 2*d_in)
+            return S(fa, tp)
+        if leaf in ("out_proj",):                         # mamba (d_in, d)
+            return S(tp, fa)
+        if leaf in ("A_log", "x_proj"):                   # (d_in, *)
+            return S(tp, None)
+        if leaf in ("D", "dt_bias", "conv_b"):            # (d_in,)
+            return S(tp)
+        if leaf in ("conv_w",):                           # (d_conv, d_in)
+            return S(None, tp)
+        if leaf in ("dt_w",):                             # (dt_rank, d_in)
+            return S(None, tp)
+        if leaf == "rwkv_wo":                             # (d, d) row parallel
+            return S(tp, fa)
+        if leaf.startswith("rwkv_w"):
+            # rwkv projections (d, d): column-parallel on the head dim
+            return S(fa, tp) if core == 2 else S(*([None] * core))
+        return S(*([None] * core))
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def path_str(kp):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+
+    specs = {path_str(kp): spec_for(path_str(kp), x) for kp, x in flat}
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = [specs[path_str(kp)] for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def named_shardings(cfg, params, dist: Distribution):
+    specs = param_specs(cfg, params, dist)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(dist.mesh, s), specs)

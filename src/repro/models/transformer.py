@@ -1,0 +1,592 @@
+"""Composable decoder-only / encoder-decoder LM covering all 10 assigned
+architectures: GQA (+qk-norm, RoPE/M-RoPE), dense & MoE FFNs, RWKV6, Mamba,
+hybrid interleaves, and the whisper enc-dec (stubbed audio frontend).
+
+Everything is a pure function of (cfg, params, batch); distribution enters
+only through ``Distribution`` (sharding constraints + the MoE shard_map).
+
+Layer stacks are scanned over "super-blocks" of ``cfg.block_len`` layers
+(Jamba: 8 = 1 attn + 7 mamba); ``moe.first_k_dense`` leading layers are kept
+out of the scan.  ``loops="unroll"`` switches every internal chunk loop to
+static python loops for roofline cost measurement (DESIGN.md: XLA cost
+analysis counts while-loop bodies once).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers, mamba as mamba_mod, moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.config import ModelConfig
+from repro.models.sharding import LOCAL, Distribution
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def _attn_init(cfg, key, cross=False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * hd, cfg.pdtype),
+        "wk": layers.dense_init(ks[1], d, hkv * hd, cfg.pdtype),
+        "wv": layers.dense_init(ks[2], d, hkv * hd, cfg.pdtype),
+        "wo": layers.dense_init(ks[3], hq * hd, d, cfg.pdtype,
+                                scale=(hq * hd) ** -0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.pdtype)
+    return p
+
+
+def _layer_init(cfg, key, mixer_kind, ffn_kind, decoder_cross=False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": layers.norm_init(cfg),
+                         "norm2": layers.norm_init(cfg)}
+    if mixer_kind == "attn":
+        p["mixer"] = _attn_init(cfg, k1)
+    elif mixer_kind == "rwkv":
+        p["mixer"] = rwkv_mod.time_mix_init(cfg, k1)
+    elif mixer_kind == "mamba":
+        p["mixer"] = mamba_mod.mamba_init(cfg, k1)
+    else:
+        raise ValueError(mixer_kind)
+    if decoder_cross:
+        p["cross"] = _attn_init(cfg, k3, cross=True)
+        p["norm_cross"] = layers.norm_init(cfg)
+    if ffn_kind == "dense":
+        p["ffn"] = layers.mlp_init(cfg, k2)
+    elif ffn_kind == "moe":
+        p["ffn"] = moe_mod.moe_init(cfg, k2)
+    elif ffn_kind == "rwkv_cmix":
+        p["ffn"] = rwkv_mod.channel_mix_init(cfg, k2)
+    else:
+        raise ValueError(ffn_kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": layers.embed_init(ks[0], cfg.vocab,
+                                                         cfg.d_model,
+                                                         cfg.pdtype)}
+    if cfg.max_positions:
+        params["pos_embed"] = (jax.random.normal(
+            ks[1], (cfg.max_positions, cfg.d_model), jnp.float32) * 0.01
+        ).astype(cfg.pdtype)
+
+    kinds = cfg.layer_kinds()
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(ks[2], cfg.encoder_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: {"l0": _layer_init(cfg, k, "attn", "dense")})(enc_keys)
+        dec_keys = jax.random.split(ks[3], cfg.n_layers)
+        params["dec_blocks"] = jax.vmap(
+            lambda k: {"l0": _layer_init(cfg, k, "attn", "dense",
+                                         decoder_cross=True)})(dec_keys)
+        params["enc_final_norm"] = layers.norm_init(cfg)
+    else:
+        first = cfg.moe.first_k_dense if cfg.moe else 0
+        bl = cfg.block_len
+        n_blocks = (cfg.n_layers - first) // bl
+        assert (cfg.n_layers - first) % bl == 0
+        if first:
+            hk = jax.random.split(ks[2], first)
+            params["head_layers"] = [
+                _layer_init(cfg, hk[i], kinds[i][0], "dense")
+                for i in range(first)]
+        block_kinds = kinds[first:first + bl]
+
+        def one_block(k):
+            kk = jax.random.split(k, bl)
+            return {f"l{p}": _layer_init(cfg, kk[p], *block_kinds[p])
+                    for p in range(bl)}
+
+        params["blocks"] = jax.vmap(one_block)(
+            jax.random.split(ks[3], n_blocks))
+
+    params["final_norm"] = layers.norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["unembed_w"] = layers.dense_init(
+            ks[4], cfg.d_model, cfg.vocab, cfg.pdtype)
+    return params
+
+
+# ==========================================================================
+# mixers
+# ==========================================================================
+
+def _shard_heads(dist, x, n):
+    tp_size = dist.tp_size()
+    if tp_size > 1 and n % tp_size == 0:
+        return dist.constrain(x, dist.dp_axes, None, dist.tp, None)
+    return x
+
+
+def _attn_mixer(cfg, p, x, positions, dist, *, causal=True, loops="scan",
+                cache=None, cache_pos=None, collect=False, kv_source=None,
+                mrope_positions=None):
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = layers.dot(x, p["wq"]).astype(x.dtype).reshape(B, S, hq, hd)
+    kv_in = x if kv_source is None else kv_source
+    Skv = kv_in.shape[1]
+    k = layers.dot(kv_in, p["wk"]).astype(x.dtype).reshape(B, Skv, hkv, hd)
+    v = layers.dot(kv_in, p["wv"]).astype(x.dtype).reshape(B, Skv, hkv, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    if kv_source is None and not cfg.max_positions:   # rotary models
+        if cfg.mrope_sections and mrope_positions is not None:
+            q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta,
+                                   cfg.mrope_sections)
+            k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta,
+                                   cfg.mrope_sections)
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = _shard_heads(dist, q, hq)
+    k = _shard_heads(dist, k, hkv)
+    v = _shard_heads(dist, v, hkv)
+
+    new_cache = None
+    unrep_kv = {"k": k, "v": v}
+    tp = dist.tp_size()
+    if (cache is None and tp > 1 and hkv < tp and hq % tp == 0
+            and tp % hkv == 0):
+        # GQA with fewer kv heads than TP: GSPMD cannot shard the grouped
+        # (Hkv, G) reshape, so the whole attention would replicate.  Repeat
+        # kv heads up to the TP degree (Megatron GQA practice): same FLOPs,
+        # 16-way-shardable heads, kv activations duplicated tp/hkv x.
+        rep = tp // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        k = _shard_heads(dist, k, tp)
+        v = _shard_heads(dist, v, tp)
+    if cache is not None:                               # decode (S == 1)
+        z = jnp.int32(0)
+        pos32 = jnp.asarray(cache_pos, jnp.int32)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (z, pos32, z, z))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (z, pos32, z, z))
+        seq_sharded = cfg.flash_decode and (
+            cfg.kv_cache_seq_shard or
+            (dist.tp_size() > 1 and hkv % dist.tp_size() != 0))
+        o = attn_mod.decode_attention(q, kc, vc, kv_len=cache_pos + 1,
+                                      dist=dist, seq_sharded=seq_sharded)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        o = attn_mod.attention(
+            q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+            kv_chunk=cfg.attn_kv_chunk, loops=loops,
+            triangle=cfg.attn_triangle and causal)
+        if collect:
+            new_cache = unrep_kv                 # cache stays un-repeated
+    o = o.reshape(B, S, hq * hd)
+    out = layers.dot(o, p["wo"]).astype(x.dtype)
+    return dist.constrain(out, dist.dp_axes, None, None), new_cache
+
+
+def _cross_mixer(cfg, p, x, dist, cache):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    B, S, d = x.shape
+    hq, hd = cfg.n_heads, cfg.hd
+    q = layers.dot(x, p["wq"]).astype(x.dtype).reshape(B, S, hq, hd)
+    o = attn_mod.reference(q, cache["ck"], cache["cv"], causal=False)
+    out = layers.dot(o.reshape(B, S, hq * hd), p["wo"]).astype(x.dtype)
+    return dist.constrain(out, dist.dp_axes, None, None)
+
+
+def _cross_kv(cfg, p, enc_out):
+    B, T, _ = enc_out.shape
+    k = layers.dot(enc_out, p["wk"]).astype(enc_out.dtype)
+    v = layers.dot(enc_out, p["wv"]).astype(enc_out.dtype)
+    return {"ck": k.reshape(B, T, cfg.n_kv, cfg.hd),
+            "cv": v.reshape(B, T, cfg.n_kv, cfg.hd)}
+
+
+# ==========================================================================
+# one layer
+# ==========================================================================
+
+def _seq_constrain(cfg, dist, h):
+    """Megatron sequence parallelism: keep the residual stream sharded on S
+    over the TP axis between sublayers (GSPMD then turns the row-parallel
+    all-reduces into reduce-scatters and re-gathers before the next matmul)."""
+    if cfg.seq_parallel and dist.tp is not None and h.shape[1] > 1 \
+            and h.shape[1] % dist.tp_size() == 0:
+        return dist.constrain(h, dist.dp_axes, dist.tp, None)
+    return h
+
+
+def _apply_layer(cfg, p, h, kinds, ctx, cache=None):
+    """Returns (h, aux, new_cache)."""
+    mixer_kind, ffn_kind = kinds
+    dist: Distribution = ctx["dist"]
+    loops = ctx["loops"]
+    new_cache: Dict[str, Any] = {}
+
+    h = _seq_constrain(cfg, dist, h)
+    hn = layers.apply_norm(cfg, p["norm1"], h)
+    if mixer_kind == "attn":
+        mo, c = _attn_mixer(
+            cfg, p["mixer"], hn, ctx["positions"], dist, causal=ctx["causal"],
+            loops=loops, cache=None if cache is None else cache.get("attn"),
+            cache_pos=ctx.get("cache_pos"), collect=ctx["collect"],
+            mrope_positions=ctx.get("mrope_positions"))
+        if c is not None:
+            new_cache["attn"] = c
+    elif mixer_kind == "rwkv":
+        st = None if cache is None else cache.get("rwkv")
+        T = hn.shape[1]
+        chunk = math.gcd(T, max(256, T // 128))   # bounded unroll count
+        mo, st2 = rwkv_mod.time_mix(cfg, p["mixer"], hn, st, loops=loops,
+                                    chunk=chunk)
+        if ctx["collect"] or cache is not None:
+            new_cache["rwkv"] = st2
+    elif mixer_kind == "mamba":
+        st = None if cache is None else cache.get("mamba")
+        T = hn.shape[1]
+        # bounded chunk size (the associative-scan working set is
+        # O(chunk * d_in * N)).  The chunk loop stays lax.scan even in
+        # cost-lowering mode: unrolling its vjp is pathologically slow to
+        # compile, and the undercounted intra-loop FLOPs are the elementwise
+        # SSM scan only (~0.3% of layer FLOPs; matmuls are outside the loop).
+        chunk = math.gcd(T, min(512, max(64, T // 16)))
+        mo, st2 = mamba_mod.mamba_mixer(cfg, p["mixer"], hn, st,
+                                        loops="scan", chunk=chunk)
+        if ctx["collect"] or cache is not None:
+            new_cache["mamba"] = st2
+    else:
+        raise ValueError(mixer_kind)
+    h = h + mo
+
+    if "cross" in p:
+        hc = layers.apply_norm(cfg, p["norm_cross"], h)
+        h = h + _cross_mixer(cfg, p["cross"], hc, dist,
+                             cache["cross"] if cache else ctx["cross_kv"])
+        if cache is not None:
+            new_cache["cross"] = cache["cross"]
+
+    h = _seq_constrain(cfg, dist, h)
+    hn = layers.apply_norm(cfg, p["norm2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "dense":
+        fo = layers.mlp_apply(cfg, p["ffn"], hn)
+        fo = dist.constrain(fo, dist.dp_axes, None, None)
+    elif ffn_kind == "moe":
+        gates, idx, aux = moe_mod.route(cfg, p["ffn"], hn)
+        fo = moe_mod.moe_apply(cfg, p["ffn"], hn, gates, idx, dist)
+    elif ffn_kind == "rwkv_cmix":
+        st = None if cache is None else cache.get("cshift")
+        fo, st2 = rwkv_mod.channel_mix(cfg, p["ffn"], hn, st)
+        if ctx["collect"] or cache is not None:
+            new_cache["cshift"] = st2
+    else:
+        raise ValueError(ffn_kind)
+    return h + fo, aux, new_cache
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ==========================================================================
+# decoder-only forward / prefill / decode
+# ==========================================================================
+
+def _stack_ctx(cfg, batch, dist, loops, collect):
+    if "embeds" in batch:
+        S = batch["embeds"].shape[1]
+    else:
+        S = batch["tokens"].shape[1]
+    return {
+        "dist": dist, "loops": loops, "collect": collect, "causal": True,
+        "positions": jnp.arange(S)[None, :],
+        "mrope_positions": batch.get("mrope_positions"),
+    }
+
+
+def _embed_in(cfg, params, batch, dist):
+    if "embeds" in batch:
+        h = batch["embeds"].astype(cfg.adtype)
+    else:
+        h = params["embed"][batch["tokens"]].astype(cfg.adtype)
+    if cfg.max_positions:
+        S = h.shape[1]
+        h = h + params["pos_embed"][:S][None].astype(cfg.adtype)
+    return dist.constrain(h, dist.dp_axes, None, None)
+
+
+def _run_stack(cfg, params, h, ctx, caches=None):
+    """Shared by forward/prefill (full-sequence) paths."""
+    kinds = cfg.layer_kinds()
+    first = cfg.moe.first_k_dense if cfg.moe else 0
+    bl = cfg.block_len
+    aux_total = jnp.zeros((), jnp.float32)
+    head_caches = []
+    for i in range(first):
+        h, aux, hc = _apply_layer(cfg, params["head_layers"][i], h,
+                                  kinds[i], ctx)
+        aux_total += aux
+        head_caches.append(hc)
+
+    block_kinds = kinds[first:first + bl]
+
+    def body(carry, bp):
+        h, aux = carry
+        bcache = {}
+        for p_ix in range(bl):
+            h, a, c = _apply_layer(cfg, bp[f"l{p_ix}"], h,
+                                   block_kinds[p_ix], ctx)
+            aux += a
+            bcache[f"l{p_ix}"] = c
+        return (h, aux), bcache
+
+    body = _remat_wrap(cfg, body)
+    (h, aux_total), block_caches = jax.lax.scan(
+        body, (h, aux_total), params["blocks"])
+    return h, aux_total, head_caches, block_caches
+
+
+def backbone(cfg: ModelConfig, params, batch, dist: Distribution = LOCAL,
+             *, loops: str = "scan", collect: bool = False):
+    """Runs everything up to (and incl.) the final norm.
+    Returns (h, aux, caches)."""
+    if cfg.is_encdec:
+        return _encdec_backbone(cfg, params, batch, dist, loops=loops,
+                                collect=collect)
+    ctx = _stack_ctx(cfg, batch, dist, loops, collect)
+    h = _embed_in(cfg, params, batch, dist)
+    h, aux, head_caches, block_caches = _run_stack(cfg, params, h, ctx)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    caches = {"head": head_caches, "blocks": block_caches} if collect else None
+    return h, aux, caches
+
+
+def forward(cfg: ModelConfig, params, batch, dist: Distribution = LOCAL,
+            *, loops: str = "scan", collect: bool = False):
+    """Teacher-forcing forward.  Returns (logits, aux, caches)."""
+    h, aux, caches = backbone(cfg, params, batch, dist, loops=loops,
+                              collect=collect)
+    return _unembed(cfg, params, h, dist), aux, caches
+
+
+def _unembed(cfg, params, h, dist):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed_w"])
+    logits = layers.dot(h, w)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return dist.constrain(logits, dist.dp_axes, None, dist.tp)
+
+
+# ---------------------------- enc-dec (whisper) ---------------------------
+
+def _encdec_backbone(cfg, params, batch, dist, *, loops="scan",
+                     collect=False):
+    enc = encode(cfg, params, batch["enc_embeds"], dist, loops=loops)
+    h = params["embed"][batch["tokens"]].astype(cfg.adtype)
+    S = h.shape[1]
+    h = h + params["pos_embed"][:S][None].astype(cfg.adtype)
+    h = dist.constrain(h, dist.dp_axes, None, None)
+    ctx = {"dist": dist, "loops": loops, "collect": collect, "causal": True,
+           "positions": jnp.arange(S)[None, :], "mrope_positions": None}
+
+    def body(carry, bp):
+        h, _ = carry
+        ctx2 = dict(ctx)
+        ctx2["cross_kv"] = _cross_kv(cfg, bp["l0"]["cross"], enc)
+        h, a, c = _apply_layer(cfg, bp["l0"], h, ("attn", "dense"), ctx2)
+        if collect:
+            c["cross"] = ctx2["cross_kv"]
+        return (h, a), {"l0": c}
+
+    body = _remat_wrap(cfg, body)
+    (h, _), block_caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["dec_blocks"])
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    caches = {"head": [], "blocks": block_caches} if collect else None
+    return h, jnp.zeros((), jnp.float32), caches
+
+
+def encode(cfg, params, enc_embeds, dist, *, loops="scan"):
+    h = enc_embeds.astype(cfg.adtype)
+    h = dist.constrain(h, dist.dp_axes, None, None)
+    ctx = {"dist": dist, "loops": loops, "collect": False, "causal": False,
+           "positions": jnp.arange(h.shape[1])[None, :],
+           "mrope_positions": None}
+
+    def body(carry, bp):
+        h, a = carry
+        h, a2, _ = _apply_layer(cfg, bp["l0"], h, ("attn", "dense"), ctx)
+        return (h, a + a2), None
+
+    body = _remat_wrap(cfg, body)
+    (h, _), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                             params["enc_blocks"])
+    return layers.apply_norm(cfg, params["enc_final_norm"], h)
+
+
+# ==========================================================================
+# loss
+# ==========================================================================
+
+def _nll_chunk(cfg, params, h_chunk, tgt_chunk, dist):
+    logits = _unembed(cfg, params, h_chunk, dist)           # (B, S_c, V)
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    # vocab-sharding-friendly target gather (mask-and-reduce, no real gather)
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    tgt_logit = jnp.sum(jnp.where(viota == tgt_chunk[..., None], logits, 0.0),
+                        axis=-1)
+    return lse - tgt_logit
+
+
+def loss_fn(cfg, params, batch, dist: Distribution = LOCAL, *,
+            loops: str = "scan", aux_coef: float = 0.01):
+    """Token-chunked cross entropy: the (tokens, vocab) logits matrix is
+    never materialized in full.  Chunks are a static python loop (roofline
+    FLOPs stay correctly counted), each chunk is rematerialized in the
+    backward pass (no f32 logits residuals), and an optimization barrier
+    chains the chunks so at most one logits block is live at a time."""
+    h, aux, _ = backbone(cfg, params, batch, dist, loops=loops)
+    B, S, d = h.shape
+    tg = batch["targets"]
+    mask = batch.get("loss_mask")
+    n_chunks = math.gcd(S, max(1, cfg.loss_chunks))   # chunk the unsharded S
+    csz = S // n_chunks
+    chunk_fn = jax.checkpoint(
+        lambda p, hc, tc: _nll_chunk(cfg, p, hc, tc, dist))
+    nll_sum = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        nll = chunk_fn(params, h[:, i * csz:(i + 1) * csz],
+                       tg[:, i * csz:(i + 1) * csz])
+        if mask is not None:
+            mc = mask[:, i * csz:(i + 1) * csz]
+            nll_sum = nll_sum + jnp.sum(nll * mc)
+            den = den + jnp.sum(mc)
+        else:
+            nll_sum = nll_sum + jnp.sum(nll)
+            den = den + nll.size
+        if n_chunks > 1:
+            nll_sum, h = jax.lax.optimization_barrier((nll_sum, h))
+    loss = nll_sum / jnp.maximum(den, 1.0)
+    return loss + aux_coef * aux, {"nll": loss, "aux": aux}
+
+
+# ==========================================================================
+# caches: init / prefill / decode
+# ==========================================================================
+
+def _layer_cache_init(cfg, kinds, B, max_len, dtype):
+    mixer_kind, ffn_kind = kinds
+    d = cfg.d_model
+    c: Dict[str, Any] = {}
+    if mixer_kind == "attn":
+        c["attn"] = {"k": jnp.zeros((B, max_len, cfg.n_kv, cfg.hd), dtype),
+                     "v": jnp.zeros((B, max_len, cfg.n_kv, cfg.hd), dtype)}
+    elif mixer_kind == "rwkv":
+        H = d // cfg.rwkv_head_dim
+        c["rwkv"] = {"S": jnp.zeros((B, H, cfg.rwkv_head_dim,
+                                     cfg.rwkv_head_dim), jnp.float32),
+                     "shift": jnp.zeros((B, d), dtype)}
+    elif mixer_kind == "mamba":
+        mc = cfg.mamba
+        c["mamba"] = {"h": jnp.zeros((B, mc.expand * d, mc.d_state),
+                                     jnp.float32),
+                      "conv": jnp.zeros((B, mc.d_conv - 1, mc.expand * d),
+                                        dtype)}
+    if ffn_kind == "rwkv_cmix":
+        c["cshift"] = jnp.zeros((B, d), dtype)
+    return c
+
+
+def init_cache(cfg, B, max_len, enc_len=0):
+    dtype = cfg.adtype
+    kinds = cfg.layer_kinds()
+    if cfg.is_encdec:
+        blocks = jax.vmap(lambda _: {"l0": {
+            **_layer_cache_init(cfg, ("attn", "dense"), B, max_len, dtype),
+            "cross": {"ck": jnp.zeros((B, enc_len, cfg.n_kv, cfg.hd), dtype),
+                      "cv": jnp.zeros((B, enc_len, cfg.n_kv, cfg.hd), dtype)},
+        }})(jnp.arange(cfg.n_layers))
+        return {"head": [], "blocks": blocks}
+    first = cfg.moe.first_k_dense if cfg.moe else 0
+    bl = cfg.block_len
+    n_blocks = (cfg.n_layers - first) // bl
+    head = [_layer_cache_init(cfg, kinds[i], B, max_len, dtype)
+            for i in range(first)]
+    block_kinds = kinds[first:first + bl]
+    blocks = jax.vmap(lambda _: {
+        f"l{p}": _layer_cache_init(cfg, block_kinds[p], B, max_len, dtype)
+        for p in range(bl)})(jnp.arange(n_blocks))
+    return {"head": head, "blocks": blocks}
+
+
+def prefill(cfg, params, batch, dist: Distribution = LOCAL, *,
+            loops: str = "scan"):
+    """Full-sequence forward that also returns the cache (kv/state)."""
+    logits, aux, caches = forward(cfg, params, batch, dist, loops=loops,
+                                  collect=True)
+    return logits[:, -1:], caches
+
+
+def decode_step(cfg, params, cache, token, pos, dist: Distribution = LOCAL,
+                enc_out=None):
+    """One decode step.  token: (B,) int32; pos: scalar int32 (write slot).
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    B = token.shape[0]
+    h = params["embed"][token][:, None].astype(cfg.adtype)   # (B,1,d)
+    if cfg.max_positions:
+        h = h + params["pos_embed"][pos][None, None].astype(cfg.adtype)
+    h = dist.constrain(h, dist.dp_axes, None, None)
+    kinds = cfg.layer_kinds()
+    first = cfg.moe.first_k_dense if cfg.moe else 0
+    bl = cfg.block_len
+    ctx = {"dist": dist, "loops": "scan", "collect": False, "causal": True,
+           "positions": jnp.full((1, 1), pos), "cache_pos": pos,
+           "mrope_positions": None}
+    aux0 = jnp.zeros((), jnp.float32)
+
+    new_head = []
+    for i in range(first):
+        h, _, hc = _apply_layer(cfg, params["head_layers"][i], h, kinds[i],
+                                ctx, cache=cache["head"][i])
+        new_head.append(hc)
+
+    block_kinds = (kinds[first:first + bl] if not cfg.is_encdec
+                   else [("attn", "dense")])
+    blocks_key = "dec_blocks" if cfg.is_encdec else "blocks"
+
+    def body(h, bp_bc):
+        bp, bc = bp_bc
+        ncache = {}
+        for p_ix in range(len(block_kinds)):
+            h, _, c = _apply_layer(cfg, bp[f"l{p_ix}"], h,
+                                   block_kinds[p_ix], ctx,
+                                   cache=bc[f"l{p_ix}"])
+            ncache[f"l{p_ix}"] = c
+        return h, ncache
+
+    h, new_blocks = jax.lax.scan(body, h,
+                                 (params[blocks_key], cache["blocks"]))
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = _unembed(cfg, params, h, dist)
+    return logits, {"head": new_head, "blocks": new_blocks}

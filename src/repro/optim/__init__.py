@@ -1,0 +1,5 @@
+from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
+                               global_norm, make_schedule)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "global_norm",
+           "make_schedule"]

@@ -1,0 +1,150 @@
+"""AdamW with sharding-friendly, memory-tiered state + LR schedules.
+
+State tiers (per-arch, DESIGN.md Sec. 5 — what makes kimi-k2 trainable):
+  * "f32"  — classic: f32 master copy + f32 (m, v)          (14 B/param)
+  * "bf16" — bf16 (m, v), no master (params updated in f32 then cast)
+  * "int8" — blockwise-quantized (m, v) a la 8-bit Adam (block 256,
+             per-block absmax scales), no master               (~4 B/param)
+
+Schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "f32"          # f32 | bf16 | int8
+    schedule: str = "cosine"          # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: final decay fraction of steps
+
+
+def make_schedule(oc: OptConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+        if oc.schedule == "const":
+            return oc.lr * warm
+        if oc.schedule == "cosine":
+            t = jnp.clip((step - oc.warmup_steps)
+                         / max(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+            return oc.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        # WSD: stable at lr, then sqrt-decay over the last decay_frac steps
+        decay_start = oc.total_steps * (1 - oc.decay_frac)
+        t = jnp.clip((step - decay_start)
+                     / max(oc.total_steps - decay_start, 1), 0, 1)
+        return oc.lr * warm * (1 - t * (1 - 0.1))
+    return sched
+
+
+# ---------------------------- int8 block quant -----------------------------
+
+def _q8(x):
+    """Blockwise int8 along the last axis, shape-preserving (padded last dim)
+    so the quantized state inherits the parameter's PartitionSpec."""
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nblk = (last + pad) // BLOCK
+    blocks = xp.reshape(*x.shape[:-1], nblk, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(*x.shape[:-1], last + pad),
+            "scale": scale[..., 0].astype(jnp.float32)}
+
+
+def _dq8(s, shape):
+    last = shape[-1]
+    q = s["q"]
+    nblk = q.shape[-1] // BLOCK
+    blocks = q.astype(jnp.float32).reshape(*q.shape[:-1], nblk, BLOCK)
+    deq = blocks * s["scale"][..., None]
+    return deq.reshape(*q.shape[:-1], q.shape[-1])[..., :last]
+
+
+# ---------------------------- state init / update ---------------------------
+
+def adamw_init(params, oc: OptConfig):
+    def one(x):
+        if oc.state_dtype == "f32":
+            return {"m": jnp.zeros(x.shape, jnp.float32),
+                    "v": jnp.zeros(x.shape, jnp.float32),
+                    # explicit copy: params may already be f32 and the
+                    # master must stay donation-safe (distinct buffer)
+                    "master": jnp.array(x, dtype=jnp.float32)}
+        if oc.state_dtype == "bf16":
+            return {"m": jnp.zeros(x.shape, jnp.bfloat16),
+                    "v": jnp.zeros(x.shape, jnp.bfloat16)}
+        return {"m": _q8(jnp.zeros(x.shape, jnp.float32)),
+                "v": _q8(jnp.zeros(x.shape, jnp.float32))}
+    return {"mu": jax.tree_util.tree_map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params, grads, state, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    sched = make_schedule(oc)
+    step = state["step"] + 1
+    lr = sched(step)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gn, 1e-12))
+    bc1 = 1 - oc.beta1 ** step.astype(jnp.float32)
+    bc2 = 1 - oc.beta2 ** step.astype(jnp.float32)
+
+    def one(x, g, s):
+        g = g.astype(jnp.float32) * clip
+        if oc.state_dtype == "int8":
+            m = _dq8(s["m"], x.shape)
+            v = _dq8(s["v"], x.shape)
+        else:
+            m = s["m"].astype(jnp.float32)
+            v = s["v"].astype(jnp.float32)
+        m = oc.beta1 * m + (1 - oc.beta1) * g
+        v = oc.beta2 * v + (1 - oc.beta2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+        base = s["master"] if oc.state_dtype == "f32" else x.astype(jnp.float32)
+        new = base - lr * (upd + oc.weight_decay * base)
+        out = {"m": (_q8(m) if oc.state_dtype == "int8" else
+                     m.astype(s["m"].dtype if oc.state_dtype != "f32"
+                              else jnp.float32)),
+               "v": (_q8(v) if oc.state_dtype == "int8" else
+                     v.astype(s["v"].dtype if oc.state_dtype != "f32"
+                              else jnp.float32))}
+        if oc.state_dtype == "f32":
+            out["master"] = new
+        return new.astype(x.dtype), out
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = state["mu"]
+    flat_s_list = tdef.flatten_up_to(flat_s)
+    new_p, new_s = [], []
+    for x, g, s in zip(flat_p, flat_g, flat_s_list):
+        np_, ns_ = one(x, g, s)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree_util.tree_unflatten(tdef, new_p),
+            {"mu": jax.tree_util.tree_unflatten(tdef, new_s), "step": step},
+            {"lr": lr, "grad_norm": gn})

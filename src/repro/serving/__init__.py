@@ -1,0 +1,3 @@
+from repro.serving.engine import generate, pad_attn_cache
+
+__all__ = ["generate", "pad_attn_cache"]

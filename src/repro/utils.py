@@ -1,0 +1,44 @@
+"""Small shared helpers."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fdtype() -> jnp.dtype:
+    """Canonical float dtype: float64 when x64 is enabled, else float32."""
+    return jnp.result_type(float)
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+def tree_params(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def block_until_ready(tree: Any) -> Any:
+    return jax.block_until_ready(tree)
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (blocks on JAX outputs)."""
+    for _ in range(warmup):
+        block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def to_np(tree: Any) -> Any:
+    return jax.tree_util.tree_map(np.asarray, tree)

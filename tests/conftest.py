@@ -1,0 +1,12 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+# The allocator math (paper Sec. 3-4) is validated at f64; model code uses
+# explicit f32/bf16 dtypes so enabling x64 here must not change model behavior
+# (test_models asserts explicit dtypes).  The production dry-run path runs
+# WITHOUT x64, as it would on TPU.
+jax.config.update("jax_enable_x64", True)

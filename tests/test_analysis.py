@@ -1,0 +1,61 @@
+"""Unit tests for the roofline HLO analysis (collective parser, terms)."""
+import numpy as np
+
+from repro.launch.analysis import (CostSummary, Roofline,
+                                   collective_wire_bytes, roofline)
+
+HLO = """
+ENTRY %main {
+  %ag = f32[16,1024]{1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = bf16[256,512]{1,0} all-reduce(%x), replica_groups=[2,256]<=[512], to_apply=%sum
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), replica_groups=[64,8]<=[512]
+  %cp = f32[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %aa = f32[2,8]{1,0} all-to-all(%w), replica_groups={{0,1,2,3}}
+  %done = f32[1]{0} all-reduce-done(%start)
+  %normal = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_wire_bytes_parses_ops():
+    total, by_op = collective_wire_bytes(HLO)
+    # all-gather: (n-1)/n * result = 15/16 * 16*1024*4
+    ag = 15 / 16 * 16 * 1024 * 4
+    # all-reduce: 2*(n-1)/n * result (bf16)
+    ar = 2 * 255 / 256 * 256 * 512 * 2
+    # reduce-scatter: (n-1) * shard
+    rs = 7 * 8 * 128 * 4
+    # permute: result; all-to-all with brace groups (n=4): 3/4 * result
+    cp = 4 * 4 * 4
+    aa = 3 / 4 * 2 * 8 * 4
+    np.testing.assert_allclose(by_op["all-gather"], ag)
+    np.testing.assert_allclose(by_op["all-reduce"], ar)
+    np.testing.assert_allclose(by_op["reduce-scatter"], rs)
+    np.testing.assert_allclose(by_op["collective-permute"], cp)
+    np.testing.assert_allclose(by_op["all-to-all"], aa)
+    np.testing.assert_allclose(total, ag + ar + rs + cp + aa)
+
+
+def test_single_participant_groups_ignored():
+    hlo = ("%ar = f32[8]{0} all-reduce(%x), replica_groups=[512,1]<=[512]")
+    total, _ = collective_wire_bytes(hlo)
+    assert total == 0.0
+
+
+def test_roofline_terms_and_bottleneck():
+    c = CostSummary(flops=197e12, bytes_accessed=819e9 * 2,
+                    coll_bytes=50e9 * 0.5)
+    r = roofline(c)
+    np.testing.assert_allclose(r.t_compute, 1.0)
+    np.testing.assert_allclose(r.t_memory, 2.0)
+    np.testing.assert_allclose(r.t_collective, 0.5)
+    assert r.bottleneck == "memory"
+    np.testing.assert_allclose(r.compute_fraction, 0.5)
+
+
+def test_cost_summary_algebra():
+    a = CostSummary(1.0, 2.0, 3.0, {"all-reduce": 3.0})
+    b = CostSummary(10.0, 20.0, 30.0, {"all-gather": 30.0})
+    s = a + b.scaled(0.5)
+    assert s.flops == 6.0 and s.bytes_accessed == 12.0
+    assert s.coll_by_op == {"all-reduce": 3.0, "all-gather": 15.0}

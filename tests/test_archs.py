@@ -1,0 +1,118 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family,
+one forward + one train-grad step on CPU, asserting shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ARCHS, get_config, reduced_config
+from repro.models import forward, init_params, loss_fn
+from repro.models.config import ALL_SHAPES
+from repro.configs.specs import cell_is_live, live_cells
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch_for(cfg):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"targets": toks}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(KEY, (B, S, cfg.d_model),
+                                            jnp.float32) * 0.02
+        pos = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+        batch["mrope_positions"] = pos.astype(jnp.int32)
+    elif cfg.is_encdec:
+        batch["enc_embeds"] = jax.random.normal(KEY, (B, S, cfg.d_model),
+                                                jnp.float32) * 0.02
+        batch["tokens"] = toks
+    else:
+        batch["tokens"] = toks
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke(arch_id):
+    cfg = reduced_config(arch_id)
+    params = init_params(cfg, KEY)
+    batch = _batch_for(cfg)
+    logits, aux, _ = forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # one train step's worth of grads
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                      for x in jax.tree_util.tree_leaves(g)))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch_id)
+    expected = {
+        "qwen2-vl-7b": (28, 3584, 28, 4, 152064),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 102400),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163840),
+        "qwen3-32b": (64, 5120, 64, 8, 151936),
+        "qwen3-8b": (36, 4096, 32, 8, 151936),
+        "minicpm-2b": (40, 2304, 36, 36, 122753),
+        "qwen3-0.6b": (28, 1024, 16, 8, 151936),
+        "rwkv6-7b": (32, 4096, 64, 64, 65536),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 65536),
+        "whisper-base": (6, 512, 8, 8, 51865),
+    }[arch_id]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv,
+            cfg.vocab) == expected
+    moe_expected = {
+        "deepseek-moe-16b": (64, 6), "kimi-k2-1t-a32b": (384, 8),
+        "jamba-v0.1-52b": (16, 2),
+    }
+    if arch_id in moe_expected:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == moe_expected[arch_id]
+    # layer-kind pattern sanity
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == cfg.n_layers
+    if arch_id == "jamba-v0.1-52b":
+        assert sum(1 for m, _ in kinds if m == "attn") == 4     # 1:7
+        assert sum(1 for _, f in kinds if f == "moe") == 16     # every 2nd
+    if arch_id == "rwkv6-7b":
+        assert all(m == "rwkv" for m, _ in kinds)
+
+
+def test_cell_count():
+    """40 assigned cells; long_500k live only for SSM/hybrid (8 of the 10
+    archs are pure full-attention) -> 32 live."""
+    cells = live_cells(ARCHS, ALL_SHAPES)
+    assert len(cells) == 32
+    assert ("rwkv6-7b", "long_500k") in cells
+    assert ("jamba-v0.1-52b", "long_500k") in cells
+    assert ("qwen3-8b", "long_500k") not in cells
+
+
+def test_param_counts_in_range():
+    """Full configs land near their nameplate sizes (structural check)."""
+    import numpy as np
+
+    def count(cfg):
+        params = jax.eval_shape(lambda k: init_params(cfg, k), KEY)
+        return sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+
+    expect = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "qwen3-8b": (7e9, 9.5e9),
+        "qwen3-32b": (30e9, 36e9),
+        "minicpm-2b": (2.2e9, 3.2e9),
+        "qwen2-vl-7b": (6.5e9, 9e9),
+        "deepseek-moe-16b": (14e9, 19e9),
+        "rwkv6-7b": (6.5e9, 9e9),
+        "jamba-v0.1-52b": (49e9, 56e9),
+        "whisper-base": (0.05e9, 0.12e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.15e12),
+    }
+    for aid, (lo, hi) in expect.items():
+        n = count(get_config(aid))
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"

@@ -1,0 +1,253 @@
+"""Tests for the paper's GNEP capacity-allocation core (Secs. 3-5)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InfeasibleError, deadline_lhs, sample_scenario, solve,
+                        solve_centralized, solve_distributed,
+                        solve_distributed_python)
+from repro.core.centralized import kkt_residual, objective_of_r
+from repro.core.game import rm_solve
+from repro.core.rounding import round_solution
+
+SIZES = (3, 17, 64)   # fixed sizes -> bounded number of jit recompiles
+
+
+def scn_of(seed, n=17, cf=1.0):
+    return sample_scenario(jax.random.PRNGKey(seed), n, capacity_factor=cf)
+
+
+# --------------------------------------------------------------------------
+# Scenario generator sanity (Tables 5/6)
+# --------------------------------------------------------------------------
+
+def test_scenario_ranges():
+    scn = scn_of(0, 512)
+    assert np.all(np.asarray(scn.E) < 0)
+    assert np.all(np.asarray(scn.K) > 0)
+    assert 0.85 <= float(scn.rho_bar) <= 1.48            # Table 6
+    assert np.asarray(scn.alpha).min() >= 300_000 * 0.9  # Table 6 range
+    assert np.asarray(scn.alpha).max() <= 9_600_000 * 1.1
+    assert np.all(np.asarray(scn.r_low) <= np.asarray(scn.r_up))
+    assert np.all(np.asarray(scn.H_low) <= np.asarray(scn.H_up))
+    # Eq. 8: r bounds are K * H
+    np.testing.assert_allclose(np.asarray(scn.r_up),
+                               np.asarray(scn.K * scn.H_up), rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Centralized solver (P3 water-filling) — exactness
+# --------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SIZES),
+       cf=st.floats(0.85, 1.3))
+def test_centralized_kkt(seed, n, cf):
+    scn = scn_of(seed, n, cf)
+    sol = solve_centralized(scn)
+    if not bool(sol.feasible):
+        return
+    assert float(kkt_residual(scn, sol.r, sol.aux)) < 1e-8
+    assert float(jnp.sum(sol.r)) <= float(scn.R) * (1 + 1e-10)
+
+
+@settings(deadline=None, max_examples=15, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SIZES),
+       cf=st.floats(0.88, 1.2), pseed=st.integers(0, 100))
+def test_centralized_no_improving_perturbation(seed, n, cf, pseed):
+    """Optimality: random feasible perturbations never beat the solution."""
+    scn = scn_of(seed, n, cf)
+    sol = solve_centralized(scn)
+    if not bool(sol.feasible):
+        return
+    key = jax.random.PRNGKey(pseed)
+    base = float(objective_of_r(scn, sol.r))
+    for k in jax.random.split(key, 8):
+        delta = jax.random.uniform(k, (n,), minval=-1.0, maxval=1.0)
+        cand = jnp.clip(sol.r + delta * 0.05 * sol.r, scn.r_low, scn.r_up)
+        # project onto capacity simplex by uniform shrink of the excess
+        excess = jnp.maximum(jnp.sum(cand) - scn.R, 0.0)
+        shrinkable = cand - scn.r_low
+        cand = cand - excess * shrinkable / jnp.maximum(jnp.sum(shrinkable), 1e-12)
+        assert float(objective_of_r(scn, cand)) >= base - 1e-7 * abs(base)
+
+
+def test_prop32_constraints_active():
+    """Prop. 3.2: (P2d) and (P2e) are active at the centralized optimum."""
+    scn = scn_of(3, 64, 0.93)
+    sol = solve_centralized(scn)
+    lhs = deadline_lhs(scn, sol.psi, sol.sM, sol.sR)
+    np.testing.assert_allclose(np.asarray(lhs), 0.0, atol=1e-7)
+    slots = sol.sM / scn.cM + sol.sR / scn.cR
+    np.testing.assert_allclose(np.asarray(slots), np.asarray(sol.r), rtol=1e-10)
+
+
+def test_capacity_monotone():
+    """Fig. 2 sanity: decreasing capacity never decreases total cost."""
+    totals = []
+    for cf in [1.1, 1.0, 0.95, 0.9, 0.87]:
+        sol = solve_centralized(scn_of(11, 64, cf))
+        assert bool(sol.feasible)
+        totals.append(float(sol.total))
+    assert all(t2 >= t1 - 1e-6 for t1, t2 in zip(totals, totals[1:]))
+
+
+def test_deadline_monotone():
+    """Fig. 4 sanity: tighter deadlines never decrease total cost."""
+    base = sample_scenario(jax.random.PRNGKey(5), 64, capacity_factor=1.1)
+    R = float(base.R)
+    totals = []
+    for ds in [1.0, 0.9, 0.8, 0.7]:
+        scn = sample_scenario(jax.random.PRNGKey(5), 64, deadline_scale=ds,
+                              capacity=R)
+        sol = solve_centralized(scn)
+        if bool(sol.feasible):
+            totals.append(float(sol.total))
+    assert len(totals) >= 2
+    assert all(t2 >= t1 - 1e-6 for t1, t2 in zip(totals, totals[1:]))
+
+
+def test_infeasible_raises():
+    scn = scn_of(1, 17, cf=0.5)   # below sum(r_low) ~ 0.8 * sum(r_up)
+    with pytest.raises(InfeasibleError):
+        solve(scn, "centralized")
+
+
+# --------------------------------------------------------------------------
+# RM problem (P5) — exactness of the candidate-price sweep
+# --------------------------------------------------------------------------
+
+def _rm_bruteforce(scn, bids):
+    """Enumerate all 2^N y-patterns; for each, the LP in r is a greedy fill
+    and the optimal price is the top of the pattern's feasible interval."""
+    n = scn.n
+    p = np.asarray(scn.p); r_low = np.asarray(scn.r_low)
+    r_up = np.asarray(scn.r_up); R = float(scn.R)
+    rho_bar, rho_hat = float(scn.rho_bar), float(scn.rho_hat)
+    bids = np.asarray(bids)
+    best = -np.inf
+    order = np.argsort(-p)
+    for pattern in itertools.product([0, 1], repeat=n):
+        y = np.array(pattern, bool)
+        lb = max([rho_bar] + [bids[i] for i in range(n) if not y[i]])
+        ub = min([rho_hat] + [bids[i] for i in range(n) if y[i]])
+        if lb > ub:
+            continue
+        rho = ub
+        spare = R - r_low.sum()
+        if spare < 0:
+            continue
+        r = r_low.copy()
+        for i in order:
+            if y[i]:
+                add = min(r_up[i] - r_low[i], spare)
+                r[i] += add
+                spare -= add
+        obj = (rho - rho_bar) * r.sum() + (p * r).sum() - (p * r_up).sum()
+        best = max(best, obj)
+    return best
+
+
+@settings(deadline=None, max_examples=10, derandomize=True)
+@given(seed=st.integers(0, 1000), bseed=st.integers(0, 1000))
+def test_rm_solve_exact(seed, bseed):
+    scn = scn_of(seed, 6, cf=0.9)
+    key = jax.random.PRNGKey(bseed)
+    bids = jax.random.uniform(key, (6,), minval=float(scn.rho_bar),
+                              maxval=20.0, dtype=scn.A.dtype)
+    rho, r, obj = rm_solve(scn, bids)
+    brute = _rm_bruteforce(scn, bids)
+    assert float(obj) >= brute - 1e-6 * abs(brute) - 1e-9
+    # and the returned allocation is feasible & consistent with the objective
+    assert float(jnp.sum(r)) <= float(scn.R) * (1 + 1e-12)
+    assert np.all(np.asarray(r) >= np.asarray(scn.r_low) - 1e-9)
+    assert np.all(np.asarray(r) <= np.asarray(scn.r_up) + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Distributed game (Algorithm 4.1)
+# --------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=12, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SIZES),
+       cf=st.floats(0.88, 1.15))
+def test_distributed_near_centralized(seed, n, cf):
+    """Paper Figs. 6/8: equilibrium total within a few % of the optimum.
+    The bound scales with class granularity: at tiny N a single class
+    ordered differently (p vs marginal-penalty order) is a large fraction."""
+    scn = scn_of(seed, n, cf)
+    c = solve_centralized(scn)
+    if not bool(c.feasible):
+        return
+    d = solve_distributed(scn)
+    gap = (float(d.total) - float(c.total)) / abs(float(c.total))
+    assert gap >= -1e-9          # never better than the optimum
+    assert gap <= (0.30 if n <= 3 else 0.12 if n <= 17 else 0.08)
+
+
+def test_distributed_python_matches_jit():
+    scn = scn_of(42, 17, 0.92)
+    d_jit = solve_distributed(scn)
+    d_py, iters, _ = solve_distributed_python(scn)
+    np.testing.assert_allclose(np.asarray(d_py.r), np.asarray(d_jit.r),
+                               rtol=1e-9)
+    assert iters == int(d_jit.iters)
+
+
+def test_distributed_respects_bounds():
+    scn = scn_of(9, 64, 0.9)
+    d = solve_distributed(scn)
+    r = np.asarray(d.r)
+    assert np.all(r >= np.asarray(scn.r_low) - 1e-9)
+    assert np.all(r <= np.asarray(scn.r_up) + 1e-9)
+    assert r.sum() <= float(scn.R) * (1 + 1e-12)
+
+
+# --------------------------------------------------------------------------
+# Rounding heuristic (Algorithm 4.2, Props. 4.2/4.3)
+# --------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=15, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SIZES),
+       cf=st.floats(0.88, 1.2), method=st.sampled_from(["c", "d"]))
+def test_rounding_properties(seed, n, cf, method):
+    scn = scn_of(seed, n, cf)
+    sol = (solve_centralized(scn) if method == "c" else solve_distributed(scn))
+    if not bool(sol.feasible):
+        return
+    it = round_solution(scn, sol.r, sol.sM, sol.sR, sol.psi)
+    r, sM, sR = map(np.asarray, (it.r, it.sM, it.sR))
+    # integrality
+    for x in (r, sM, sR, np.asarray(it.h)):
+        np.testing.assert_array_equal(x, np.round(x))
+    # capacity (Prop. 4.2 single pass)
+    assert r.sum() <= np.floor(float(scn.R)) + 1e-9
+    assert np.all(r >= np.floor(np.asarray(sol.r)) - 1e-9)
+    # slot constraint (P2e) holds after rounding
+    lhs = sM / np.asarray(scn.cM) + sR / np.asarray(scn.cR)
+    assert np.all(lhs <= r + 1e-9)
+    # Prop. 4.3: at most omega+1 decrements per class
+    omega = np.minimum(np.asarray(scn.cM), np.asarray(scn.cR))
+    assert np.all(sM >= np.ceil(np.asarray(sol.sM)) - (omega + 1) - 1e-9)
+    assert np.all(sR >= np.ceil(np.asarray(sol.sR)) - (omega + 1) - 1e-9)
+    # admission stays in the SLA box
+    h = np.asarray(it.h)
+    assert np.all(h >= np.asarray(scn.H_low) - 1e-9)
+    assert np.all(h <= np.asarray(scn.H_up) + 1e-9)
+
+
+def test_integer_close_to_fractional():
+    """Sec. 4.5: rounding error is dominated by integer-admission quantization
+    (~one job per class), whose *relative* impact shrinks as N grows."""
+    gaps = {}
+    for n in (64, 512):
+        scn = scn_of(4, n, 0.95)
+        res = solve(scn, "centralized")
+        frac, integ = float(res.fractional.total), float(res.integer.total)
+        gaps[n] = abs(integ - frac) / abs(frac)
+    assert gaps[64] < 0.15
+    assert gaps[512] < 0.06

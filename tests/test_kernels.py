@@ -1,0 +1,109 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import reference as attn_ref
+from repro.kernels.gnep_sweep.kernel import rm_sweep
+from repro.kernels.gnep_sweep.ref import reference as sweep_ref
+from repro.kernels.rwkv6.kernel import wkv6
+from repro.kernels.rwkv6.ref import reference as wkv_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------- flash attention -----------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd,causal,bq,bk", [
+    (2, 256, 4, 2, 64, True, 64, 64),
+    (1, 128, 8, 8, 32, False, 64, 32),
+    (2, 192, 6, 3, 64, True, 64, 64),     # uneven grid (192/64=3)
+    (1, 256, 4, 1, 128, True, 128, 64),   # MQA, hd=128
+])
+def test_flash_attention_sweep(dtype, tol, B, S, Hq, Hkv, hd, causal, bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attn_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------------- wkv6 ----------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("B,T,H,K,chunk", [
+    (2, 128, 3, 16, 32), (1, 256, 2, 64, 64), (2, 64, 4, 8, 16),
+])
+def test_wkv6_sweep(dtype, tol, B, T, H, K, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, K), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, K), dtype)
+    w_log = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K),
+                                       jnp.float32) * 0.5 - 0.6)
+    u = (jax.random.normal(ks[4], (H, K), jnp.float32) * 0.3)
+    y, S = wkv6(r, k, v, w_log.astype(dtype), u, chunk=chunk, interpret=True)
+    y_ref, S_ref = wkv_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), w_log, u,
+                           jnp.zeros((B, H, K, K)))
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+# -------------------------------- gnep sweep --------------------------------
+
+@pytest.mark.parametrize("Nc,N,bc,bn", [
+    (64, 256, 32, 64), (100, 333, 32, 128), (8, 1024, 8, 256),
+])
+def test_gnep_sweep(Nc, N, bc, bn):
+    ks = jax.random.split(KEY, 2)
+    inc = jax.random.uniform(ks[0], (Nc, N), jnp.float32, 0.0, 10.0)
+    # random mask mimicking the y-pattern
+    inc = inc * (jax.random.uniform(ks[1], (Nc, N)) > 0.4)
+    p = jnp.sort(jax.random.uniform(ks[1], (N,), jnp.float32, 0.1, 100.0)
+                 )[::-1]
+    spare = 0.3 * float(inc.sum() / Nc)
+    fill, sf, pf = rm_sweep(inc, spare, p, block_c=bc, block_n=bn,
+                            interpret=True)
+    fill_r, sf_r, pf_r = sweep_ref(inc, spare, p)
+    np.testing.assert_allclose(np.asarray(fill), np.asarray(fill_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_r),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(pf_r),
+                               rtol=1e-5, atol=1e-2)
+
+
+def test_gnep_sweep_plugs_into_rm_solve():
+    """rm_solve(sweep_fn=pallas) == rm_solve(default) on a real scenario."""
+    from repro.core import sample_scenario
+    from repro.core.game import rm_solve
+    from repro.kernels.gnep_sweep.ops import make_sweep_fn
+
+    scn = sample_scenario(jax.random.PRNGKey(3), 64, capacity_factor=0.9)
+    bids = jax.random.uniform(jax.random.PRNGKey(4), (64,),
+                              scn.A.dtype, float(scn.rho_bar), 20.0)
+    rho0, r0, obj0 = rm_solve(scn, bids)
+    fn = make_sweep_fn(force_pallas=True)
+
+    def sweep32(inc, spare, p):
+        f, s, pv = fn(inc.astype(jnp.float32), spare, p)
+        return f.astype(inc.dtype), s.astype(inc.dtype), pv.astype(inc.dtype)
+
+    rho1, r1, obj1 = rm_solve(scn, bids, sweep_fn=sweep32)
+    assert float(rho0) == pytest.approx(float(rho1), rel=1e-5)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1),
+                               rtol=1e-4, atol=1e-2)

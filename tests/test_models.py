@@ -1,0 +1,244 @@
+"""Layer-level oracle cross-checks + decode consistency for the model zoo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (LOCAL, MambaConfig, ModelConfig, MoEConfig,
+                          decode_step, forward, init_params, loss_fn, prefill)
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.serving import generate, pad_attn_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# attention oracle sweep
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (2, 64, 4, 2, 16), (1, 128, 8, 1, 32), (2, 96, 6, 6, 8),
+])
+def test_attention_chunked_vs_reference(dtype, causal, B, S, Hq, Hkv, hd):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    ref = attn_mod.reference(q, k, v, causal=causal)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    for loops in ("scan", "unroll"):
+        out = attn_mod.attention(q, k, v, causal=causal, q_chunk=32,
+                                 kv_chunk=32, loops=loops)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+    if causal:
+        out = attn_mod.attention(q, k, v, causal=True, q_chunk=32,
+                                 kv_chunk=32, triangle=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_decode_attention_matches_reference():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, hd = 2, 64, 4, 16
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    # valid length 40: zero out the tail, compare against truncated reference
+    out = attn_mod.decode_attention(q, k, v, kv_len=40)
+    ref = attn_mod.reference(q, k[:, :40], v[:, :40], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 chunked vs recurrent oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv_chunked_matches_recurrent(chunk):
+    B, T, H, K = 2, 128, 3, 8
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, K))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) * 0.5 - 0.6)
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    S0 = jnp.zeros((B, H, K, K))
+    y_ref, S_ref = rwkv_mod.wkv_recurrent(r, k, v, w_log, u, S0)
+    for loops in ("scan", "unroll"):
+        y, S = rwkv_mod.wkv_chunked(r, k, v, w_log, u, S0, chunk=chunk,
+                                    loops=loops)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# Mamba chunked scan vs naive recurrence
+# --------------------------------------------------------------------------
+
+def test_mamba_scan_matches_naive():
+    B, T, d_in, N = 2, 64, 8, 4
+    ks = jax.random.split(KEY, 3)
+    decay = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, d_in, N)))
+    inc = jax.random.normal(ks[1], (B, T, d_in, N)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, d_in, N))
+    for loops, chunk in (("scan", 16), ("unroll", 32)):
+        ys, h_last = mamba_mod._ssm_scan_chunked(decay, inc, h0, chunk=chunk,
+                                                 loops=loops)
+        h = h0
+        outs = []
+        for t in range(T):
+            h = decay[:, t] * h + inc[:, t]
+            outs.append(h)
+        ref = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref[:, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# MoE: capacity dispatch vs dense oracle (single shard)
+# --------------------------------------------------------------------------
+
+def _moe_cfg(cf):
+    return ModelConfig(
+        name="tm", family="moe", n_layers=1, d_model=32, n_heads=2, n_kv=2,
+        d_ff=64, vocab=64,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16, n_shared=1,
+                      capacity_factor=cf),
+        dtype="float32", param_dtype="float32")
+
+
+def test_moe_matches_dense_oracle():
+    cfg = _moe_cfg(cf=16.0)   # capacity >> load: nothing drops
+    p = moe_mod.moe_init(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    gates, idx, aux = moe_mod.route(cfg, p, x)
+    out = moe_mod.moe_apply(cfg, p, x, gates, idx, LOCAL)
+    ref = moe_mod.moe_dense_ref(cfg, p, x, gates, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1, drops happen but the output stays finite & close-ish."""
+    cfg = _moe_cfg(cf=1.0)
+    p = moe_mod.moe_init(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    gates, idx, _ = moe_mod.route(cfg, p, x)
+    out = moe_mod.moe_apply(cfg, p, x, gates, idx, LOCAL)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# --------------------------------------------------------------------------
+# decode consistency across families (prefill+decode == forward)
+# --------------------------------------------------------------------------
+
+def _decode_consistency(cfg, batch_full, S):
+    params = init_params(cfg, KEY)
+    logits_full, _, _ = forward(cfg, params, batch_full)
+    pre = {k: (v[:, :S - 1] if k == "tokens" else v)
+           for k, v in batch_full.items() if k != "targets"}
+    _, cache = prefill(cfg, params, pre)
+    cache = pad_attn_cache(cache, 1)
+    logits_step, _ = decode_step(cfg, params, cache,
+                                 batch_full["tokens"][:, S - 1],
+                                 jnp.int32(S - 1))
+    a = np.asarray(logits_full[:, -1])
+    b = np.asarray(logits_step[:, 0])
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 2e-4, err
+
+
+def test_decode_consistency_dense():
+    S = 16
+    toks = jax.random.randint(KEY, (2, S), 0, 256)
+    cfg = ModelConfig(name="t", family="dense", n_layers=3, d_model=64,
+                      n_heads=4, n_kv=2, d_ff=128, vocab=256, head_dim=16,
+                      qk_norm=True, dtype="float32", param_dtype="float32",
+                      attn_q_chunk=8, attn_kv_chunk=8)
+    _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
+
+
+def test_decode_consistency_hybrid_moe():
+    S = 16
+    toks = jax.random.randint(KEY, (2, S), 0, 256)
+    cfg = ModelConfig(name="tj", family="hybrid", n_layers=8, d_model=64,
+                      n_heads=4, n_kv=2, d_ff=128, vocab=256, head_dim=16,
+                      moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                                    every=2, capacity_factor=8.0),
+                      mamba=MambaConfig(d_state=8), attn_every=8,
+                      attn_offset=4, dtype="float32", param_dtype="float32",
+                      attn_q_chunk=8, attn_kv_chunk=8)
+    _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
+
+
+def test_decode_consistency_rwkv():
+    S = 16
+    toks = jax.random.randint(KEY, (2, S), 0, 256)
+    cfg = ModelConfig(name="tr", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv=4, d_ff=128, vocab=256, rwkv=True,
+                      rwkv_head_dim=16, dtype="float32",
+                      param_dtype="float32")
+    _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
+
+
+def test_decode_consistency_encdec():
+    S = 16
+    toks = jax.random.randint(KEY, (2, S), 0, 256)
+    cfg = ModelConfig(name="tw", family="encdec", n_layers=2, d_model=64,
+                      n_heads=4, n_kv=4, d_ff=128, vocab=256,
+                      encoder_layers=2, max_positions=64, norm="layernorm",
+                      act="gelu", dtype="float32", param_dtype="float32",
+                      attn_q_chunk=8, attn_kv_chunk=8)
+    batch = {"enc_embeds": jax.random.normal(KEY, (2, S, 64)),
+             "tokens": toks, "targets": toks}
+    _decode_consistency(cfg, batch, S)
+
+
+def test_generate_runs():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16,
+                      dtype="float32", param_dtype="float32")
+    params = init_params(cfg, KEY)
+    prompt = jax.random.randint(KEY, (2, 8), 0, 64)
+    out = generate(cfg, params, prompt, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert bool(jnp.all((out >= 0) & (out < 64)))
+
+
+def test_grad_flows_all_families():
+    S, toks = 16, jax.random.randint(KEY, (2, 16), 0, 128)
+    batch = {"tokens": toks, "targets": toks}
+    cfgs = [
+        ModelConfig(name="d", family="dense", n_layers=2, d_model=32,
+                    n_heads=2, n_kv=1, d_ff=64, vocab=128, head_dim=16,
+                    qk_norm=True, dtype="float32", param_dtype="float32",
+                    remat="full"),
+        ModelConfig(name="r", family="ssm", n_layers=2, d_model=32,
+                    n_heads=2, n_kv=2, d_ff=64, vocab=128, rwkv=True,
+                    rwkv_head_dim=16, dtype="float32", param_dtype="float32"),
+        ModelConfig(name="m", family="moe", n_layers=2, d_model=32,
+                    n_heads=2, n_kv=2, d_ff=64, vocab=128,
+                    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                                  first_k_dense=1, capacity_factor=4.0),
+                    dtype="float32", param_dtype="float32"),
+    ]
+    for cfg in cfgs:
+        params = init_params(cfg, KEY)
+        g = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+        gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                          for x in jax.tree_util.tree_leaves(g)))
+        assert bool(jnp.isfinite(gn)) and float(gn) > 0, cfg.name
