@@ -1,15 +1,22 @@
 """Allocator solve-time hillclimb measurements (§Perf, measured CPU wall):
 
   paper-faithful serial loop  ->  jit whole-game  (->  Pallas RM sweep on TPU)
+
+``--batch`` benchmarks the batched multi-scenario engine: B independent
+scenarios solved by one vmapped ``solve_distributed_batch`` program vs. a
+per-instance Python loop over the jitted single solver, reported in
+scenarios/sec.
 """
+import argparse
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import row, timed
-from repro.core import (sample_scenario, solve_centralized,
-                        solve_distributed, solve_distributed_python)
+from repro.core import (sample_scenario, solve_centralized, solve_distributed,
+                        solve_distributed_batch, solve_distributed_python,
+                        stack_scenarios)
 
 
 def run(sizes=(100, 500, 1000, 2000)):
@@ -25,5 +32,56 @@ def run(sizes=(100, 500, 1000, 2000)):
             f"centralized_s={t_cent:.5f};speedup={t_serial/t_jit:.0f}x")
 
 
+def run_batch(batch_sizes=(16, 64, 256), n=17, ragged=False, iters=3):
+    """Batched engine vs per-instance loop at each B; returns the speedups."""
+    speedups = {}
+    for B in batch_sizes:
+        ns = ([max(3, n - (i % 5) * (n // 5)) for i in range(B)]
+              if ragged else [n] * B)
+        scns = [sample_scenario(jax.random.PRNGKey(i), ni,
+                                capacity_factor=0.95)
+                for i, ni in enumerate(ns)]
+        batch = stack_scenarios(scns)
+
+        def loop():
+            # one dispatch of the jitted single-instance program per scenario
+            return [solve_distributed(s).total for s in scns]
+
+        t_loop = timed(loop, iters=iters)
+        t_batch = timed(lambda: solve_distributed_batch(batch).total,
+                        iters=iters)
+        sps_loop = B / t_loop
+        sps_batch = B / t_batch
+        speedups[B] = sps_batch / sps_loop
+        row(f"alloc_batch_B{B}_n{n}{'_ragged' if ragged else ''}", t_batch,
+            f"loop_s={t_loop:.4f};batch_s={t_batch:.5f};"
+            f"loop_sps={sps_loop:.0f};batch_sps={sps_batch:.0f};"
+            f"speedup={speedups[B]:.1f}x")
+    return speedups
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", action="store_true",
+                    help="benchmark the batched multi-scenario engine")
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[16, 64, 256])
+    ap.add_argument("--n", type=int, default=17, help="classes per scenario")
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary class counts across the batch")
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[100, 500, 1000, 2000],
+                    help="per-instance mode: class counts to sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI smoke: tiny sweep, 1 timing iter")
+    args = ap.parse_args(argv)
+
+    if args.batch:
+        bs = [16] if args.smoke else args.batch_sizes
+        run_batch(bs, n=args.n, ragged=args.ragged,
+                  iters=1 if args.smoke else 3)
+    else:
+        run([100] if args.smoke else tuple(args.sizes))
+
+
 if __name__ == "__main__":
-    run()
+    main()

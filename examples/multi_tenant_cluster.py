@@ -11,7 +11,7 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.cluster import FleetSimulator, TenantSpec
+from repro.cluster import FleetSimulator, TenantSpec, epoch_batch
 
 # (compute_s, collective_s, overhead_s) per job at 256 chips — taken from the
 # dry-run roofline table (fallbacks if the sweep hasn't been run)
@@ -65,6 +65,15 @@ def main():
     # capacity restored
     alloc = fleet.restore_nodes(300)
     show("epoch 3: capacity restored", alloc)
+
+    # multi-fleet epoch: three regional fleets (different sizes / tenant
+    # mixes) solved as ONE batched GNEP program — each fleet is a lane.
+    fleets = [fleet,
+              FleetSimulator(total_chips=600, tenants=TENANTS[:3]),
+              FleetSimulator(total_chips=1400, tenants=TENANTS[1:])]
+    allocs = epoch_batch(fleets, profiles=[None, FALLBACK, FALLBACK])
+    for i, alloc in enumerate(allocs):
+        show(f"epoch 4, fleet {i} (batched multi-fleet solve)", alloc)
 
 
 if __name__ == "__main__":

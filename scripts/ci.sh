@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification + fast allocator benchmark smoke.
+#
+#   scripts/ci.sh          # full tier-1 suite + batched-engine smoke
+#   scripts/ci.sh --fast   # skip the slow end-to-end model tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow")
+fi
+
+echo "== tier-1 tests =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== allocator benchmark smoke (batched engine) =="
+PYTHONPATH=src python -m benchmarks.allocator_perf --batch --smoke
+PYTHONPATH=src python -m benchmarks.allocator_perf --smoke

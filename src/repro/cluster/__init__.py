@@ -1,3 +1,4 @@
-from repro.cluster.fleet import FleetSimulator, TenantSpec
+from repro.cluster.fleet import (Allocation, FleetSimulator, TenantSpec,
+                                 epoch_batch)
 
-__all__ = ["FleetSimulator", "TenantSpec"]
+__all__ = ["Allocation", "FleetSimulator", "TenantSpec", "epoch_batch"]

@@ -20,11 +20,12 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import Scenario, from_roofline, round_solution, solve
+from repro.core import (Scenario, from_roofline, round_solution, solve,
+                        solve_batch, stack_scenarios)
 from repro.utils import fdtype
 
 
@@ -103,18 +104,9 @@ class FleetSimulator:
         profiles = getattr(self, "_profiles", None)
         scn = self.scenario(profiles=profiles)
         res = solve(scn, method=method)
-        it = res.integer
-        chips, hmap, meshes = {}, {}, {}
-        for i, t in enumerate(self.tenants):
-            c = int(it.r[i])
-            chips[t.name] = c
-            hmap[t.name] = int(it.h[i])
-            meshes[t.name] = self.mesh_plan(c, t.tp_required)
-        alloc = Allocation(chips=chips, h=hmap, meshes=meshes,
-                           total_cost=float(it.total), method=method,
-                           iters=res.iters)
-        self.history.append(alloc)
-        return alloc
+        return self._allocation_from_integer(res.integer,
+                                             n=len(self.tenants),
+                                             iters=res.iters, method=method)
 
     @staticmethod
     def mesh_plan(chips: int, tp: int) -> tuple:
@@ -142,3 +134,54 @@ class FleetSimulator:
             if t.name == tenant_name:
                 t.straggler_factor = factor
         return self.epoch(method=method)
+
+    def _allocation_from_integer(self, it, n: int, iters: int,
+                                 method: str) -> Allocation:
+        """Build an Allocation record from (possibly batched-lane) integer
+        solution arrays trimmed to this fleet's n tenants."""
+        chips, hmap, meshes = {}, {}, {}
+        for i, t in enumerate(self.tenants[:n]):
+            c = int(it.r[i])
+            chips[t.name] = c
+            hmap[t.name] = int(it.h[i])
+            meshes[t.name] = self.mesh_plan(c, t.tp_required)
+        alloc = Allocation(chips=chips, h=hmap, meshes=meshes,
+                           total_cost=float(it.total), method=method,
+                           iters=iters)
+        self.history.append(alloc)
+        return alloc
+
+
+def epoch_batch(fleets: Sequence[FleetSimulator], *,
+                profiles: Optional[Sequence[Optional[dict]]] = None,
+                eps_bar: float = 0.03, lam: float = 0.05,
+                max_iters: int = 200, sweep_fn=None) -> List[Allocation]:
+    """One allocator epoch for MANY fleets: every fleet's RM/CM game is a lane
+    of one batched GNEP solve (ragged tenant counts pad to n_max), then one
+    vectorized Algorithm 4.2 rounding pass.  This is the multi-cluster analog
+    of the paper's hourly re-solve: a fleet operator runs thousands of
+    clusters / what-if probes per epoch without B separate XLA dispatches.
+
+    ``profiles``: optional per-fleet profile dicts (same semantics as
+    ``FleetSimulator.epoch(profiles=...)``, remembered for later epochs);
+    fleets without one fall back to their stored profiles or the dry-run
+    roofline files.
+
+    Appends the resulting Allocation to each fleet's history and returns the
+    per-fleet list, in input order.
+    """
+    if profiles is not None:
+        for f, p in zip(fleets, profiles):
+            if p is not None:
+                f._profiles = p
+    scns = [f.scenario(profiles=getattr(f, "_profiles", None)) for f in fleets]
+    batch = stack_scenarios(scns)
+    res = solve_batch(batch, "distributed", eps_bar=eps_bar, lam=lam,
+                      max_iters=max_iters, sweep_fn=sweep_fn)
+    allocs = []
+    for b, f in enumerate(fleets):
+        inst = res.instance(b)
+        allocs.append(f._allocation_from_integer(
+            inst.integer, n=int(res.n_classes[b]), iters=inst.iters,
+            method="distributed-batch"))
+    return allocs

@@ -1,18 +1,24 @@
 """The paper's contribution: GNEP-based runtime capacity allocation."""
-from repro.core.allocator import AllocationResult, InfeasibleError, solve
+from repro.core.allocator import (AllocationResult, BatchAllocationResult,
+                                  InfeasibleError, solve, solve_batch)
 from repro.core.centralized import kkt_residual, objective_of_r, solve_centralized
-from repro.core.game import (cm_best_response, distributed_walltime_estimate,
-                             rm_solve, solve_distributed,
+from repro.core.game import (cm_best_response, cm_bid_update,
+                             distributed_walltime_estimate, rm_solve,
+                             solve_distributed, solve_distributed_batch,
                              solve_distributed_python)
 from repro.core.profiles import from_roofline, sample_scenario
-from repro.core.rounding import IntegerSolution, round_solution
-from repro.core.types import Scenario, Solution, deadline_lhs, derive, objective
+from repro.core.rounding import (IntegerSolution, round_solution,
+                                 round_solution_batch)
+from repro.core.types import (Scenario, ScenarioBatch, Solution, deadline_lhs,
+                              derive, objective, pad_scenario, stack_scenarios)
 
 __all__ = [
-    "AllocationResult", "InfeasibleError", "IntegerSolution", "Scenario",
-    "Solution", "cm_best_response", "deadline_lhs", "derive",
+    "AllocationResult", "BatchAllocationResult", "InfeasibleError",
+    "IntegerSolution", "Scenario", "ScenarioBatch", "Solution",
+    "cm_best_response", "cm_bid_update", "deadline_lhs", "derive",
     "distributed_walltime_estimate", "from_roofline", "kkt_residual",
-    "objective", "objective_of_r", "rm_solve", "round_solution",
-    "sample_scenario", "solve", "solve_centralized", "solve_distributed",
-    "solve_distributed_python",
+    "objective", "objective_of_r", "pad_scenario", "rm_solve",
+    "round_solution", "round_solution_batch", "sample_scenario", "solve",
+    "solve_batch", "solve_centralized", "solve_distributed",
+    "solve_distributed_batch", "solve_distributed_python", "stack_scenarios",
 ]

@@ -1,15 +1,24 @@
-"""High-level allocator facade: solve + round, centralized or distributed."""
+"""High-level allocator facade: solve + round, centralized or distributed.
+
+Single-instance (`solve`) and batched (`solve_batch`) entry points share the
+same pipeline: fractional GNEP solve (Algorithm 4.1) -> integer rounding
+(Algorithm 4.2).  The batched path runs B scenarios as one XLA program and
+one vectorized rounding pass.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import game
 from repro.core.centralized import solve_centralized
-from repro.core.rounding import IntegerSolution, round_solution
-from repro.core.types import Scenario, Solution
+from repro.core.rounding import (IntegerSolution, round_solution,
+                                 round_solution_batch)
+from repro.core.types import (Scenario, ScenarioBatch, Solution,
+                              stack_scenarios)
 
 
 @dataclass
@@ -62,3 +71,84 @@ def solve(scn: Scenario, method: str = "distributed", *, eps_bar: float = 0.03,
 
 class InfeasibleError(RuntimeError):
     """Deadlines/SLAs cannot be met with the available capacity."""
+
+
+@dataclass
+class BatchAllocationResult:
+    """Result of one batched solve: every leaf carries a leading B dim.
+
+    Per-class arrays are (B, n_max) with padded classes identically zero;
+    ``instance(b)`` trims lane b back to a single-instance
+    :class:`AllocationResult`.
+    """
+    method: str
+    fractional: Solution                 # batched Solution
+    integer: Optional[IntegerSolution]   # batched IntegerSolution
+    mask: jnp.ndarray                    # (B, n_max)
+    n_classes: jnp.ndarray               # (B,)
+    iters: jnp.ndarray                   # (B,)
+    feasible: jnp.ndarray                # (B,)
+
+    @property
+    def batch_size(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def r(self):
+        return self.integer.r if self.integer is not None else self.fractional.r
+
+    @property
+    def total(self):
+        return (self.integer.total if self.integer is not None
+                else self.fractional.total)
+
+    def instance(self, b: int) -> AllocationResult:
+        n = int(self.n_classes[b])
+
+        def pick(leaf):
+            leaf = leaf[b]
+            return leaf[:n] if getattr(leaf, "ndim", 0) else leaf
+
+        frac = jax.tree_util.tree_map(pick, self.fractional)
+        integ = (jax.tree_util.tree_map(pick, self.integer)
+                 if self.integer is not None else None)
+        return AllocationResult(method=self.method, fractional=frac,
+                                integer=integ, iters=int(self.iters[b]))
+
+
+def solve_batch(batch: Union[ScenarioBatch, Sequence[Scenario]],
+                method: str = "distributed", *, eps_bar: float = 0.03,
+                lam: float = 0.05, max_iters: int = 200, integer: bool = True,
+                sweep_fn=None,
+                check_feasible: bool = True) -> BatchAllocationResult:
+    """Solve B independent allocation instances as one batched program.
+
+    ``batch`` may be a prepared :class:`ScenarioBatch` or a plain list of
+    (possibly ragged) Scenarios, which is stacked/padded here.  Only the
+    distributed GNEP method is batched; Algorithm 4.2 rounding is applied
+    lane-wise in one vmapped pass.  ``sweep_fn`` forwards a *batched* RM
+    sweep (the Pallas kernel) to ``solve_distributed_batch``.
+
+    With ``check_feasible=True`` (default) an :class:`InfeasibleError` names
+    every infeasible lane; pass False to get per-lane ``feasible`` flags
+    instead (what-if sweeps legitimately probe infeasible capacity points).
+    """
+    if not isinstance(batch, ScenarioBatch):
+        batch = stack_scenarios(batch)
+    if method != "distributed":
+        raise ValueError(
+            f"solve_batch supports method='distributed' only, got {method!r}")
+
+    sol = game.solve_distributed_batch(batch, eps_bar=eps_bar, lam=lam,
+                                       max_iters=max_iters, sweep_fn=sweep_fn)
+    if check_feasible and not bool(jnp.all(sol.feasible)):
+        bad = [int(b) for b in jnp.nonzero(~sol.feasible)[0]]
+        raise InfeasibleError(f"instances {bad} infeasible: "
+                              "sum(r_low) > R or some E_i >= 0")
+
+    integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR, sol.psi)
+                   if integer else None)
+    return BatchAllocationResult(method=method, fractional=sol,
+                                 integer=integer_sol, mask=batch.mask,
+                                 n_classes=batch.n_classes, iters=sol.iters,
+                                 feasible=sol.feasible)

@@ -34,48 +34,77 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import Scenario, Solution
+from repro.core.types import Scenario, ScenarioBatch, Solution
 
 # --------------------------------------------------------------------------
 # Resource Manager — problem (P5)
 # --------------------------------------------------------------------------
+#
+# The exact sweep is split into candidates -> fill -> pick so the batched
+# solver can route the O(Nc x N) fill of ALL instances through one Pallas
+# kernel launch while the cheap prep/pick stages stay vmapped jnp.
 
 
-def rm_solve(scn: Scenario, bids: jnp.ndarray, *, sweep_fn=None):
-    """Exact solution of (P5) given CM bids. Returns (rho, r, objective).
+def _rm_candidates(scn: Scenario, bids: jnp.ndarray, mask):
+    """Candidate prices + greedy-order increments for the (P5) sweep.
 
-    ``sweep_fn(inc_sorted_cand, spare)``: optional override of the candidate
-    sweep inner loop (the Pallas kernel plugs in here).
+    ``mask`` flags valid classes; padded classes bid rho_bar (a candidate that
+    is always present anyway) and expose zero increment, so they are inert.
     """
+    bids_eff = jnp.where(mask, bids, scn.rho_bar)
+    p_eff = jnp.where(mask, scn.p, 0.0)
     # Candidate prices: all bids + the interval ends [rho_bar, rho_hat] (P5e).
-    cand = jnp.concatenate([bids, jnp.stack([scn.rho_bar, scn.rho_hat])])
+    cand = jnp.concatenate([bids_eff, jnp.stack([scn.rho_bar, scn.rho_hat])])
     # y_i = 1 when CM i bids at least the price (free at equality; choosing 1
     # can only enlarge the feasible box, hence is optimal).
-    y = bids[None, :] >= cand[:, None]                          # (Nc, N)
+    y = (bids_eff[None, :] >= cand[:, None]) & mask[None, :]    # (Nc, N)
 
-    # Greedy fill order: p descending (fixed across candidates).
-    order = jnp.argsort(-scn.p)
-    inc_max = (scn.r_up - scn.r_low)[order]                     # (N,)
-    inc = jnp.where(y[:, order], inc_max[None, :], 0.0)         # (Nc, N)
-    spare = scn.R - jnp.sum(scn.r_low)
+    # Greedy fill order: p descending (fixed across candidates).  Valid
+    # classes keep their relative order (argsort is stable, padded p = 0).
+    order = jnp.argsort(-p_eff)
+    inc_max = jnp.where(mask, scn.r_up - scn.r_low, 0.0)[order]  # (N,)
+    inc = jnp.where(y[:, order], inc_max[None, :], 0.0)          # (Nc, N)
+    spare = scn.R - jnp.sum(jnp.where(mask, scn.r_low, 0.0))
+    return cand, inc, spare, p_eff[order], order
+
+
+def _rm_pick(scn: Scenario, cand, fill, sum_fill, p_fill, order, mask):
+    """Choose the best candidate row and undo the greedy permutation."""
+    p_eff = jnp.where(mask, scn.p, 0.0)
+    r_low = jnp.where(mask, scn.r_low, 0.0)
+    sum_r = jnp.sum(r_low) + sum_fill
+    p_r = jnp.sum(p_eff * r_low) + p_fill
+    obj = (cand - scn.rho_bar) * sum_r + p_r \
+        - jnp.sum(p_eff * jnp.where(mask, scn.r_up, 0.0))
+
+    best = jnp.argmax(obj)
+    rho = cand[best]
+    inv = jnp.argsort(order)
+    r = r_low + (fill[best])[inv]
+    return rho, r, obj[best]
+
+
+def rm_solve(scn: Scenario, bids: jnp.ndarray, *, mask=None, sweep_fn=None):
+    """Exact solution of (P5) given CM bids. Returns (rho, r, objective).
+
+    ``mask``: optional (N,) validity mask — padded classes (mask False) never
+    receive capacity and never contribute a candidate price.
+    ``sweep_fn(inc_sorted_cand, spare, p_sorted)``: optional override of the
+    candidate sweep inner loop (the Pallas kernel plugs in here).
+    """
+    if mask is None:
+        mask = jnp.ones(bids.shape, bool)
+    cand, inc, spare, p_sorted, order = _rm_candidates(scn, bids, mask)
 
     if sweep_fn is None:
         cum = jnp.cumsum(inc, axis=1)
         fill = jnp.clip(spare - (cum - inc), 0.0, inc)          # (Nc, N)
         sum_fill = jnp.sum(fill, axis=1)
-        p_fill = fill @ scn.p[order]
+        p_fill = fill @ p_sorted
     else:
-        fill, sum_fill, p_fill = sweep_fn(inc, spare, scn.p[order])
+        fill, sum_fill, p_fill = sweep_fn(inc, spare, p_sorted)
 
-    sum_r = jnp.sum(scn.r_low) + sum_fill
-    p_r = jnp.sum(scn.p * scn.r_low) + p_fill
-    obj = (cand - scn.rho_bar) * sum_r + p_r - jnp.sum(scn.p * scn.r_up)
-
-    best = jnp.argmax(obj)
-    rho = cand[best]
-    inv = jnp.argsort(order)
-    r = scn.r_low + (fill[best])[inv]
-    return rho, r, obj[best]
+    return _rm_pick(scn, cand, fill, sum_fill, p_fill, order, mask)
 
 
 # --------------------------------------------------------------------------
@@ -83,18 +112,31 @@ def rm_solve(scn: Scenario, bids: jnp.ndarray, *, sweep_fn=None):
 # --------------------------------------------------------------------------
 
 
-def cm_best_response(scn: Scenario, r: jnp.ndarray):
-    """Closed-form optimum of each CM's (P4) given its allocation r_i."""
-    sM = scn.xiM * r
-    sR = scn.xiR * r
-    psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
+def cm_best_response(scn: Scenario, r: jnp.ndarray, *, mask=None):
+    """Closed-form optimum of each CM's (P4) given its allocation r_i.
+
+    With a ``mask``, padded classes (r = 0) get psi = psi_low (never
+    "rejecting") and zero slots instead of the 0-division garbage.
+    """
+    if mask is None:
+        sM = scn.xiM * r
+        sR = scn.xiR * r
+        psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
+        return psi, sM, sR
+    r_safe = jnp.where(r > 0, r, 1.0)
+    psi = jnp.clip(scn.K / r_safe, scn.psi_low, scn.psi_up)
+    psi = jnp.where(mask, psi, scn.psi_low)
+    sM = jnp.where(mask, scn.xiM * r, 0.0)
+    sR = jnp.where(mask, scn.xiR * r, 0.0)
     return psi, sM, sR
 
 
-def cm_bid_update(scn: Scenario, bids, rho, psi, lam: float):
+def cm_bid_update(scn: Scenario, bids, rho, psi, lam: float, *, mask=None):
     """Alg. 4.1 lines 11-13: rejecting CMs escalate their bid by lam*rho_up,
     clipped to the (P4b) box [rho_bar, rho_up]."""
     rejecting = psi > scn.psi_low * (1.0 + 1e-9)
+    if mask is not None:
+        rejecting = rejecting & mask
     raised = jnp.minimum(jnp.maximum(bids, rho) + lam * scn.rho_up, scn.rho_up)
     return jnp.where(rejecting, raised, bids)
 
@@ -139,6 +181,108 @@ def solve_distributed(scn: Scenario, *, eps_bar: float = 0.03,
     return Solution(r=final.r, psi=psi, sM=sM, sR=sR, cost=cost,
                     penalty=penalty, total=cost + penalty, feasible=feasible,
                     iters=final.it, aux=final.rho)
+
+
+# --------------------------------------------------------------------------
+# Batched Algorithm 4.1 — B scenarios as ONE vmapped while_loop XLA program
+# --------------------------------------------------------------------------
+
+
+class BatchGameState(NamedTuple):
+    r: jnp.ndarray          # (B, n_max)
+    bids: jnp.ndarray       # (B, n_max)
+    rho: jnp.ndarray        # (B,)
+    active: jnp.ndarray     # (B,) bool — lane still iterating
+    lane_iters: jnp.ndarray  # (B,) per-instance iteration count
+    it: jnp.ndarray         # global loop counter
+
+
+def _lane_eps(r_new, r_old, mask):
+    """Alg. 4.1 convergence metric, restricted to valid classes."""
+    rel = jnp.abs(r_new - r_old) / jnp.where(r_old > 0, r_old, 1.0)
+    return jnp.sum(jnp.where(mask, rel, 0.0))
+
+
+@partial(jax.jit, static_argnames=("max_iters", "sweep_fn"))
+def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
+                            lam: float = 0.05, max_iters: int = 200,
+                            sweep_fn=None) -> Solution:
+    """Algorithm 4.1 for B stacked scenarios as a single XLA program.
+
+    One ``while_loop`` drives all lanes; converged lanes are frozen by
+    masking (their state stops updating, their iteration counter stops) so
+    every lane reproduces its single-instance ``solve_distributed`` trajectory
+    bit-for-bit while the loop keeps running for the stragglers.  The loop
+    exits when every lane has converged (per-instance early exit).
+
+    ``sweep_fn``: optional *batched* RM sweep override taking
+    ``(inc (B, Nc, N), spare (B,), p_sorted (B, N))`` — the batched Pallas
+    kernel (``repro.kernels.gnep_sweep.ops.make_batched_sweep_fn``) plugs in
+    here so the price sweep of all B scenarios is one kernel launch.
+
+    Returns a :class:`Solution` whose leaves carry a leading batch dim:
+    r/psi/sM/sR are (B, n_max) with padded classes identically zero, scalars
+    (cost, penalty, total, feasible, iters, aux=rho) are (B,).
+    """
+    scns, mask = batch.scenarios, batch.mask
+    dt = scns.A.dtype
+    B = batch.batch_size
+
+    feasible = jax.vmap(
+        lambda s, m: (jnp.sum(jnp.where(m, s.r_low, 0.0)) <= s.R)
+        & jnp.all(jnp.where(m, s.E < 0, True)))(scns, mask)
+
+    if sweep_fn is None:
+        def rm_batch(bids):
+            return jax.vmap(lambda s, b, m: rm_solve(s, b, mask=m)
+                            )(scns, bids, mask)
+    else:
+        # prep/pick stay vmapped; the O(B x Nc x N) fill is one batched call.
+        def rm_batch(bids):
+            cand, inc, spare, p_sorted, order = jax.vmap(_rm_candidates)(
+                scns, bids, mask)
+            fill, sum_fill, p_fill = sweep_fn(inc, spare, p_sorted)
+            return jax.vmap(_rm_pick)(scns, cand, fill.astype(dt),
+                                      sum_fill.astype(dt), p_fill.astype(dt),
+                                      order, mask)
+
+    def cond(s: BatchGameState):
+        return jnp.any(s.active) & (s.it < max_iters)
+
+    def body(s: BatchGameState):
+        rho, r_new, _ = rm_batch(s.bids)
+        psi, _, _ = jax.vmap(lambda scn, r, m: cm_best_response(scn, r, mask=m)
+                             )(scns, r_new, mask)
+        bids_new = jax.vmap(
+            lambda scn, b, rh, ps, m: cm_bid_update(scn, b, rh, ps, lam,
+                                                    mask=m)
+        )(scns, s.bids, rho, psi, mask)
+        eps = jax.vmap(_lane_eps)(r_new, s.r, mask)
+
+        act = s.active
+        keep = act[:, None]
+        return BatchGameState(
+            r=jnp.where(keep, r_new, s.r),
+            bids=jnp.where(keep, bids_new, s.bids),
+            rho=jnp.where(act, rho, s.rho),
+            active=act & (eps >= eps_bar),
+            lane_iters=s.lane_iters + act.astype(s.lane_iters.dtype),
+            it=s.it + 1)
+
+    r0 = jnp.where(mask, scns.r_low, 0.0)
+    init = BatchGameState(
+        r=r0, bids=jnp.broadcast_to(scns.rho_bar[:, None], r0.shape).astype(dt),
+        rho=scns.rho_bar.astype(dt), active=jnp.ones((B,), bool),
+        lane_iters=jnp.zeros((B,), jnp.int32), it=jnp.asarray(0))
+    final = jax.lax.while_loop(cond, body, init)
+
+    psi, sM, sR = jax.vmap(lambda scn, r, m: cm_best_response(scn, r, mask=m)
+                           )(scns, final.r, mask)
+    cost = scns.rho_bar * jnp.sum(final.r, axis=1)
+    pen = jnp.sum(jnp.where(mask, scns.alpha * psi - scns.beta, 0.0), axis=1)
+    return Solution(r=final.r, psi=psi, sM=sM, sR=sR, cost=cost,
+                    penalty=pen, total=cost + pen, feasible=feasible,
+                    iters=final.lane_iters, aux=final.rho)
 
 
 # --------------------------------------------------------------------------

@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Scenario
+from repro.core.types import Scenario, ScenarioBatch
 
 
 class IntegerSolution(NamedTuple):
@@ -34,48 +34,73 @@ class IntegerSolution(NamedTuple):
 
 
 def round_solution(scn: Scenario, r_hat, sM_hat, sR_hat, psi_hat=None,
-                   max_slot_iters: int = 8) -> IntegerSolution:
+                   max_slot_iters: int = 8, mask=None) -> IntegerSolution:
     """Vectorized Algorithm 4.2; returns an integer-feasible allocation.
 
     Per the paper (Sec. 4.5) the rounded solution is feasible w.r.t. all
     constraints *except* the approximate deadline formula (P4d): admission h
     is kept at the continuous optimum (rounded to the nearest integer in the
     SLA box), it is NOT re-tightened against the rounded slots.
+
+    ``mask``: optional (N,) validity mask for padded batch lanes.  Padded
+    classes keep r = sM = sR = h = 0, sort after every valid class in the
+    alpha order (they can never absorb a capacity decrement), and contribute
+    nothing to cost or penalty.
     """
     dt = r_hat.dtype
+    valid = jnp.ones(r_hat.shape, bool) if mask is None else mask
+    vf = valid.astype(dt)
 
     # ---- lines 1-7: capacity-feasible integer r -----------------------------
-    r = jnp.ceil(r_hat)
+    r = jnp.ceil(r_hat) * vf
     overshoot = jnp.maximum(jnp.sum(r) - jnp.floor(scn.R), 0.0)
-    order = jnp.argsort(scn.alpha)               # increasing alpha
+    alpha_eff = jnp.where(valid, scn.alpha, jnp.inf)
+    order = jnp.argsort(alpha_eff)               # increasing alpha
     rank = jnp.argsort(order).astype(dt)         # rank[i] = position of i
-    r = r - (rank < overshoot).astype(dt)
+    r = r - ((rank < overshoot) & valid).astype(dt)
 
     # ---- lines 8-17: slot rounding ------------------------------------------
-    sM = jnp.ceil(sM_hat)
-    sR = jnp.ceil(sR_hat)
+    sM = jnp.ceil(sM_hat) * vf
+    sR = jnp.ceil(sR_hat) * vf
 
     def body(_, sMsR):
         sM, sR = sMsR
-        viol = sM / scn.cM + sR / scn.cR > r
+        viol = (sM / scn.cM + sR / scn.cR > r) & valid
         sR = sR - viol.astype(dt)                          # line 12
         viol2 = sM / scn.cM + sR / scn.cR > r              # line 13
         sM = sM - (viol & viol2).astype(dt)                # line 14
         return sM, sR
 
     sM, sR = jax.lax.fori_loop(0, max_slot_iters, body, (sM, sR))
-    sM = jnp.maximum(sM, 1.0)
-    sR = jnp.maximum(sR, 1.0)
+    sM = jnp.maximum(sM, 1.0) * vf
+    sR = jnp.maximum(sR, 1.0) * vf
 
     # ---- integer admission ---------------------------------------------------
     # (P4d) is approximate and relaxed during rounding (paper Sec. 4.5):
     # round the continuous concurrency to the nearest integer in the SLA box.
     if psi_hat is None:
-        psi_hat = jnp.clip(scn.K / r_hat, scn.psi_low, scn.psi_up)
-    h = jnp.clip(jnp.round(1.0 / psi_hat), scn.H_low, scn.H_up)
-    psi = 1.0 / h
+        r_safe = jnp.where(r_hat > 0, r_hat, 1.0)
+        psi_hat = jnp.clip(scn.K / r_safe, scn.psi_low, scn.psi_up)
+    h = jnp.clip(jnp.round(1.0 / psi_hat), scn.H_low, scn.H_up) * vf
+    psi = jnp.where(valid, 1.0 / jnp.where(h > 0, h, 1.0), 1.0)
 
     cost = scn.rho_bar * jnp.sum(r)
-    penalty = jnp.sum(scn.alpha * psi - scn.beta)
+    penalty = jnp.sum(jnp.where(valid, scn.alpha * psi - scn.beta, 0.0))
     return IntegerSolution(r=r, sM=sM, sR=sR, h=h, psi=psi, cost=cost,
                            penalty=penalty, total=cost + penalty)
+
+
+def round_solution_batch(batch: ScenarioBatch, r_hat, sM_hat, sR_hat,
+                         psi_hat=None,
+                         max_slot_iters: int = 8) -> IntegerSolution:
+    """Algorithm 4.2 vmapped over a ScenarioBatch (leaves gain a B dim)."""
+    def one(scn, r, sM, sR, psi, m):
+        return round_solution(scn, r, sM, sR, psi,
+                              max_slot_iters=max_slot_iters, mask=m)
+
+    if psi_hat is None:
+        psi_hat = jnp.clip(batch.scenarios.K /
+                           jnp.where(r_hat > 0, r_hat, 1.0),
+                           batch.scenarios.psi_low, batch.scenarios.psi_up)
+    return jax.vmap(one)(batch.scenarios, r_hat, sM_hat, sR_hat, psi_hat,
+                         batch.mask)

@@ -91,6 +91,84 @@ def derive(A, B, E, cM, cR, H_up, H_low, m, rho_up, R, rho_bar) -> Scenario:
 
 @_register
 @dataclass
+class ScenarioBatch:
+    """B independent allocation instances stacked for one vmapped solve.
+
+    ``scenarios`` is a :class:`Scenario` whose per-class leaves are (B, n_max)
+    and whose scalars are (B,).  Instances with fewer than ``n_max`` classes
+    are padded with *neutral* classes (``r_low = r_up = p = alpha = beta = 0``)
+    and flagged invalid in ``mask`` so every mask-aware solver step is an
+    exact no-op on them: a padded class never receives capacity, never bids,
+    and contributes nothing to cost, penalty or the convergence metric.
+    """
+    scenarios: Scenario     # stacked leaves: (B, n_max) per class, (B,) scalars
+    mask: jnp.ndarray       # (B, n_max) bool — True where the class is real
+    n_classes: jnp.ndarray  # (B,) int — number of valid classes per instance
+
+    @property
+    def batch_size(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.mask.shape[1]
+
+    def instance(self, b: int) -> Scenario:
+        """Recover the b-th (unpadded) single-instance Scenario."""
+        n = int(self.n_classes[b])
+
+        def pick(leaf):
+            leaf = leaf[b]
+            return leaf[:n] if leaf.ndim else leaf
+
+        return jax.tree_util.tree_map(pick, self.scenarios)
+
+
+def pad_scenario(scn: Scenario, n_max: int) -> Scenario:
+    """Pad per-class arrays of ``scn`` to ``n_max`` with neutral classes.
+
+    Neutral values keep every solver formula finite and inert for padded
+    slots: zero allocation bounds / prices / penalties, unit work profile.
+    """
+    n = scn.n
+    if n > n_max:
+        raise ValueError(f"scenario has {n} classes > n_max={n_max}")
+    pad = n_max - n
+    dt = scn.A.dtype
+    neutral = {
+        "A": 1.0, "B": 1.0, "E": -1.0, "cM": 1.0, "cR": 1.0,
+        "H_up": 1.0, "H_low": 1.0, "m": 0.0, "rho_up": float(scn.rho_bar),
+        "psi_low": 1.0, "psi_up": 1.0, "alpha": 0.0, "beta": 0.0,
+        "xiM": 1.0, "xiR": 1.0, "K": 1.0, "r_up": 0.0, "r_low": 0.0,
+        "p": 0.0,
+    }
+    kw = {}
+    for f in dataclasses.fields(Scenario):
+        leaf = getattr(scn, f.name)
+        if f.name in neutral and leaf.ndim == 1:
+            kw[f.name] = jnp.pad(leaf, (0, pad),
+                                 constant_values=neutral[f.name]).astype(dt)
+        else:
+            kw[f.name] = leaf
+    return Scenario(**kw)
+
+
+def stack_scenarios(scns, n_max: int | None = None) -> ScenarioBatch:
+    """Stack a list of (possibly ragged) Scenarios into a ScenarioBatch."""
+    scns = list(scns)
+    if not scns:
+        raise ValueError("stack_scenarios needs at least one scenario")
+    ns = [s.n for s in scns]
+    n_max = max(ns) if n_max is None else n_max
+    padded = [pad_scenario(s, n_max) for s in scns]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    mask = jnp.arange(n_max)[None, :] < jnp.asarray(ns)[:, None]
+    return ScenarioBatch(scenarios=stacked, mask=mask,
+                         n_classes=jnp.asarray(ns))
+
+
+@_register
+@dataclass
 class Solution:
     """A (possibly fractional) solution of the allocation problem."""
     r: jnp.ndarray       # chips per class

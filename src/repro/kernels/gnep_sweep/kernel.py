@@ -7,6 +7,11 @@ cumulative fill is VMEM scratch carried across the sequential class axis, so
 each (BC, BN) tile does a cumsum + clip on the VPU with one pass over HBM.
 
 Grid: (Nc/BC, N/BN) with the class axis sequential.
+
+``rm_sweep_batched`` extends the grid to (B, Nc/BC, N/BN) so the price sweep
+of a whole ScenarioBatch is ONE kernel launch: batch and candidate axes are
+parallel, the class axis stays sequential per (batch, candidate-tile) and
+carries the same VMEM running-sum scratch.
 """
 from __future__ import annotations
 
@@ -104,3 +109,87 @@ def rm_sweep(inc, spare, p_sorted, *, block_c=128, block_n=512,
         **kwargs,
     )(inc_p, spare_arr, p_p)
     return fill[:Nc, :N], sumf[:Nc], pf[:Nc]
+
+
+def _kernel_batched(inc_ref, spare_ref, p_ref, fill_ref, sumf_ref, pf_ref,
+                    cum_scr, sacc_scr, pacc_scr, *, n_blocks):
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        cum_scr[...] = jnp.zeros_like(cum_scr)
+        sacc_scr[...] = jnp.zeros_like(sacc_scr)
+        pacc_scr[...] = jnp.zeros_like(pacc_scr)
+
+    inc = inc_ref[0].astype(jnp.float32)              # (BC, BN)
+    spare = spare_ref[0, 0]                           # this batch lane's slack
+    pv = p_ref[0].astype(jnp.float32)                 # (BN,)
+
+    cum_in = cum_scr[...]                             # (BC,)
+    local_cum = jnp.cumsum(inc, axis=1)
+    before = cum_in[:, None] + local_cum - inc        # filled before each cls
+    fill = jnp.clip(spare - before, 0.0, inc)
+    fill_ref[0] = fill.astype(fill_ref.dtype)
+
+    cum_scr[...] = cum_in + local_cum[:, -1]
+    sacc_scr[...] = sacc_scr[...] + jnp.sum(fill, axis=1)
+    pacc_scr[...] = pacc_scr[...] + fill @ pv
+
+    @pl.when(ji == n_blocks - 1)
+    def _final():
+        sumf_ref[0] = sacc_scr[...].astype(sumf_ref.dtype)
+        pf_ref[0] = pacc_scr[...].astype(pf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n",
+                                             "interpret"))
+def rm_sweep_batched(inc, spare, p_sorted, *, block_c=128, block_n=512,
+                     interpret=False):
+    """Batched RM price sweep: B instances in one kernel launch.
+
+    inc: (B, Nc, N) f32; spare: (B,); p_sorted: (B, N).
+    Returns (fill (B, Nc, N), sum_fill (B, Nc), p_fill (B, Nc))."""
+    B, Nc, N = inc.shape
+    block_c = min(block_c, Nc)
+    block_n = min(block_n, N)
+    # pad to tile multiples (padding classes have inc=0 -> no effect)
+    pc = (-Nc) % block_c
+    pn = (-N) % block_n
+    inc_p = jnp.pad(inc, ((0, 0), (0, pc), (0, pn)))
+    p_p = jnp.pad(p_sorted, ((0, 0), (0, pn)))
+    Ncp, Np = Nc + pc, N + pn
+    n_blocks = Np // block_n
+    spare_arr = jnp.asarray(spare, jnp.float32).reshape(B, 1)
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+        except Exception:
+            pass
+    scratch = ([_VMEM((block_c,), jnp.float32)] * 3 if _VMEM is not None
+               else [pl.ANY] * 3)
+    fill, sumf, pf = pl.pallas_call(
+        functools.partial(_kernel_batched, n_blocks=n_blocks),
+        grid=(B, Ncp // block_c, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_n), lambda bi, ci, ji: (bi, ci, ji)),
+            pl.BlockSpec((1, 1), lambda bi, ci, ji: (bi, 0)),
+            pl.BlockSpec((1, block_n), lambda bi, ci, ji: (bi, ji)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_c, block_n), lambda bi, ci, ji: (bi, ci, ji)),
+            pl.BlockSpec((1, block_c), lambda bi, ci, ji: (bi, ci)),
+            pl.BlockSpec((1, block_c), lambda bi, ci, ji: (bi, ci)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Ncp, Np), inc.dtype),
+            jax.ShapeDtypeStruct((B, Ncp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Ncp), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(inc_p, spare_arr, p_p)
+    return fill[:, :Nc, :N], sumf[:, :Nc], pf[:, :Nc]

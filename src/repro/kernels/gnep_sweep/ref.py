@@ -14,3 +14,13 @@ def reference(inc, spare, p_sorted):
     cum = jnp.cumsum(inc, axis=1)
     fill = jnp.clip(spare - (cum - inc), 0.0, inc)
     return fill, jnp.sum(fill, axis=1), fill @ p_sorted
+
+
+def reference_batched(inc, spare, p_sorted):
+    """inc: (B, Nc, N); spare: (B,); p_sorted: (B, N).
+
+    Returns (fill (B,Nc,N), sum_fill (B,Nc), p_fill (B,Nc))."""
+    cum = jnp.cumsum(inc, axis=-1)
+    fill = jnp.clip(spare[:, None, None] - (cum - inc), 0.0, inc)
+    return (fill, jnp.sum(fill, axis=-1),
+            jnp.einsum("bcn,bn->bc", fill, p_sorted))

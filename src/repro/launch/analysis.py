@@ -105,8 +105,17 @@ def collective_wire_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
     return total, by_op
 
 
-def analyze_compiled(compiled) -> CostSummary:
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() compat: some jax versions return the dict
+    wrapped in a one-element list (per-program), newer ones the dict itself."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def analyze_compiled(compiled) -> CostSummary:
+    ca = cost_analysis_dict(compiled)
     coll, by_op = collective_wire_bytes(compiled.as_text())
     return CostSummary(flops=float(ca.get("flops", 0.0)),
                        bytes_accessed=float(ca.get("bytes accessed", 0.0)),

@@ -102,7 +102,7 @@ def lower_cell(arch_id, shape_name, *, multi_pod=False, body_correction=True,
     full_cost = an.analyze_compiled(compiled)
     if verbose:
         print(f"  memory_analysis: {compiled.memory_analysis()}")
-        ca = compiled.cost_analysis()
+        ca = an.cost_analysis_dict(compiled)
         print(f"  cost_analysis: flops={ca.get('flops', 0):.4g} "
               f"bytes={ca.get('bytes accessed', 0):.4g}")
 

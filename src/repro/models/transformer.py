@@ -444,6 +444,25 @@ def encode(cfg, params, enc_embeds, dist, *, loops="scan"):
 # loss
 # ==========================================================================
 
+@jax.custom_vjp
+def _grad_transparent_barrier(xs):
+    """optimization_barrier with an identity gradient: jax 0.4.x has no
+    differentiation rule for the primitive, so chain it in the primal only
+    (the scheduling hint matters for peak memory, not for the cotangents)."""
+    return jax.lax.optimization_barrier(xs)
+
+
+def _gtb_fwd(xs):
+    return _grad_transparent_barrier(xs), None
+
+
+def _gtb_bwd(_, g):
+    return (g,)
+
+
+_grad_transparent_barrier.defvjp(_gtb_fwd, _gtb_bwd)
+
+
 def _nll_chunk(cfg, params, h_chunk, tgt_chunk, dist):
     logits = _unembed(cfg, params, h_chunk, dist)           # (B, S_c, V)
     logits = logits.astype(jnp.float32)
@@ -484,7 +503,7 @@ def loss_fn(cfg, params, batch, dist: Distribution = LOCAL, *,
             nll_sum = nll_sum + jnp.sum(nll)
             den = den + nll.size
         if n_chunks > 1:
-            nll_sum, h = jax.lax.optimization_barrier((nll_sum, h))
+            nll_sum, h = _grad_transparent_barrier((nll_sum, h))
     loss = nll_sum / jnp.maximum(den, 1.0)
     return loss + aux_coef * aux, {"nll": loss, "aux": aux}
 

@@ -1,0 +1,276 @@
+"""Batched GNEP engine tests: batched-vs-loop equivalence, mask invariance,
+RM-sweep optimality against a dense price grid, and Algorithm 4.2 rounding
+invariants on batched output."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (sample_scenario, solve_batch, solve_distributed,
+                        solve_distributed_batch, stack_scenarios)
+from repro.core.game import _rm_candidates, _rm_pick, rm_solve
+from repro.core.types import pad_scenario
+from repro.kernels.gnep_sweep.kernel import rm_sweep_batched
+from repro.kernels.gnep_sweep.ops import make_batched_sweep_fn
+from repro.kernels.gnep_sweep.ref import reference_batched
+
+# 10 instances, ragged class counts (several n_i < n_max = 31)
+RAGGED_NS = [5, 17, 17, 9, 31, 3, 17, 12, 26, 7]
+
+
+def make_batch(ns=RAGGED_NS, cf=0.95, seed0=0):
+    scns = [sample_scenario(jax.random.PRNGKey(seed0 + i), n,
+                            capacity_factor=cf)
+            for i, n in enumerate(ns)]
+    return scns, stack_scenarios(scns)
+
+
+# --------------------------------------------------------------------------
+# Batched vs per-scenario loop equivalence
+# --------------------------------------------------------------------------
+
+def test_batch_matches_loop():
+    """Every lane of solve_distributed_batch reproduces its single-instance
+    solve_distributed trajectory, including ragged lanes (n_i < n_max)."""
+    scns, batch = make_batch()
+    bsol = solve_distributed_batch(batch)
+    for b, scn in enumerate(scns):
+        s = solve_distributed(scn)
+        n = scn.n
+        np.testing.assert_allclose(np.asarray(bsol.r[b][:n]),
+                                   np.asarray(s.r), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(bsol.psi[b][:n]),
+                                   np.asarray(s.psi), rtol=1e-6, atol=1e-9)
+        assert float(bsol.total[b]) == pytest.approx(float(s.total), rel=1e-6)
+        assert float(bsol.aux[b]) == pytest.approx(float(s.aux), rel=1e-6)
+        assert int(bsol.iters[b]) == int(s.iters)
+        assert bool(bsol.feasible[b]) == bool(s.feasible)
+
+
+def test_mask_invariance_padding_inert():
+    """Padded classes get r = sM = sR = 0 and never affect valid lanes:
+    solving the same instances padded to a larger n_max changes nothing."""
+    scns, batch = make_batch()
+    wide = stack_scenarios(scns, n_max=batch.n_max + 13)
+    sol = solve_distributed_batch(batch)
+    sol_w = solve_distributed_batch(wide)
+    # padded tails identically zero
+    assert np.all(np.asarray(sol_w.r)[~np.asarray(wide.mask)] == 0.0)
+    assert np.all(np.asarray(sol_w.sM)[~np.asarray(wide.mask)] == 0.0)
+    for b, scn in enumerate(scns):
+        n = scn.n
+        np.testing.assert_allclose(np.asarray(sol_w.r[b][:n]),
+                                   np.asarray(sol.r[b][:n]), rtol=1e-12)
+        assert float(sol_w.total[b]) == pytest.approx(float(sol.total[b]),
+                                                      rel=1e-12)
+        assert int(sol_w.iters[b]) == int(sol.iters[b])
+
+
+def test_batch_instance_roundtrip():
+    scns, batch = make_batch()
+    for b in (0, 4, 5):
+        inst = batch.instance(b)
+        assert inst.n == scns[b].n
+        np.testing.assert_allclose(np.asarray(inst.r_up),
+                                   np.asarray(scns[b].r_up), rtol=0)
+
+
+# --------------------------------------------------------------------------
+# RM sweep optimality vs a dense brute-force price grid
+# --------------------------------------------------------------------------
+
+def _rm_obj_at_price(scn, bids, rho):
+    """Exact (P5) objective at a FIXED price rho: forced y + greedy LP fill."""
+    p = np.asarray(scn.p)
+    r_low, r_up = np.asarray(scn.r_low), np.asarray(scn.r_up)
+    y = np.asarray(bids) >= rho
+    r = r_low.copy()
+    spare = float(scn.R) - r_low.sum()
+    for i in np.argsort(-p):
+        if y[i]:
+            add = min(r_up[i] - r_low[i], spare)
+            r[i] += add
+            spare -= add
+    return ((rho - float(scn.rho_bar)) * r.sum() + (p * r).sum()
+            - (p * r_up).sum())
+
+
+def _dense_grid_best(scn, bids, n_grid=4001):
+    grid = np.linspace(float(scn.rho_bar), float(scn.rho_hat), n_grid)
+    grid = np.concatenate([grid, np.asarray(bids)])
+    return max(_rm_obj_at_price(scn, bids, rho) for rho in grid)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_rm_solve_dense_grid_optimal(seed):
+    """The <= N+2 candidate sweep attains the dense-grid (P5) optimum."""
+    scn = sample_scenario(jax.random.PRNGKey(seed), 7, capacity_factor=0.9)
+    bids = jax.random.uniform(jax.random.PRNGKey(100 + seed), (7,),
+                              scn.A.dtype, float(scn.rho_bar),
+                              float(scn.rho_hat))
+    _, _, obj = rm_solve(scn, bids)
+    best = _dense_grid_best(scn, bids)
+    assert float(obj) == pytest.approx(best, rel=1e-9, abs=1e-9)
+
+
+def test_rm_batched_pallas_dense_grid_optimal():
+    """The batched Pallas sweep path attains the same (P5) optimum (kernel in
+    interpret mode off-TPU, compiled on a Pallas-capable backend)."""
+    ns = [7, 5, 7, 4]
+    scns = [sample_scenario(jax.random.PRNGKey(i), n, capacity_factor=0.9)
+            for i, n in enumerate(ns)]
+    batch = stack_scenarios(scns)
+    dt = batch.scenarios.A.dtype
+    bids = jnp.stack([
+        jnp.pad(jax.random.uniform(jax.random.PRNGKey(100 + i), (n,), dt,
+                                   float(s.rho_bar), float(s.rho_hat)),
+                (0, batch.n_max - n))
+        for i, (s, n) in enumerate(zip(scns, ns))])
+
+    cand, inc, spare, p_sorted, order = jax.vmap(_rm_candidates)(
+        batch.scenarios, bids, batch.mask)
+    sweep = make_batched_sweep_fn(force_pallas=True)
+    fill, sum_fill, p_fill = sweep(inc, spare, p_sorted)
+    _, _, obj = jax.vmap(_rm_pick)(batch.scenarios, cand, fill.astype(dt),
+                                   sum_fill.astype(dt), p_fill.astype(dt),
+                                   order, batch.mask)
+    for b, (scn, n) in enumerate(zip(scns, ns)):
+        best = _dense_grid_best(scn, np.asarray(bids[b][:n]))
+        assert float(obj[b]) == pytest.approx(best, rel=1e-4, abs=1e-4)
+
+
+def test_batched_kernel_matches_batched_ref():
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, Nc, N = 5, 37, 101
+    inc = jax.random.uniform(k0, (B, Nc, N), jnp.float32, 0.0, 10.0)
+    inc = inc * (jax.random.uniform(k1, (B, Nc, N)) > 0.4)
+    p = jnp.sort(jax.random.uniform(k2, (B, N), jnp.float32, 0.1, 100.0),
+                 axis=1)[:, ::-1]
+    spare = 0.3 * inc.sum(axis=(1, 2)) / Nc
+    out = rm_sweep_batched(inc, spare, p, block_c=16, block_n=32,
+                           interpret=True)
+    ref = reference_batched(inc, spare, p)
+    for a, b, tol in zip(out, ref, (1e-4, 1e-3, 1e-2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=tol)
+
+
+def test_batched_solve_with_pallas_sweep():
+    scns, batch = make_batch(ns=[5, 17, 9, 12])
+    ref = solve_distributed_batch(batch)
+    pal = solve_distributed_batch(batch,
+                                  sweep_fn=make_batched_sweep_fn(
+                                      force_pallas=True))
+    np.testing.assert_allclose(np.asarray(pal.r), np.asarray(ref.r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(pal.iters),
+                                  np.asarray(ref.iters))
+
+
+# --------------------------------------------------------------------------
+# Algorithm 4.2 rounding invariants on batched output
+# --------------------------------------------------------------------------
+
+def test_batch_rounding_invariants():
+    scns, batch = make_batch()
+    res = solve_batch(batch)
+    it, frac = res.integer, res.fractional
+    mask = np.asarray(batch.mask)
+    r, sM, sR, h = map(np.asarray, (it.r, it.sM, it.sR, it.h))
+    # integrality everywhere, padded classes identically zero
+    for x in (r, sM, sR, h):
+        np.testing.assert_array_equal(x, np.round(x))
+        assert np.all(x[~mask] == 0.0)
+    for b, scn in enumerate(scns):
+        n = scn.n
+        r_low, r_up = np.asarray(scn.r_low), np.asarray(scn.r_up)
+        # r within the (integer-relaxed) allocation box
+        assert np.all(r[b][:n] >= np.floor(r_low) - 1e-9)
+        assert np.all(r[b][:n] <= np.ceil(r_up) + 1e-9)
+        # capacity (Prop. 4.2)
+        assert r[b][:n].sum() <= np.floor(float(scn.R)) + 1e-9
+        # slot constraint (P2e)
+        lhs = (sM[b][:n] / np.asarray(scn.cM)
+               + sR[b][:n] / np.asarray(scn.cR))
+        assert np.all(lhs <= r[b][:n] + 1e-9)
+        # admission stays in the SLA box
+        assert np.all(h[b][:n] >= np.asarray(scn.H_low) - 1e-9)
+        assert np.all(h[b][:n] <= np.asarray(scn.H_up) + 1e-9)
+        # chip cost loses at most the floor(R) slack (one chip)
+        assert float(it.cost[b]) >= float(frac.cost[b]) \
+            - float(scn.rho_bar) - 1e-9
+        # Sec. 4.5: the only way rounding can *lower* the total is the relaxed
+        # (P4d) admission quantization (h rounded up cuts the penalty) plus
+        # the one-chip floor(R) slack; net of those terms it never improves.
+        psi_int = 1.0 / np.maximum(h[b][:n], 1.0)
+        admission_gain = float(np.sum(
+            np.asarray(scn.alpha)
+            * np.maximum(np.asarray(frac.psi[b][:n]) - psi_int, 0.0)))
+        assert float(it.total[b]) >= float(frac.total[b]) \
+            - float(scn.rho_bar) - admission_gain - 1e-6
+
+
+def test_batch_rounding_matches_single_rounding():
+    """Lane-wise batched rounding == single-instance round_solution."""
+    from repro.core import round_solution
+    scns, batch = make_batch()
+    res = solve_batch(batch)
+    for b, scn in enumerate(scns):
+        s = solve_distributed(scn)
+        single = round_solution(scn, s.r, s.sM, s.sR, s.psi)
+        n = scn.n
+        np.testing.assert_allclose(np.asarray(res.integer.r[b][:n]),
+                                   np.asarray(single.r), rtol=0, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(res.integer.h[b][:n]),
+                                   np.asarray(single.h), rtol=0, atol=1e-9)
+        assert float(res.integer.total[b]) == pytest.approx(
+            float(single.total), rel=1e-9)
+
+
+# --------------------------------------------------------------------------
+# Facade / fleet integration
+# --------------------------------------------------------------------------
+
+def test_solve_batch_accepts_scenario_list():
+    scns, _ = make_batch(ns=[4, 9, 6])
+    res = solve_batch(scns)
+    assert res.batch_size == 3
+    assert res.r.shape == (3, 9)
+
+
+def test_fleet_epoch_batch_matches_single_epochs():
+    """One batched multi-fleet epoch == each fleet's own (single) epoch."""
+    from repro.cluster import FleetSimulator, TenantSpec, epoch_batch
+
+    def tenants(k):
+        return [TenantSpec(f"t{i}", "x", "train_4k", deadline_s=100.0,
+                           H_up=10 + i, H_low=4, penalty_per_job=20000.0)
+                for i in range(k)]
+
+    profiles = {f"t{i}": (1.0 + 0.2 * i, 0.5, 1.0) for i in range(4)}
+    mk = lambda chips, k: FleetSimulator(total_chips=chips,
+                                         tenants=tenants(k))
+    singles = [mk(800, 2), mk(1200, 4), mk(600, 3)]   # ragged tenant counts
+    batched = [mk(800, 2), mk(1200, 4), mk(600, 3)]
+    for f in singles + batched:
+        f._profiles = profiles
+
+    expected = [f.epoch() for f in singles]
+    allocs = epoch_batch(batched)
+    assert len(allocs) == 3
+    for got, want, f in zip(allocs, expected, batched):
+        assert got.chips == want.chips
+        assert got.h == want.h
+        assert got.meshes == want.meshes
+        assert got.total_cost == pytest.approx(want.total_cost, rel=1e-9)
+        assert f.history == [got]
+
+
+def test_solve_batch_infeasible_raises():
+    from repro.core import InfeasibleError
+    good = sample_scenario(jax.random.PRNGKey(0), 8, capacity_factor=0.95)
+    bad = sample_scenario(jax.random.PRNGKey(1), 8, capacity_factor=0.5)
+    with pytest.raises(InfeasibleError, match=r"\[1\]"):
+        solve_batch([good, bad])
+    res = solve_batch([good, bad], check_feasible=False, integer=False)
+    assert bool(res.feasible[0]) and not bool(res.feasible[1])

@@ -14,8 +14,11 @@ def run_devices(code: str, n_devices: int = 8) -> str:
            f"'--xla_force_host_platform_device_count={n_devices}'\n")
     r = subprocess.run([sys.executable, "-c", pre + code],
                        capture_output=True, text=True, timeout=900,
+                       # JAX_PLATFORMS=cpu: forced host devices are CPU-only;
+                       # skip the (minutes-long) TPU metadata probe on
+                       # TPU-library machines.
                        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout
 
@@ -64,14 +67,15 @@ shape = ShapeConfig("t", "train", 32, 8)
 specs = input_specs(cfg, shape)
 oc = OptConfig()
 opt = jax.eval_shape(partial(adamw_init, oc=oc), params)
+from repro.launch.analysis import cost_analysis_dict
 c = jit_train_step(cfg, dist, oc, params, opt, specs["batch"]).lower(
     params, opt, specs["batch"]).compile()
-assert c.cost_analysis()["flops"] > 0
+assert cost_analysis_dict(c)["flops"] > 0
 dshape = ShapeConfig("d", "decode", 32, 8)
 dspecs = input_specs(cfg, dshape)
 c2 = jit_decode_step(cfg, dist, params, dspecs["cache"]).lower(
     params, dspecs["cache"], dspecs["token"], dspecs["pos"]).compile()
-print("DRYRUN_OK", c.cost_analysis()["flops"])
+print("DRYRUN_OK", cost_analysis_dict(c)["flops"])
 """)
 
 

@@ -79,12 +79,17 @@ def test_gnep_sweep(Nc, N, bc, bn):
     fill, sf, pf = rm_sweep(inc, spare, p, block_c=bc, block_n=bn,
                             interpret=True)
     fill_r, sf_r, pf_r = sweep_ref(inc, spare, p)
+    # Kernel and reference are both f32 but sum the prefix in different
+    # orders (blockwise carry vs one cumsum); near the clip boundary the
+    # fill difference is O(ulp(sum(inc))), so the absolute tolerance must
+    # scale with the running-sum magnitude (~2 f32 ulps of it).
+    atol = 4 * float(jnp.sum(inc, axis=1).max()) * np.finfo(np.float32).eps
     np.testing.assert_allclose(np.asarray(fill), np.asarray(fill_r),
-                               rtol=1e-5, atol=1e-4)
+                               rtol=1e-5, atol=max(atol, 1e-4))
     np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_r),
-                               rtol=1e-5, atol=1e-3)
+                               rtol=1e-5, atol=max(atol, 1e-3))
     np.testing.assert_allclose(np.asarray(pf), np.asarray(pf_r),
-                               rtol=1e-5, atol=1e-2)
+                               rtol=1e-5, atol=max(100 * atol, 1e-2))
 
 
 def test_gnep_sweep_plugs_into_rm_solve():

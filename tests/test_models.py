@@ -162,6 +162,7 @@ def _decode_consistency(cfg, batch_full, S):
     assert err < 2e-4, err
 
 
+@pytest.mark.slow
 def test_decode_consistency_dense():
     S = 16
     toks = jax.random.randint(KEY, (2, S), 0, 256)
@@ -172,6 +173,7 @@ def test_decode_consistency_dense():
     _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
 
 
+@pytest.mark.slow
 def test_decode_consistency_hybrid_moe():
     S = 16
     toks = jax.random.randint(KEY, (2, S), 0, 256)
@@ -185,6 +187,7 @@ def test_decode_consistency_hybrid_moe():
     _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
 
 
+@pytest.mark.slow
 def test_decode_consistency_rwkv():
     S = 16
     toks = jax.random.randint(KEY, (2, S), 0, 256)
@@ -195,6 +198,7 @@ def test_decode_consistency_rwkv():
     _decode_consistency(cfg, {"tokens": toks, "targets": toks}, S)
 
 
+@pytest.mark.slow
 def test_decode_consistency_encdec():
     S = 16
     toks = jax.random.randint(KEY, (2, S), 0, 256)
@@ -208,6 +212,7 @@ def test_decode_consistency_encdec():
     _decode_consistency(cfg, batch, S)
 
 
+@pytest.mark.slow
 def test_generate_runs():
     cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
                       n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16,
@@ -219,6 +224,7 @@ def test_generate_runs():
     assert bool(jnp.all((out >= 0) & (out < 64)))
 
 
+@pytest.mark.slow
 def test_grad_flows_all_families():
     S, toks = 16, jax.random.randint(KEY, (2, 16), 0, 128)
     batch = {"tokens": toks, "targets": toks}
