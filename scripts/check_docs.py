@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Docs gate for scripts/ci.sh.
+
+1. Link check: every relative markdown link in README.md, benchmarks/README.md
+   and docs/*.md must resolve to an existing file (fragments stripped).
+2. Docstring lint for the `repro.core` public API: every public module-level
+   function and class needs a docstring; in the modules carrying the paper
+   math facade (game, allocator, centralized, streaming) a function's
+   docstring must also mention every one of its parameters by name
+   (NumPy-style sections are how; the lint only enforces coverage).
+
+Exit code 0 iff both checks pass.  Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+import inspect
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [ROOT / "README.md", ROOT / "benchmarks" / "README.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+
+CORE_MODULES = ["types", "profiles", "game", "centralized", "rounding",
+                "streaming", "allocator"]
+PARAM_STRICT = {"game", "centralized", "streaming", "allocator"}
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        for i, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:           # pure in-page anchor
+                    continue
+                if not (md.parent / path).exists():
+                    errors.append(f"{md.relative_to(ROOT)}:{i}: "
+                                  f"broken link -> {target}")
+    return errors
+
+
+def _params_of(fn) -> list:
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return []
+    return [p for p in sig.parameters
+            if p not in ("self", "cls") and not p.startswith("_")]
+
+
+def check_docstrings() -> list:
+    errors = []
+    for name in CORE_MODULES:
+        mod = __import__(f"repro.core.{name}", fromlist=[name])
+        strict = name in PARAM_STRICT
+        for sym, obj in vars(mod).items():
+            if sym.startswith("_"):
+                continue
+            if not (inspect.isfunction(obj) or inspect.isclass(obj)):
+                continue
+            if getattr(obj, "__module__", None) != mod.__name__:
+                continue               # re-export, linted at home
+            where = f"repro.core.{name}.{sym}"
+            doc = inspect.getdoc(obj)
+            if not doc:
+                errors.append(f"{where}: missing docstring")
+                continue
+            if strict and inspect.isfunction(obj):
+                missing = [p for p in _params_of(obj) if p not in doc]
+                if missing:
+                    errors.append(f"{where}: docstring does not mention "
+                                  f"parameter(s) {missing}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: FAILED ({len(errors)} problem(s))",
+              file=sys.stderr)
+        return 1
+    n_links = sum(len(LINK_RE.findall(f.read_text()))
+                  for f in DOC_FILES if f.exists())
+    print(f"check_docs: OK ({len(DOC_FILES)} docs, {n_links} links, "
+          f"{len(CORE_MODULES)} core modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

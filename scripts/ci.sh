@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 verification + fast allocator benchmark smoke.
+# Tier-1 verification + docs gate + fast allocator benchmark smoke.
 #
-#   scripts/ci.sh          # full tier-1 suite + batched-engine smoke
+#   scripts/ci.sh          # full tier-1 suite + docs check + engine smokes
 #   scripts/ci.sh --fast   # skip the slow end-to-end model tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,9 +11,15 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-m "not slow")
 fi
 
+echo "== docs check (links + core API docstrings) =="
+PYTHONPATH=src python scripts/check_docs.py
+
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
 echo "== allocator benchmark smoke (batched engine) =="
 PYTHONPATH=src python -m benchmarks.allocator_perf --batch --smoke
 PYTHONPATH=src python -m benchmarks.allocator_perf --smoke
+
+echo "== streaming admission engine smoke =="
+PYTHONPATH=src python -m benchmarks.streaming_perf --smoke

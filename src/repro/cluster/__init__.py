@@ -1,4 +1,5 @@
 from repro.cluster.fleet import (Allocation, FleetSimulator, TenantSpec,
-                                 epoch_batch)
+                                 epoch_batch, epoch_stream)
 
-__all__ = ["Allocation", "FleetSimulator", "TenantSpec", "epoch_batch"]
+__all__ = ["Allocation", "FleetSimulator", "TenantSpec", "epoch_batch",
+           "epoch_stream"]

@@ -20,12 +20,12 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (Scenario, from_roofline, round_solution, solve,
-                        solve_batch, stack_scenarios)
+from repro.core import (AdmissionWindow, RAW_CLASS_FIELDS, Scenario, derive,
+                        solve, solve_batch, solve_streaming, stack_scenarios)
 from repro.utils import fdtype
 
 
@@ -51,6 +51,10 @@ class Allocation:
     total_cost: float
     method: str
     iters: int
+    # epoch/epoch_batch raise InfeasibleError instead of producing an
+    # infeasible Allocation, so the flag is only ever False on the streaming
+    # path, where overload transients are legitimate and must be observable.
+    feasible: bool = True
 
 
 class FleetSimulator:
@@ -72,29 +76,40 @@ class FleetSimulator:
         assert rec["status"] == "ok", f"no roofline for {t.name}"
         return rec
 
+    def tenant_class_params(self, t: TenantSpec,
+                            profiles: Optional[dict] = None) -> dict:
+        """Raw GNEP class parameters for ONE tenant.
+
+        The single source of the roofline -> job-profile fitting for both
+        the batch path (:meth:`scenario` stacks these dicts) and the
+        streaming path (``AdmissionWindow.arrive`` takes one directly): a
+        job profiled at 256 chips spends ``t_compute`` seconds in math (the
+        map wave, ~1/chips) and ``t_collective`` in collectives (the reduce
+        wave), exactly the paper's ``A h / s`` form with c^M = c^R = 1
+        slot/chip (see ``profiles.from_roofline``).
+        """
+        profiles = (profiles if profiles is not None
+                    else getattr(self, "_profiles", None))
+        if profiles and t.name in profiles:
+            c, x, o = profiles[t.name]
+        else:
+            rf = self._roofline_record(t)["roofline"]
+            c, x, o = rf["t_compute"], rf["t_collective"], 1.0
+        return {
+            "A": float(c * 256.0 * t.straggler_factor),
+            "B": float(max(x, 1e-6) * 256.0),
+            "E": float(o - t.deadline_s),
+            "cM": 1.0, "cR": 1.0,
+            "H_up": float(t.H_up), "H_low": float(t.H_low),
+            "m": float(t.penalty_per_job), "rho_up": float(t.max_bid),
+        }
+
     def scenario(self, *, profiles: Optional[dict] = None) -> Scenario:
-        comp, coll, over, dl, hu, hl, m, bid = [], [], [], [], [], [], [], []
-        for t in self.tenants:
-            if profiles and t.name in profiles:
-                c, x, o = profiles[t.name]
-            else:
-                rec = self._roofline_record(t)
-                rf = rec["roofline"]
-                c, x, o = rf["t_compute"], rf["t_collective"], 1.0
-            comp.append(c * 256 * t.straggler_factor)  # chip-seconds per job
-            coll.append(max(x, 1e-6) * 256)
-            over.append(o)
-            dl.append(t.deadline_s)
-            hu.append(t.H_up)
-            hl.append(t.H_low)
-            m.append(t.penalty_per_job)
-            bid.append(t.max_bid)
-        return from_roofline(
-            np.asarray(comp) / 256.0, np.asarray(coll) / 256.0,
-            np.asarray(over), np.asarray(dl), chips_ref=256.0,
-            H_up=np.asarray(hu, float), H_low=np.asarray(hl, float),
-            m=np.asarray(m, float), rho_up=np.asarray(bid, float),
-            R=float(self.R), rho_bar=self.chip_cost)
+        params = [self.tenant_class_params(t, profiles=profiles)
+                  for t in self.tenants]
+        arrs = {k: np.asarray([p[k] for p in params], fdtype())
+                for k in RAW_CLASS_FIELDS}
+        return derive(**arrs, R=float(self.R), rho_bar=self.chip_cost)
 
     # ---------------- epoch: solve the game, plan meshes -------------------
     def epoch(self, *, method: str = "distributed",
@@ -185,3 +200,119 @@ def epoch_batch(fleets: Sequence[FleetSimulator], *,
             inst.integer, n=int(res.n_classes[b]), iters=inst.iters,
             method="distributed-batch"))
     return allocs
+
+
+# Fleet-level stream events: ("arrive", fleet, TenantSpec[, profile]),
+# ("depart", fleet, tenant_name), ("edit", fleet, tenant_name, spec_updates),
+# ("capacity", fleet, new_total_chips).
+FleetEvent = Tuple
+
+
+def epoch_stream(fleets: Sequence[FleetSimulator],
+                 epochs: Iterable[Sequence[FleetEvent]], *,
+                 n_max: Optional[int] = None, eps_bar: float = 0.03,
+                 lam: float = 0.05, max_iters: int = 200, sweep_fn=None,
+                 cross_check: bool = False) -> Iterator[List[Allocation]]:
+    """Drive MANY fleets' games through a tenant arrival/departure trace.
+
+    The multi-fleet analog of the paper's *runtime* loop: every fleet is one
+    lane of one live :class:`~repro.core.AdmissionWindow`; each epoch's
+    events (tenants arriving, leaving, renegotiating SLAs, capacity changes)
+    dirty only the lanes they touch, and one warm-started incremental
+    ``solve_streaming`` re-equilibrates exactly those lanes — fleets with no
+    events keep their equilibrium at zero solver cost, unlike
+    :func:`epoch_batch` which re-stacks and re-solves everything.
+
+    Parameters
+    ----------
+    fleets : Sequence[FleetSimulator]
+        One lane each.  Tenant lists and histories are kept in sync as
+        events apply; allocations append to each fleet's ``history``.
+    epochs : Iterable[Sequence[FleetEvent]]
+        Outer iterable = allocator epochs (the paper's hourly re-solves);
+        each element is the event list to apply before that epoch's solve:
+
+        * ``("arrive", fleet_idx, TenantSpec)`` or
+          ``("arrive", fleet_idx, TenantSpec, (t_compute, t_coll, t_over))``
+          to also register the tenant's profile;
+        * ``("depart", fleet_idx, tenant_name)``;
+        * ``("edit", fleet_idx, tenant_name, {TenantSpec field: value})``;
+        * ``("capacity", fleet_idx, new_total_chips)``.
+    n_max : int, optional
+        Initial padded width headroom for the window.
+    eps_bar, lam, max_iters, sweep_fn
+        Solver knobs, forwarded to ``solve_streaming``.
+    cross_check : bool, optional
+        Cross-check every epoch against the exact centralized optimum.
+
+    Yields
+    ------
+    list of Allocation
+        Per-fleet allocations after each epoch, in input order.  Unlike
+        :func:`epoch_batch`, no :class:`~repro.core.InfeasibleError` is
+        raised: an overloaded fleet (arrival burst, capacity loss) is a
+        legitimate transient here, flagged on ``Allocation.feasible`` — its
+        chips/h are the over-capacity projection and must not be deployed.
+    """
+    fleets = list(fleets)
+    scns = [f.scenario(profiles=getattr(f, "_profiles", None)) for f in fleets]
+    window = AdmissionWindow(scns, n_max=n_max)
+    # tenant name -> window slot, per lane (initial stack order is 0..n-1)
+    slots: List[Dict[str, int]] = [
+        {t.name: i for i, t in enumerate(f.tenants)} for f in fleets]
+
+    def apply_event(ev: FleetEvent) -> None:
+        kind, b = ev[0], int(ev[1])
+        f = fleets[b]
+        if kind == "arrive":
+            spec = ev[2]
+            if spec.name in slots[b]:
+                raise ValueError(
+                    f"fleet {b} already has a tenant named {spec.name!r}")
+            if len(ev) > 3 and ev[3] is not None:
+                profs = dict(getattr(f, "_profiles", None) or {})
+                profs[spec.name] = tuple(ev[3])
+                f._profiles = profs
+            f.tenants.append(spec)
+            slots[b][spec.name] = window.arrive(
+                b, **f.tenant_class_params(spec))
+        elif kind == "depart":
+            name = ev[2]
+            window.depart(b, slots[b].pop(name))
+            f.tenants[:] = [t for t in f.tenants if t.name != name]
+        elif kind == "edit":
+            name, updates = ev[2], dict(ev[3])
+            (spec,) = [t for t in f.tenants if t.name == name]
+            for k, v in updates.items():
+                setattr(spec, k, v)
+            window.edit(b, slots[b][name], **f.tenant_class_params(spec))
+        elif kind == "capacity":
+            f.R = int(ev[2])
+            window.set_capacity(b, float(f.R))
+        else:
+            raise ValueError(f"unknown fleet event kind {kind!r}")
+
+    for events in epochs:
+        for ev in events:
+            apply_event(ev)
+        res = solve_streaming(window, eps_bar=eps_bar, lam=lam,
+                              max_iters=max_iters, sweep_fn=sweep_fn,
+                              cross_check=cross_check)
+        # one device->host transfer per array, not per tenant
+        r_np, h_np = np.asarray(res.integer.r), np.asarray(res.integer.h)
+        total_np, iters_np = np.asarray(res.integer.total), np.asarray(res.iters)
+        feas_np = np.asarray(res.feasible)
+        allocs = []
+        for b, f in enumerate(fleets):
+            chips = {n: int(r_np[b, s]) for n, s in slots[b].items()}
+            hmap = {n: int(h_np[b, s]) for n, s in slots[b].items()}
+            meshes = {t.name: f.mesh_plan(chips[t.name], t.tp_required)
+                      for t in f.tenants}
+            alloc = Allocation(chips=chips, h=hmap, meshes=meshes,
+                               total_cost=float(total_np[b]),
+                               method="streaming",
+                               iters=int(iters_np[b]),
+                               feasible=bool(feas_np[b]))
+            f.history.append(alloc)
+            allocs.append(alloc)
+        yield allocs

@@ -1,24 +1,35 @@
 """The paper's contribution: GNEP-based runtime capacity allocation."""
 from repro.core.allocator import (AllocationResult, BatchAllocationResult,
-                                  InfeasibleError, solve, solve_batch)
-from repro.core.centralized import kkt_residual, objective_of_r, solve_centralized
-from repro.core.game import (cm_best_response, cm_bid_update,
-                             distributed_walltime_estimate, rm_solve,
-                             solve_distributed, solve_distributed_batch,
-                             solve_distributed_python)
-from repro.core.profiles import from_roofline, sample_scenario
+                                  InfeasibleError, StreamingResult, solve,
+                                  solve_batch, solve_streaming)
+from repro.core.centralized import (kkt_residual, objective_of_r,
+                                    solve_centralized, solve_centralized_batch)
+from repro.core.game import (BatchWarmStart, cm_best_response, cm_bid_update,
+                             cold_start, distributed_walltime_estimate,
+                             rm_solve, solve_distributed,
+                             solve_distributed_batch, solve_distributed_python)
+from repro.core.profiles import (from_roofline, sample_class_params,
+                                 sample_scenario)
 from repro.core.rounding import (IntegerSolution, round_solution,
                                  round_solution_batch)
-from repro.core.types import (Scenario, ScenarioBatch, Solution, deadline_lhs,
-                              derive, objective, pad_scenario, stack_scenarios)
+from repro.core.streaming import (AdmissionWindow, replay, sample_event_trace)
+from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
+                              RAW_CLASS_FIELDS, Scenario, ScenarioBatch,
+                              SLAEdit, Solution, StreamEvent, WindowState,
+                              deadline_lhs, derive, neutral_class_values,
+                              objective, pad_scenario, stack_scenarios)
 
 __all__ = [
-    "AllocationResult", "BatchAllocationResult", "InfeasibleError",
-    "IntegerSolution", "Scenario", "ScenarioBatch", "Solution",
-    "cm_best_response", "cm_bid_update", "deadline_lhs", "derive",
-    "distributed_walltime_estimate", "from_roofline", "kkt_residual",
-    "objective", "objective_of_r", "pad_scenario", "rm_solve",
-    "round_solution", "round_solution_batch", "sample_scenario", "solve",
-    "solve_batch", "solve_centralized", "solve_distributed",
-    "solve_distributed_batch", "solve_distributed_python", "stack_scenarios",
+    "AdmissionWindow", "AllocationResult", "BatchAllocationResult",
+    "BatchWarmStart", "CapacityChange", "ClassArrival", "ClassDeparture",
+    "InfeasibleError", "IntegerSolution", "RAW_CLASS_FIELDS", "SLAEdit",
+    "Scenario", "ScenarioBatch", "Solution", "StreamEvent", "StreamingResult",
+    "WindowState", "cm_best_response", "cm_bid_update", "cold_start",
+    "deadline_lhs", "derive", "distributed_walltime_estimate",
+    "from_roofline", "kkt_residual", "neutral_class_values", "objective",
+    "objective_of_r", "pad_scenario", "replay", "rm_solve", "round_solution",
+    "round_solution_batch", "sample_class_params", "sample_event_trace",
+    "sample_scenario", "solve", "solve_batch", "solve_centralized",
+    "solve_centralized_batch", "solve_distributed", "solve_distributed_batch",
+    "solve_distributed_python", "solve_streaming", "stack_scenarios",
 ]

@@ -1,9 +1,11 @@
 """High-level allocator facade: solve + round, centralized or distributed.
 
-Single-instance (`solve`) and batched (`solve_batch`) entry points share the
-same pipeline: fractional GNEP solve (Algorithm 4.1) -> integer rounding
-(Algorithm 4.2).  The batched path runs B scenarios as one XLA program and
-one vectorized rounding pass.
+Single-instance (`solve`), batched (`solve_batch`) and streaming
+(`solve_streaming`) entry points share the same pipeline: fractional GNEP
+solve (Algorithm 4.1) -> integer rounding (Algorithm 4.2).  The batched path
+runs B scenarios as one XLA program and one vectorized rounding pass; the
+streaming path re-solves only the lanes an event trace has dirtied
+(see ``repro.core.streaming``).
 """
 from __future__ import annotations
 
@@ -12,11 +14,13 @@ from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import game
 from repro.core.centralized import solve_centralized
 from repro.core.rounding import (IntegerSolution, round_solution,
                                  round_solution_batch)
+from repro.core.streaming import AdmissionWindow
 from repro.core.types import (Scenario, ScenarioBatch, Solution,
                               stack_scenarios)
 
@@ -43,9 +47,31 @@ def solve(scn: Scenario, method: str = "distributed", *, eps_bar: float = 0.03,
           integer: bool = True) -> AllocationResult:
     """Solve the joint admission-control + capacity-allocation problem.
 
-    method: "centralized" (exact optimum of P2/P3) or "distributed"
-    (Algorithm 4.1 GNEP best-reply) — both feed Algorithm 4.2 when
-    ``integer=True``, mirroring the paper's experimental pipeline (Sec. 5).
+    Parameters
+    ----------
+    scn : Scenario
+        One allocation instance over N job classes.
+    method : str, optional
+        ``"centralized"`` (exact optimum of P2/P3 via water-filling),
+        ``"distributed"`` (Algorithm 4.1 GNEP best-reply, jitted) or
+        ``"distributed-python"`` (the paper-faithful serial loop) — all feed
+        Algorithm 4.2 when ``integer=True``, mirroring the paper's
+        experimental pipeline (Sec. 5).
+    eps_bar, lam, max_iters
+        Algorithm 4.1 knobs (ignored by the centralized method); see
+        ``game.solve_distributed``.
+    integer : bool, optional
+        Apply Algorithm 4.2 rounding to the fractional solution.
+
+    Returns
+    -------
+    AllocationResult
+        Fractional (and, by default, integer) solutions plus iteration count.
+
+    Raises
+    ------
+    InfeasibleError
+        If ``sum(r_low) > R`` or some deadline is unattainable (E_i >= 0).
     """
     if method == "centralized":
         sol = solve_centralized(scn)
@@ -103,11 +129,13 @@ class BatchAllocationResult:
                 else self.fractional.total)
 
     def instance(self, b: int) -> AllocationResult:
-        n = int(self.n_classes[b])
+        """Trim lane b to a single-instance view (mask-aware: works for
+        streaming windows whose free slots leave holes in the mask)."""
+        sel = np.asarray(self.mask[b])
 
         def pick(leaf):
             leaf = leaf[b]
-            return leaf[:n] if getattr(leaf, "ndim", 0) else leaf
+            return leaf[sel] if getattr(leaf, "ndim", 0) else leaf
 
         frac = jax.tree_util.tree_map(pick, self.fractional)
         integ = (jax.tree_util.tree_map(pick, self.integer)
@@ -123,15 +151,37 @@ def solve_batch(batch: Union[ScenarioBatch, Sequence[Scenario]],
                 check_feasible: bool = True) -> BatchAllocationResult:
     """Solve B independent allocation instances as one batched program.
 
-    ``batch`` may be a prepared :class:`ScenarioBatch` or a plain list of
-    (possibly ragged) Scenarios, which is stacked/padded here.  Only the
-    distributed GNEP method is batched; Algorithm 4.2 rounding is applied
-    lane-wise in one vmapped pass.  ``sweep_fn`` forwards a *batched* RM
-    sweep (the Pallas kernel) to ``solve_distributed_batch``.
+    Parameters
+    ----------
+    batch : ScenarioBatch or Sequence[Scenario]
+        A prepared :class:`ScenarioBatch`, or a plain list of (possibly
+        ragged) Scenarios which is stacked/padded here.
+    method : str, optional
+        Only ``"distributed"`` (the batched GNEP engine) is supported.
+    eps_bar, lam, max_iters
+        Algorithm 4.1 knobs; see ``game.solve_distributed_batch``.
+    integer : bool, optional
+        Apply the lane-wise vmapped Algorithm 4.2 rounding pass.
+    sweep_fn : callable, optional
+        Batched RM price-sweep override (the Pallas kernel), forwarded to
+        ``solve_distributed_batch``.
+    check_feasible : bool, optional
+        With True (default) an :class:`InfeasibleError` names every
+        infeasible lane; pass False to get per-lane ``feasible`` flags
+        instead (what-if sweeps legitimately probe infeasible capacity
+        points).
 
-    With ``check_feasible=True`` (default) an :class:`InfeasibleError` names
-    every infeasible lane; pass False to get per-lane ``feasible`` flags
-    instead (what-if sweeps legitimately probe infeasible capacity points).
+    Returns
+    -------
+    BatchAllocationResult
+        Every leaf carries a leading B dim; ``instance(b)`` trims lane b
+        back to a single-instance view.
+
+    Raises
+    ------
+    InfeasibleError
+        When ``check_feasible`` and any lane violates ``sum(r_low) <= R``
+        or has some E_i >= 0.
     """
     if not isinstance(batch, ScenarioBatch):
         batch = stack_scenarios(batch)
@@ -152,3 +202,108 @@ def solve_batch(batch: Union[ScenarioBatch, Sequence[Scenario]],
                                  integer=integer_sol, mask=batch.mask,
                                  n_classes=batch.n_classes, iters=sol.iters,
                                  feasible=sol.feasible)
+
+
+@dataclass
+class StreamingResult(BatchAllocationResult):
+    """One streaming re-solve: a batch result plus incremental bookkeeping.
+
+    Attributes (beyond :class:`BatchAllocationResult`)
+    --------------------------------------------------
+    resolved : np.ndarray
+        (B,) bool — lanes that actually iterated this call (dirty or
+        never-solved); the complement was frozen at its stored equilibrium.
+    centralized_gap : jnp.ndarray or None
+        (B,) relative gap of the fractional GNEP total over the exact
+        centralized (P3) optimum, when ``cross_check=True`` was requested.
+    """
+    resolved: Optional[np.ndarray] = None
+    centralized_gap: Optional[jnp.ndarray] = None
+
+
+def solve_streaming(window: AdmissionWindow, *, eps_bar: float = 0.03,
+                    lam: float = 0.05, max_iters: int = 200,
+                    integer: bool = True, sweep_fn=None,
+                    cross_check: bool = False,
+                    cross_check_atol: float = 1e-6) -> StreamingResult:
+    """Incrementally re-solve a live :class:`AdmissionWindow`.
+
+    Only lanes dirtied by events since the last call iterate Algorithm 4.1
+    (restarting from the paper's cold init so they reproduce the cold
+    trajectory exactly); clean lanes are frozen at their stored equilibrium
+    and cost zero solver iterations.  The result is numerically equivalent
+    to a cold ``solve_batch`` of the window's current state, while steady-
+    state event handling stays on one compiled XLA program (no re-stacking,
+    no shape changes, no retrace).  The new equilibrium is committed back to
+    the window, marking every lane clean.
+
+    Parameters
+    ----------
+    window : AdmissionWindow
+        The live window; mutated (equilibrium state committed, dirty flags
+        cleared).
+    eps_bar, lam, max_iters, sweep_fn
+        Forwarded to ``game.solve_distributed_batch`` (see its docstring).
+    integer : bool, optional
+        Apply the vectorized Algorithm 4.2 rounding pass (default True).
+    cross_check : bool, optional
+        Also compare every lane against its exact centralized (P3) optimum
+        (``solve_centralized_batch``) and attach the per-lane relative gap.
+        Baseline totals are memoized per lane in the window and recomputed
+        only for lanes whose scenario changed, mirroring the incremental
+        distributed solve.
+        Raises :class:`RuntimeError` if any feasible lane's fractional GNEP
+        total undercuts the exact optimum by more than ``cross_check_atol``
+        (impossible for a correct solver — the equilibrium is (P3)-feasible).
+    cross_check_atol : float, optional
+        Absolute slack allowed in the sanity direction of the cross-check.
+
+    Returns
+    -------
+    StreamingResult
+        Batch result over ALL lanes (frozen lanes carry their stored
+        equilibrium) plus ``resolved`` / ``centralized_gap`` bookkeeping.
+        Per-lane ``feasible`` flags report infeasible transients; no
+        exception is raised for them (arrival bursts legitimately overload
+        a window until load is shed).
+    """
+    batch = window.batch
+    init = window.warm_start()
+    resolved = np.asarray(init.active).copy()
+
+    sol = game.solve_distributed_batch(batch, eps_bar=eps_bar, lam=lam,
+                                       max_iters=max_iters, sweep_fn=sweep_fn,
+                                       init=init)
+    window.commit(sol.r, sol.aux, sol.iters)
+
+    gap = None
+    if cross_check:
+        # The exact (P3) optimum of a lane only changes when its scenario
+        # does, so recompute just the stale lanes and serve the rest from
+        # the window's memo.  Per-lane single-instance solves keep the
+        # shapes (n_max,) regardless of how many lanes are stale — one
+        # compiled program per window width, never a retrace per stale
+        # count the way a ragged sub-batch gather would.
+        stale = np.flatnonzero(window.baseline_stale)
+        for b in stale:
+            lane = jax.tree_util.tree_map(lambda l: l[b], batch.scenarios)
+            window.baseline_totals[b] = float(
+                solve_centralized(lane, mask=batch.mask[b]).total)
+        window.baseline_stale[stale] = False
+        cent_total = jnp.asarray(window.baseline_totals, sol.total.dtype)
+        scale = jnp.maximum(jnp.abs(cent_total), 1.0)
+        gap = (sol.total - cent_total) / scale
+        undercut = (sol.total < cent_total - cross_check_atol) & sol.feasible
+        if bool(jnp.any(undercut)):
+            bad = [int(b) for b in jnp.nonzero(undercut)[0]]
+            raise RuntimeError(
+                f"lanes {bad}: GNEP total beats the exact (P3) optimum — "
+                "solver inconsistency (check mask/padding invariants)")
+
+    integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR, sol.psi)
+                   if integer else None)
+    return StreamingResult(method="streaming", fractional=sol,
+                           integer=integer_sol, mask=batch.mask,
+                           n_classes=batch.n_classes, iters=sol.iters,
+                           feasible=sol.feasible, resolved=resolved,
+                           centralized_gap=gap)

@@ -12,7 +12,12 @@ the capacity multiplier ``a``:
 slackness picks a = 0 if the box solution fits in R, else the unique root of
 ``sum r_i(a) = R``, found by bisection to machine precision.  The full
 (psi, s^M, s^R) solution is recovered through Prop. 3.3.  This replaces the
-paper's generic NLP solver with a closed-form method (see DESIGN.md Sec. 3).
+paper's generic NLP solver with a closed-form method (see docs/PAPER_MAP.md).
+
+Both a single-instance (`solve_centralized`, optionally mask-aware) and a
+batched (`solve_centralized_batch`, one vmapped program over a
+:class:`ScenarioBatch`) entry point are provided; the batched form is the
+exact-optimum baseline the streaming engine cross-checks against.
 """
 from __future__ import annotations
 
@@ -21,56 +26,127 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Scenario, Solution, objective
+from repro.core.types import Scenario, ScenarioBatch, Solution, objective
 
 _BISECT_ITERS = 120
 
 
-def _r_of_a(scn: Scenario, a):
-    r_unc = jnp.sqrt(scn.alpha * scn.K / (scn.rho_bar + a))
-    return jnp.clip(r_unc, scn.r_low, scn.r_up)
+def _r_of_a(scn: Scenario, a, valid):
+    """Box-clipped stationarity solution r(a); masked classes pin to 0."""
+    num = jnp.where(valid, scn.alpha * scn.K, 0.0)
+    r_unc = jnp.sqrt(num / (scn.rho_bar + a))
+    return jnp.clip(r_unc, jnp.where(valid, scn.r_low, 0.0),
+                    jnp.where(valid, scn.r_up, 0.0))
 
 
 @partial(jax.jit, static_argnames=())
-def solve_centralized(scn: Scenario) -> Solution:
-    """Exact optimum of (P3) + Prop. 3.3 recovery. Pure function, jittable."""
-    feasible = (jnp.sum(scn.r_low) <= scn.R) & jnp.all(scn.E < 0)
+def solve_centralized(scn: Scenario, *, mask=None) -> Solution:
+    """Exact optimum of (P3) + Prop. 3.3 recovery.  Pure function, jittable.
 
-    r0 = _r_of_a(scn, 0.0)
+    Parameters
+    ----------
+    scn : Scenario
+        One allocation instance (per-class leaves (N,), scalars 0-d).
+    mask : jnp.ndarray, optional
+        (N,) bool validity mask for padded batch lanes.  Masked-off classes
+        receive r = sM = sR = 0, psi = psi_low, and contribute nothing to
+        the capacity constraint, cost or penalty.  ``None`` treats every
+        class as valid (the plain single-instance solve).
+
+    Returns
+    -------
+    Solution
+        The exact (P3) optimum: ``aux`` carries the KKT capacity multiplier
+        ``a`` (0 when capacity is slack), ``iters`` the fixed bisection
+        budget.  ``feasible`` flags ``sum(r_low) <= R`` and all deadlines
+        attainable (E < 0); the returned point is the box/capacity projection
+        regardless, so callers must check the flag.
+    """
+    valid = jnp.ones(scn.A.shape, bool) if mask is None else mask
+    r_low = jnp.where(valid, scn.r_low, 0.0)
+    feasible = (jnp.sum(r_low) <= scn.R) & jnp.all(
+        jnp.where(valid, scn.E < 0, True))
+
+    r0 = _r_of_a(scn, 0.0, valid)
     fits = jnp.sum(r0) <= scn.R
 
-    # upper bracket: multiplier pushing every class to its lower bound
-    a_hi = jnp.max(scn.alpha * scn.K / (scn.r_low ** 2)) - scn.rho_bar + 1.0
+    # upper bracket: multiplier pushing every valid class to its lower bound
+    # (valid classes have r_low = K * H_low > 0, so the ratio is finite)
+    a_hi = jnp.max(jnp.where(
+        valid, scn.alpha * scn.K / jnp.maximum(r_low, 1e-30) ** 2,
+        0.0)) - scn.rho_bar + 1.0
     a_hi = jnp.maximum(a_hi, 1.0)
 
     def body(_, lohi):
         lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        too_big = jnp.sum(_r_of_a(scn, mid)) > scn.R
+        too_big = jnp.sum(_r_of_a(scn, mid, valid)) > scn.R
         return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body,
                                (jnp.zeros_like(a_hi), a_hi))
     a = jnp.where(fits, 0.0, hi)
-    r = _r_of_a(scn, a)
+    r = _r_of_a(scn, a, valid)
 
     # Prop. 3.3 recovery
-    sM = scn.xiM * r
-    sR = scn.xiR * r
-    psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
+    sM = jnp.where(valid, scn.xiM * r, 0.0)
+    sR = jnp.where(valid, scn.xiR * r, 0.0)
+    psi = jnp.clip(scn.K / jnp.where(r > 0, r, 1.0), scn.psi_low, scn.psi_up)
+    psi = jnp.where(valid, psi, scn.psi_low)
 
     cost = scn.rho_bar * jnp.sum(r)
-    penalty = jnp.sum(scn.alpha * psi - scn.beta)
+    penalty = jnp.sum(jnp.where(valid, scn.alpha * psi - scn.beta, 0.0))
     return Solution(r=r, psi=psi, sM=sM, sR=sR, cost=cost, penalty=penalty,
                     total=cost + penalty, feasible=feasible,
                     iters=jnp.asarray(_BISECT_ITERS), aux=a)
+
+
+@jax.jit
+def solve_centralized_batch(batch: ScenarioBatch) -> Solution:
+    """Exact (P3) optimum of every lane of a batch, as one vmapped program.
+
+    This is the batch-scale exact-optimum baseline: the streaming facade
+    (``allocator.solve_streaming(cross_check=True)``) compares the GNEP
+    equilibrium total of every lane against this lower bound.
+
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        B stacked (padded + masked) instances.
+
+    Returns
+    -------
+    Solution
+        Leaves carry a leading batch dim (same layout as
+        ``solve_distributed_batch``): r/psi/sM/sR are (B, n_max) with padded
+        classes inert, scalars are (B,); ``aux`` is the per-lane KKT
+        multiplier ``a``.
+    """
+    return jax.vmap(lambda s, m: solve_centralized(s, mask=m))(
+        batch.scenarios, batch.mask)
 
 
 def kkt_residual(scn: Scenario, r, a) -> jnp.ndarray:
     """Max KKT violation of a candidate (P3) solution (used by tests).
 
     Checks stationarity with box multipliers eliminated by sign conditions,
-    primal feasibility and complementary slackness of the capacity constraint.
+    primal feasibility and complementary slackness of the capacity
+    constraint.
+
+    Parameters
+    ----------
+    scn : Scenario
+        The instance the candidate solves.
+    r : jnp.ndarray
+        (N,) candidate allocation.
+    a : jnp.ndarray
+        Scalar candidate capacity multiplier.
+
+    Returns
+    -------
+    jnp.ndarray
+        Scalar max of the (scale-normalised) violation terms; ~0 at the
+        exact optimum.
     """
     g = scn.rho_bar + a - scn.alpha * scn.K / (r ** 2)   # dL/dr (box mults out)
     tol_r = 1e-6 * jnp.maximum(scn.r_up, 1.0)
@@ -89,6 +165,19 @@ def kkt_residual(scn: Scenario, r, a) -> jnp.ndarray:
 
 
 def objective_of_r(scn: Scenario, r) -> jnp.ndarray:
-    """(P3a) objective for an arbitrary feasible r (psi via Prop. 3.3)."""
+    """(P3a) objective for an arbitrary feasible r (psi via Prop. 3.3).
+
+    Parameters
+    ----------
+    scn : Scenario
+        The instance.
+    r : jnp.ndarray
+        (N,) allocation in the (P3) feasible box.
+
+    Returns
+    -------
+    jnp.ndarray
+        Scalar running cost + rejection penalty (cents per unit time).
+    """
     psi = jnp.clip(scn.K / r, scn.psi_low, scn.psi_up)
     return objective(scn, r, psi)

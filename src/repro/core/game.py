@@ -85,12 +85,31 @@ def _rm_pick(scn: Scenario, cand, fill, sum_fill, p_fill, order, mask):
 
 
 def rm_solve(scn: Scenario, bids: jnp.ndarray, *, mask=None, sweep_fn=None):
-    """Exact solution of (P5) given CM bids. Returns (rho, r, objective).
+    """Exact solution of the Resource Manager's problem (P5) given CM bids.
 
-    ``mask``: optional (N,) validity mask — padded classes (mask False) never
-    receive capacity and never contribute a candidate price.
-    ``sweep_fn(inc_sorted_cand, spare, p_sorted)``: optional override of the
-    candidate sweep inner loop (the Pallas kernel plugs in here).
+    Parameters
+    ----------
+    scn : Scenario
+        The instance (uses r_low/r_up/p/R/rho_bar/rho_hat).
+    bids : jnp.ndarray
+        (N,) current CM bids rho_i^a, each in [rho_bar, rho_up_i] [cents].
+    mask : jnp.ndarray, optional
+        (N,) validity mask — padded classes (mask False) never receive
+        capacity and never contribute a candidate price.
+    sweep_fn : callable, optional
+        Override of the candidate-sweep inner loop,
+        ``sweep_fn(inc (Nc, N), spare (), p_sorted (N,)) -> (fill, sum_fill,
+        p_fill)`` — the Pallas kernel plugs in here.
+
+    Returns
+    -------
+    rho : jnp.ndarray
+        Optimal unit price (a bid or an interval end of (P5e)) [cents].
+    r : jnp.ndarray
+        (N,) optimal allocation: guaranteed ``r_low`` plus the greedy
+        p-descending fill of the slack up to each admitted class's ``r_up``.
+    objective : jnp.ndarray
+        The (P5) objective at (rho, r).
     """
     if mask is None:
         mask = jnp.ones(bids.shape, bool)
@@ -113,10 +132,25 @@ def rm_solve(scn: Scenario, bids: jnp.ndarray, *, mask=None, sweep_fn=None):
 
 
 def cm_best_response(scn: Scenario, r: jnp.ndarray, *, mask=None):
-    """Closed-form optimum of each CM's (P4) given its allocation r_i.
+    """Closed-form optimum of each CM's (P4) given its allocation (Prop 4.1).
 
-    With a ``mask``, padded classes (r = 0) get psi = psi_low (never
-    "rejecting") and zero slots instead of the 0-division garbage.
+    Parameters
+    ----------
+    scn : Scenario
+        The instance (uses xiM/xiR/K and the psi box).
+    r : jnp.ndarray
+        (N,) chips granted by the RM to each class.
+    mask : jnp.ndarray, optional
+        (N,) validity mask; padded classes (r = 0) get psi = psi_low (never
+        "rejecting") and zero slots instead of the 0-division garbage.
+
+    Returns
+    -------
+    psi : jnp.ndarray
+        (N,) inverse admitted concurrency, clipped to the SLA box
+        [psi_low, psi_up] = [1/H_up, 1/H_low].
+    sM, sR : jnp.ndarray
+        (N,) map / reduce slots, the Prop. 4.1 split ``s = xi * r``.
     """
     if mask is None:
         sM = scn.xiM * r
@@ -132,8 +166,33 @@ def cm_best_response(scn: Scenario, r: jnp.ndarray, *, mask=None):
 
 
 def cm_bid_update(scn: Scenario, bids, rho, psi, lam: float, *, mask=None):
-    """Alg. 4.1 lines 11-13: rejecting CMs escalate their bid by lam*rho_up,
-    clipped to the (P4b) box [rho_bar, rho_up]."""
+    """Alg. 4.1 lines 11-13: the bid escalation (pseudo-gradient) step.
+
+    A CM still rejecting jobs (psi > psi_low) raises its bid by a fixed
+    fraction of its budget, ``lam * rho_up``, from ``max(bid, rho)``,
+    clipped to the (P4b) box [rho_bar, rho_up]; satisfied CMs keep theirs.
+
+    Parameters
+    ----------
+    scn : Scenario
+        The instance (uses psi_low, rho_up).
+    bids : jnp.ndarray
+        (N,) current bids rho_i^a [cents].
+    rho : jnp.ndarray
+        Scalar price the RM just posted.
+    psi : jnp.ndarray
+        (N,) each CM's best-response inverse concurrency.
+    lam : float
+        Escalation step (paper uses 0.05); larger converges faster but
+        overshoots the equilibrium price further.
+    mask : jnp.ndarray, optional
+        (N,) validity mask; padded classes never escalate.
+
+    Returns
+    -------
+    jnp.ndarray
+        (N,) updated bids.
+    """
     rejecting = psi > scn.psi_low * (1.0 + 1e-9)
     if mask is not None:
         rejecting = rejecting & mask
@@ -157,6 +216,28 @@ class GameState(NamedTuple):
 @partial(jax.jit, static_argnames=("max_iters",))
 def solve_distributed(scn: Scenario, *, eps_bar: float = 0.03,
                       lam: float = 0.05, max_iters: int = 200) -> Solution:
+    """Algorithm 4.1 (RM/CM best-reply) for one instance, as one XLA program.
+
+    Parameters
+    ----------
+    scn : Scenario
+        One allocation instance over N job classes.
+    eps_bar : float, optional
+        Stopping tolerance on the relative allocation change
+        ``sum_i |r_i' - r_i| / r_i`` (paper uses 0.03).
+    lam : float, optional
+        Bid-escalation step of :func:`cm_bid_update`.
+    max_iters : int, optional
+        Iteration cap (static jit argument).
+
+    Returns
+    -------
+    Solution
+        The GNEP equilibrium: ``aux`` carries the final RM price rho,
+        ``iters`` the best-reply iterations run.  ``feasible`` flags
+        ``sum(r_low) <= R`` and all E_i < 0; the trajectory is still
+        well-defined when False, but the equilibrium is meaningless.
+    """
     feasible = (jnp.sum(scn.r_low) <= scn.R) & jnp.all(scn.E < 0)
     dt = scn.A.dtype
 
@@ -197,6 +278,67 @@ class BatchGameState(NamedTuple):
     it: jnp.ndarray         # global loop counter
 
 
+class BatchWarmStart(NamedTuple):
+    """Per-lane initial state for a warm-started ``solve_distributed_batch``.
+
+    Lanes with ``active`` False are *frozen*: the while-loop never updates
+    them, so their ``r`` / ``rho`` / ``lane_iters`` pass straight through to
+    the returned :class:`Solution` — this is how the streaming engine carries
+    an already-converged lane's equilibrium across re-solves for free.  Lanes
+    with ``active`` True iterate Algorithm 4.1 from (``r``, ``bids``) exactly
+    as the cold solver would from its own init.
+
+    Attributes
+    ----------
+    r : jnp.ndarray
+        (B, n_max) initial allocation (stored equilibrium for frozen lanes,
+        masked ``r_low`` for lanes restarting cold).
+    bids : jnp.ndarray
+        (B, n_max) initial CM bids.  NOTE: to reproduce the cold Alg. 4.1
+        trajectory (and hence its equilibrium) a re-iterating lane must start
+        from the paper's init ``bids = rho_bar`` — bids only escalate during
+        the game, so carrying converged bids over changes the equilibrium.
+    rho : jnp.ndarray
+        (B,) initial RM price (pass-through value for frozen lanes).
+    lane_iters : jnp.ndarray
+        (B,) int32 starting iteration counters (stored count for frozen
+        lanes so ``Solution.iters`` stays meaningful, 0 for cold restarts).
+    active : jnp.ndarray
+        (B,) bool — True for lanes that should iterate.
+    """
+    r: jnp.ndarray
+    bids: jnp.ndarray
+    rho: jnp.ndarray
+    lane_iters: jnp.ndarray
+    active: jnp.ndarray
+
+
+def cold_start(batch: ScenarioBatch) -> BatchWarmStart:
+    """The cold Algorithm 4.1 init for every lane of ``batch``.
+
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        Stacked instances; padded classes get r = 0 and a neutral bid.
+
+    Returns
+    -------
+    BatchWarmStart
+        ``r = r_low`` (masked), ``bids = rho_bar``, ``rho = rho_bar``,
+        zero iteration counters, every lane active.  Passing this to
+        ``solve_distributed_batch(init=...)`` is identical to ``init=None``.
+    """
+    scns, mask = batch.scenarios, batch.mask
+    dt = scns.A.dtype
+    r0 = jnp.where(mask, scns.r_low, 0.0)
+    return BatchWarmStart(
+        r=r0,
+        bids=jnp.broadcast_to(scns.rho_bar[:, None], r0.shape).astype(dt),
+        rho=scns.rho_bar.astype(dt),
+        lane_iters=jnp.zeros((batch.batch_size,), jnp.int32),
+        active=jnp.ones((batch.batch_size,), bool))
+
+
 def _lane_eps(r_new, r_old, mask):
     """Alg. 4.1 convergence metric, restricted to valid classes."""
     rel = jnp.abs(r_new - r_old) / jnp.where(r_old > 0, r_old, 1.0)
@@ -206,7 +348,8 @@ def _lane_eps(r_new, r_old, mask):
 @partial(jax.jit, static_argnames=("max_iters", "sweep_fn"))
 def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
                             lam: float = 0.05, max_iters: int = 200,
-                            sweep_fn=None) -> Solution:
+                            sweep_fn=None,
+                            init: Optional[BatchWarmStart] = None) -> Solution:
     """Algorithm 4.1 for B stacked scenarios as a single XLA program.
 
     One ``while_loop`` drives all lanes; converged lanes are frozen by
@@ -215,14 +358,36 @@ def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
     bit-for-bit while the loop keeps running for the stragglers.  The loop
     exits when every lane has converged (per-instance early exit).
 
-    ``sweep_fn``: optional *batched* RM sweep override taking
-    ``(inc (B, Nc, N), spare (B,), p_sorted (B, N))`` — the batched Pallas
-    kernel (``repro.kernels.gnep_sweep.ops.make_batched_sweep_fn``) plugs in
-    here so the price sweep of all B scenarios is one kernel launch.
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        B stacked (padded + masked) instances; see ``stack_scenarios``.
+    eps_bar : float, optional
+        Alg. 4.1 stopping tolerance on the per-lane relative allocation
+        change ``sum_i |r_i' - r_i| / r_i`` (paper uses 0.03).
+    lam : float, optional
+        Bid-escalation (pseudo-gradient) step: a rejecting CM raises its bid
+        by ``lam * rho_up`` per iteration (Alg. 4.1 line 12).
+    max_iters : int, optional
+        Global iteration cap (static: changing it recompiles).
+    sweep_fn : callable, optional
+        *Batched* RM sweep override taking ``(inc (B, Nc, N), spare (B,),
+        p_sorted (B, N))`` — the batched Pallas kernel
+        (``repro.kernels.gnep_sweep.ops.make_batched_sweep_fn``) plugs in
+        here so the price sweep of all B scenarios is one kernel launch.
+        Static jit argument: pass a memoized function object.
+    init : BatchWarmStart, optional
+        Warm start for the streaming engine: lanes with ``init.active``
+        False are frozen at their stored equilibrium (zero iterations),
+        active lanes iterate from ``init.r`` / ``init.bids``.  ``None``
+        (default) is the cold Alg. 4.1 init for every lane (``cold_start``).
 
-    Returns a :class:`Solution` whose leaves carry a leading batch dim:
-    r/psi/sM/sR are (B, n_max) with padded classes identically zero, scalars
-    (cost, penalty, total, feasible, iters, aux=rho) are (B,).
+    Returns
+    -------
+    Solution
+        Leaves carry a leading batch dim: r/psi/sM/sR are (B, n_max) with
+        padded classes identically zero; cost, penalty, total, feasible,
+        iters and aux (= final RM price rho) are (B,).
     """
     scns, mask = batch.scenarios, batch.mask
     dt = scns.A.dtype
@@ -269,12 +434,12 @@ def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
             lane_iters=s.lane_iters + act.astype(s.lane_iters.dtype),
             it=s.it + 1)
 
-    r0 = jnp.where(mask, scns.r_low, 0.0)
-    init = BatchGameState(
-        r=r0, bids=jnp.broadcast_to(scns.rho_bar[:, None], r0.shape).astype(dt),
-        rho=scns.rho_bar.astype(dt), active=jnp.ones((B,), bool),
-        lane_iters=jnp.zeros((B,), jnp.int32), it=jnp.asarray(0))
-    final = jax.lax.while_loop(cond, body, init)
+    if init is None:
+        init = cold_start(batch)
+    state0 = BatchGameState(
+        r=init.r, bids=init.bids, rho=init.rho, active=init.active,
+        lane_iters=init.lane_iters.astype(jnp.int32), it=jnp.asarray(0))
+    final = jax.lax.while_loop(cond, body, state0)
 
     psi, sM, sR = jax.vmap(lambda scn, r, m: cm_best_response(scn, r, mask=m)
                            )(scns, final.r, mask)
@@ -318,12 +483,31 @@ def _rm_solve_np(scn, bids):
 def solve_distributed_python(scn: Scenario, *, eps_bar: float = 0.03,
                              lam: float = 0.05, max_iters: int = 200,
                              per_cm_callback: Optional[Callable] = None):
-    """Algorithm 4.1 exactly as written: a Python ``repeat`` loop, the RM solve,
-    then one (P4) solve *per CM* in a Python for-loop.  This mirrors the
-    paper's serial testbed (Sec. 5.3) whose per-CM timings are divided by N to
-    estimate distributed wall-clock; used as the Fig. 7 / §Perf baseline.
+    """Algorithm 4.1 exactly as written: a Python ``repeat`` loop, the RM
+    solve, then one (P4) solve *per CM* in a Python for-loop.
 
-    Returns (Solution, n_iters, per_iteration_cm_seconds).
+    This mirrors the paper's serial testbed (Sec. 5.3) whose per-CM timings
+    are divided by N to estimate distributed wall-clock; used as the Fig. 7
+    / §Perf baseline.
+
+    Parameters
+    ----------
+    scn : Scenario
+        One allocation instance.
+    eps_bar, lam, max_iters
+        As in :func:`solve_distributed`.
+    per_cm_callback : callable, optional
+        ``f(i, r_i, sM_i, sR_i, psi_i)`` invoked after each CM's (P4) solve
+        (instrumentation hook for the timing experiments).
+
+    Returns
+    -------
+    sol : Solution
+        The equilibrium (same layout as :func:`solve_distributed`).
+    n_iters : int
+        Best-reply iterations run.
+    cm_seconds : list of float
+        Wall-clock seconds of the serial CM loop, one entry per iteration.
     """
     import time
 
@@ -379,7 +563,27 @@ def distributed_walltime_estimate(n_cms: int, iters: int,
                                   serial_cm_seconds: float,
                                   rm_seconds: float = 0.0,
                                   net_rtt_s: float = 1.3e-4) -> float:
-    """Paper Sec. 5.3 timing model: serial CM time / N + per-iteration network
-    round-trips (two floats each way; default RTT from a 100 Mb/s LAN
-    micro-benchmark, ~130 us)."""
+    """Paper Sec. 5.3 timing model for true-distributed wall-clock.
+
+    Parameters
+    ----------
+    n_cms : int
+        Number of Class Managers (the CM solves run in parallel).
+    iters : int
+        Best-reply iterations of the run being estimated.
+    serial_cm_seconds : float
+        Total serial CM-loop seconds measured by
+        :func:`solve_distributed_python`.
+    rm_seconds : float, optional
+        RM solve seconds (not divided — the RM is a single player).
+    net_rtt_s : float, optional
+        Per-iteration network round-trip (two floats each way; default from
+        a 100 Mb/s LAN micro-benchmark, ~130 us).
+
+    Returns
+    -------
+    float
+        Estimated distributed wall-clock seconds:
+        ``serial_cm_seconds / N + rm_seconds + iters * net_rtt_s``.
+    """
     return serial_cm_seconds / max(n_cms, 1) + rm_seconds + iters * net_rtt_s

@@ -29,6 +29,53 @@ def _ui(key, lo, hi, shape=()):  # inclusive integer uniform
     return jax.random.randint(key, shape, lo, hi + 1)
 
 
+def _table5_raw(ks, shape, deadline_scale, dt) -> dict:
+    """The paper's Table 5/6 class-parameter design, drawn once.
+
+    Single source of the distributions shared by :func:`sample_scenario`
+    (vector draws) and :func:`sample_class_params` (one class): editing a
+    range here keeps runtime arrivals statistically identical to
+    construction-time classes.
+
+    Parameters
+    ----------
+    ks : sequence of jax.random.PRNGKey
+        Exactly 11 draw keys (one per Table 5 quantity, in fixed order).
+    shape : tuple
+        ``(n,)`` for a whole instance, ``()`` for one class.
+    deadline_scale : float
+        Multiplies the deadline D (< 1 tightens, paper Sec. 5.2.2).
+    dt : jnp.dtype
+        Float dtype of the produced arrays.
+
+    Returns
+    -------
+    dict
+        The :data:`repro.core.types.RAW_CLASS_FIELDS` arrays of ``shape``.
+    """
+    rho_up = _u(ks[0], 5.0, 20.0, shape)                  # [cents]
+    H_up = _ui(ks[1], 5, 20, shape).astype(dt)
+    cM = _ui(ks[2], 1, 4, shape).astype(dt)
+    cR = _ui(ks[3], 1, 4, shape).astype(dt)
+    m = _u(ks[4], 15000.0, 30000.0, shape)                # [cents]
+    nM = _ui(ks[5], 70, 1120, shape).astype(dt)
+    nR = jnp.full(shape, 64.0, dt)
+    M_max = _u(ks[6], 16.0, 120.0, shape)                 # [s]
+    R_max = _u(ks[7], 15.0, 75.0, shape)
+    Sh1_max = _u(ks[8], 10.0, 30.0, shape)
+    Shtyp_max = _u(ks[9], 30.0, 150.0, shape)
+    D = _u(ks[10], 900.0, 1500.0, shape) * deadline_scale  # [s]
+
+    # Table 6 derivations (X^avg = 0.8 X^max)
+    M_avg, R_avg, Shtyp_avg = 0.8 * M_max, 0.8 * R_max, 0.8 * Shtyp_max
+    H_low = jnp.maximum(jnp.floor(0.8 * H_up), 1.0)
+    A = nM * M_avg
+    B = nR * (Shtyp_avg + R_avg)
+    C = M_max + R_max + Sh1_max + Shtyp_max
+    return {"A": A, "B": B, "E": C - D, "cM": cM, "cR": cR, "H_up": H_up,
+            "H_low": H_low, "m": m, "rho_up": rho_up}
+
+
 def sample_scenario(key, n_classes: int, *, capacity_factor: float = 1.1,
                     capacity=None, deadline_scale: float = 1.0) -> Scenario:
     """Random instance per the paper's design of experiments (Table 5).
@@ -39,20 +86,7 @@ def sample_scenario(key, n_classes: int, *, capacity_factor: float = 1.1,
     """
     dt = fdtype()
     ks = jax.random.split(key, 16)
-    n = n_classes
-
-    rho_up = _u(ks[0], 5.0, 20.0, (n,))                   # [cents]
-    H_up = _ui(ks[1], 5, 20, (n,)).astype(dt)
-    cM = _ui(ks[2], 1, 4, (n,)).astype(dt)
-    cR = _ui(ks[3], 1, 4, (n,)).astype(dt)
-    m = _u(ks[4], 15000.0, 30000.0, (n,))                 # [cents]
-    nM = _ui(ks[5], 70, 1120, (n,)).astype(dt)
-    nR = jnp.full((n,), 64.0, dt)
-    M_max = _u(ks[6], 16.0, 120.0, (n,))                  # [s]
-    R_max = _u(ks[7], 15.0, 75.0, (n,))
-    Sh1_max = _u(ks[8], 10.0, 30.0, (n,))
-    Shtyp_max = _u(ks[9], 30.0, 150.0, (n,))
-    D = _u(ks[10], 900.0, 1500.0, (n,)) * deadline_scale  # [s]
+    raw = _table5_raw(ks[:11], (n_classes,), deadline_scale, dt)
 
     # cost model, Eq. 15 (v=2 fixed; one draw per cluster)
     v = 2.0
@@ -62,20 +96,37 @@ def sample_scenario(key, n_classes: int, *, capacity_factor: float = 1.1,
     srv = 2.0615
     rho_bar = (pue * energy + srv) * v / d
 
-    # Table 6 derivations
-    M_avg, R_avg, Shtyp_avg = 0.8 * M_max, 0.8 * R_max, 0.8 * Shtyp_max
-    H_low = jnp.maximum(jnp.floor(0.8 * H_up), 1.0)
-
-    A = nM * M_avg
-    B = nR * (Shtyp_avg + R_avg)
-    C = M_max + R_max + Sh1_max + Shtyp_max
-    E = C - D
-
-    scn = derive(A, B, E, cM, cR, H_up, H_low, m, rho_up,
-                 R=jnp.asarray(0.0, dt), rho_bar=rho_bar)
+    scn = derive(**raw, R=jnp.asarray(0.0, dt), rho_bar=rho_bar)
     if capacity is None:
         capacity = capacity_factor * jnp.sum(scn.r_up)
     return scn.replace(R=jnp.asarray(capacity, dt))
+
+
+def sample_class_params(key, *, deadline_scale: float = 1.0) -> dict:
+    """Raw parameters of ONE job class per the paper's Table 5/6 design.
+
+    The streaming admission engine's arrival events carry exactly this dict
+    (see :class:`repro.core.types.ClassArrival`); distributions match
+    :func:`sample_scenario` so a class admitted at runtime is statistically
+    identical to one present at window construction.
+
+    Parameters
+    ----------
+    key : jax.random.PRNGKey
+        Draw key.
+    deadline_scale : float, optional
+        Multiplies the deadline D_i (< 1 tightens, paper Sec. 5.2.2).
+
+    Returns
+    -------
+    dict
+        ``{A, B, E, cM, cR, H_up, H_low, m, rho_up}`` as python floats —
+        the :data:`repro.core.types.RAW_CLASS_FIELDS` of one class
+        (E = C - D is always negative under Table 5 ranges).
+    """
+    ks = jax.random.split(key, 11)
+    raw = _table5_raw(ks, (), deadline_scale, fdtype())
+    return {k: float(v) for k, v in raw.items()}
 
 
 def from_roofline(compute_s, collective_s, overhead_s, deadline_s, *,

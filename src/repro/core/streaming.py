@@ -1,0 +1,497 @@
+"""Streaming admission engine — the paper's *runtime* allocation loop.
+
+The paper's whole point (Sec. 1, Sec. 5 "runtime" experiments) is that the
+Resource Manager and Class Managers re-negotiate capacity **as job classes
+arrive and leave**, not on a fixed batch.  This module turns the batched GNEP
+engine (``game.solve_distributed_batch``) into that runtime system:
+
+* :class:`AdmissionWindow` maintains a *live* padded :class:`ScenarioBatch`
+  under :class:`~repro.core.types.ClassArrival` /
+  :class:`~repro.core.types.ClassDeparture` /
+  :class:`~repro.core.types.SLAEdit` /
+  :class:`~repro.core.types.CapacityChange` events.  A departing class's slot
+  is refilled with solver-inert neutral values and recycled by the next
+  arrival (free-slot recycling in the mask); the window repads every leaf to
+  a larger ``n_max`` only when a lane's row is actually full, so steady-state
+  event application never re-stacks the batch and never changes XLA shapes
+  (no recompilation).
+
+* :meth:`AdmissionWindow.warm_start` builds the incremental re-solve init:
+  lanes whose scenario is unchanged since their last equilibrium are
+  *frozen* (zero solver iterations — their stored equilibrium passes through
+  the vmapped while-loop untouched), and only *dirty* lanes iterate.  Dirty
+  lanes restart from the paper's cold Algorithm 4.1 init so they reproduce
+  the cold trajectory exactly: CM bids only escalate during the game, so
+  carrying converged bids across a scenario change would steer the game to a
+  different (higher-price) equilibrium.  This makes the streaming solve
+  numerically equivalent to a cold re-solve of the final window while doing
+  only the dirty lanes' work.
+
+The user-facing facade is :func:`repro.core.allocator.solve_streaming`
+(warm solve + Algorithm 4.2 rounding + optional centralized cross-check);
+:func:`sample_event_trace` generates random-but-replayable event traces for
+tests and ``benchmarks/streaming_perf.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import game
+from repro.core.profiles import sample_class_params
+from repro.core.types import (RAW_CLASS_FIELDS, CapacityChange, ClassArrival,
+                              ClassDeparture, Scenario, ScenarioBatch,
+                              SLAEdit, StreamEvent, WindowState, derive,
+                              neutral_class_values, stack_scenarios)
+
+#: Per-class Scenario fields (raw + derived) scattered on every class write.
+_CLASS_FIELDS = tuple(neutral_class_values(0.0).keys())
+
+
+def _derive_class(params: dict, dtype) -> dict:
+    """Derived per-class constants (Props. 3.3, Eqs. 7/8/17/18) for ONE class.
+
+    Parameters
+    ----------
+    params : dict
+        Raw per-class scalars; keys exactly :data:`RAW_CLASS_FIELDS`.
+    dtype : jnp.dtype
+        Float dtype of the window's leaves.
+
+    Returns
+    -------
+    dict
+        Field name -> python float for every per-class field of
+        :class:`Scenario` (the raw values plus the derived constants),
+        computed by the same :func:`repro.core.types.derive` closed forms
+        the batch constructor uses.
+    """
+    missing = set(RAW_CLASS_FIELDS) - set(params)
+    if missing:
+        raise ValueError(f"class params missing fields {sorted(missing)}")
+    one = derive(**{k: jnp.asarray([params[k]], dtype)
+                    for k in RAW_CLASS_FIELDS},
+                 R=jnp.asarray(0.0, dtype), rho_bar=jnp.asarray(0.0, dtype))
+    return {f: float(getattr(one, f)[0]) for f in _CLASS_FIELDS}
+
+
+class AdmissionWindow:
+    """A live, padded :class:`ScenarioBatch` plus last-equilibrium state.
+
+    Each *lane* is one running allocation game (one cluster / fleet); events
+    admit, remove or renegotiate job classes inside a lane.  The window keeps
+
+    * the stacked :class:`Scenario` leaves ((B, n_max) per class, (B,)
+      scalars) with vacated / never-used slots held at solver-inert neutral
+      values (:func:`~repro.core.types.neutral_class_values`);
+    * a host-side occupancy mask mirroring ``ScenarioBatch.mask`` (kept on
+      host so event application never synchronises with the device);
+    * the previous equilibrium (:class:`~repro.core.types.WindowState`) and a
+      per-lane *dirty* flag driving the warm-started incremental re-solve.
+
+    Parameters
+    ----------
+    scenarios : Sequence[Scenario]
+        Initial (possibly ragged) instances, one per lane.  The lane count B
+        is fixed for the window's lifetime; class counts are not.
+    n_max : int, optional
+        Initial padded width.  Defaults to the largest initial class count;
+        give headroom to avoid early growth repads.
+    growth_factor : float, optional
+        When a lane's row is full, every leaf is repadded to
+        ``max(ceil(growth_factor * n_max), n_max + 1)`` columns.  Stored
+        equilibria stay valid across growth because padding is inert.
+
+    Notes
+    -----
+    Feasibility is intentionally *not* enforced at admission time: a burst of
+    arrivals may legitimately push ``sum(r_low) > R`` until the operator
+    sheds load or adds capacity, so infeasible transients must be
+    representable.  ``solve_streaming`` reports per-lane ``feasible`` flags.
+    """
+
+    def __init__(self, scenarios: Sequence[Scenario], *,
+                 n_max: Optional[int] = None, growth_factor: float = 2.0):
+        scns = list(scenarios)
+        if not scns:
+            raise ValueError("AdmissionWindow needs at least one lane")
+        if growth_factor <= 1.0:
+            raise ValueError("growth_factor must be > 1")
+        batch = stack_scenarios(scns, n_max=n_max)
+        self._scn = batch.scenarios
+        self._mask = np.asarray(batch.mask).copy()
+        self.growth_factor = float(growth_factor)
+        self.dirty = np.zeros(self.batch_size, bool)
+        # per-lane memo of the exact centralized (P3) total, invalidated by
+        # the same events that dirty a lane (solve_streaming's cross-check
+        # recomputes only stale lanes instead of the whole batch per event)
+        self.baseline_totals = np.full(self.batch_size, np.nan)
+        self.baseline_stale = np.ones(self.batch_size, bool)
+        self._state: Optional[WindowState] = None
+        # raw per-class params so SLAEdit can merge partial updates
+        # (one device->host transfer per field per lane, not per scalar)
+        self._raw: Dict[Tuple[int, int], dict] = {}
+        for b, s in enumerate(scns):
+            cols = {f: np.asarray(getattr(s, f)) for f in RAW_CLASS_FIELDS}
+            for i in range(s.n):
+                self._raw[(b, i)] = {f: float(cols[f][i])
+                                     for f in RAW_CLASS_FIELDS}
+
+    # ------------------------------------------------------------------ views
+    @property
+    def batch_size(self) -> int:
+        return self._mask.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self._mask.shape[1]
+
+    @property
+    def n_classes(self) -> np.ndarray:
+        """(B,) host array — current number of admitted classes per lane."""
+        return self._mask.sum(axis=1)
+
+    @property
+    def batch(self) -> ScenarioBatch:
+        """The current window as a solver-ready :class:`ScenarioBatch`."""
+        return ScenarioBatch(scenarios=self._scn,
+                             mask=jnp.asarray(self._mask),
+                             n_classes=jnp.asarray(self.n_classes))
+
+    @property
+    def state(self) -> Optional[WindowState]:
+        """Last committed equilibrium, or None before the first solve."""
+        return self._state
+
+    def occupied(self, lane: int) -> List[int]:
+        """Slot indices currently holding an admitted class in ``lane``."""
+        return [int(i) for i in np.flatnonzero(self._mask[lane])]
+
+    # ------------------------------------------------------------------ events
+    def apply(self, event: StreamEvent) -> Optional[int]:
+        """Apply one event; returns the assigned slot for arrivals.
+
+        Parameters
+        ----------
+        event : StreamEvent
+            One of ClassArrival, ClassDeparture, SLAEdit, CapacityChange.
+
+        Returns
+        -------
+        int or None
+            The slot granted to a :class:`ClassArrival`, else None.
+        """
+        if isinstance(event, ClassArrival):
+            return self.arrive(event.lane, **event.params)
+        if isinstance(event, ClassDeparture):
+            self.depart(event.lane, event.slot)
+        elif isinstance(event, SLAEdit):
+            self.edit(event.lane, event.slot, **event.updates)
+        elif isinstance(event, CapacityChange):
+            self.set_capacity(event.lane, event.R)
+        else:
+            raise TypeError(f"unknown event {event!r}")
+        return None
+
+    def arrive(self, lane: int, **params) -> int:
+        """Admit a new class to ``lane``; returns its slot.
+
+        Parameters
+        ----------
+        lane : int
+            Target lane.
+        **params
+            Raw per-class scalars, exactly :data:`RAW_CLASS_FIELDS`
+            (A, B, E, cM, cR, H_up, H_low, m, rho_up).
+
+        Returns
+        -------
+        int
+            The slot index granted — the lowest free slot; the window grows
+            (repads every leaf) only when the lane's row is full.
+        """
+        self._check_lane(lane)
+        free = np.flatnonzero(~self._mask[lane])
+        if free.size == 0:
+            self.grow(grown_n_max(self.n_max, self.growth_factor))
+            free = np.flatnonzero(~self._mask[lane])
+        slot = int(free[0])
+        self._raw[(lane, slot)] = dict(params)
+        self._write_class(lane, slot, dict(params))
+        self._mask[lane, slot] = True
+        self._refresh_rho_hat(lane)
+        self._mark_dirty(lane)
+        return slot
+
+    def depart(self, lane: int, slot: int) -> None:
+        """Remove the class at (lane, slot); the slot becomes recyclable."""
+        self._check_slot(lane, slot)
+        neutral = neutral_class_values(float(self._scn.rho_bar[lane]))
+        kw = {}
+        for f in _CLASS_FIELDS:
+            kw[f] = getattr(self._scn, f).at[lane, slot].set(neutral[f])
+        self._scn = self._scn.replace(**kw)
+        self._mask[lane, slot] = False
+        self._raw.pop((lane, slot), None)
+        self._refresh_rho_hat(lane)
+        if self._state is not None:
+            self._state = self._state._replace(
+                r=self._state.r.at[lane, slot].set(0.0))
+        self._mark_dirty(lane)
+
+    def edit(self, lane: int, slot: int, **updates) -> None:
+        """Renegotiate the SLA / profile of the class at (lane, slot).
+
+        Parameters
+        ----------
+        lane, slot : int
+            Addressed class (must be admitted).
+        **updates
+            Subset of :data:`RAW_CLASS_FIELDS` to overwrite; derived
+            constants are recomputed from the merged raw parameters.
+        """
+        self._check_slot(lane, slot)
+        bad = set(updates) - set(RAW_CLASS_FIELDS)
+        if bad:
+            raise ValueError(f"unknown raw fields {sorted(bad)}")
+        merged = {**self._raw[(lane, slot)], **updates}
+        self._raw[(lane, slot)] = merged
+        self._write_class(lane, slot, merged)
+        self._refresh_rho_hat(lane)
+        self._mark_dirty(lane)
+
+    def set_capacity(self, lane: int, R: float) -> None:
+        """Set lane capacity R (node failures / restores, paper Fig. 2)."""
+        self._check_lane(lane)
+        self._scn = self._scn.replace(
+            R=self._scn.R.at[lane].set(float(R)))
+        self._mark_dirty(lane)
+
+    def grow(self, new_n_max: int) -> None:
+        """Repad every (B, n_max) leaf to ``new_n_max`` columns.
+
+        Padding is solver-inert (neutral classes, mask False), so stored
+        equilibria of clean lanes remain exact across growth — their padded
+        tail contributes 0 to every sum the solver takes.
+        """
+        old = self.n_max
+        if new_n_max <= old:
+            raise ValueError(f"new_n_max={new_n_max} must exceed {old}")
+        B, pad = self.batch_size, new_n_max - old
+        dt = self._scn.A.dtype
+        neutral = neutral_class_values(0.0)
+        kw = {}
+        for f in _CLASS_FIELDS:
+            leaf = getattr(self._scn, f)
+            if f == "rho_up":
+                fill = jnp.broadcast_to(self._scn.rho_bar[:, None], (B, pad))
+            else:
+                fill = jnp.full((B, pad), neutral[f], dt)
+            kw[f] = jnp.concatenate([leaf, fill.astype(dt)], axis=1)
+        self._scn = self._scn.replace(**kw)
+        self._mask = np.concatenate(
+            [self._mask, np.zeros((B, pad), bool)], axis=1)
+        if self._state is not None:
+            st = self._state
+            self._state = st._replace(
+                r=jnp.concatenate([st.r, jnp.zeros((B, pad), dt)], axis=1))
+
+    # ------------------------------------------------------------ solver state
+    def warm_start(self) -> game.BatchWarmStart:
+        """Incremental-re-solve init for ``solve_distributed_batch``.
+
+        Returns
+        -------
+        game.BatchWarmStart
+            Clean, previously solved lanes are frozen at their stored
+            equilibrium (``active`` False — zero iterations); dirty or
+            never-solved lanes get the cold Algorithm 4.1 init so they
+            reproduce the cold trajectory exactly (see module docstring for
+            why bids are never carried over).
+        """
+        cold = game.cold_start(self.batch)
+        if self._state is None:
+            return cold
+        st = self._state
+        frozen_np = np.asarray(st.solved) & ~self.dirty
+        frozen = jnp.asarray(frozen_np)
+        keep = frozen[:, None]
+        return game.BatchWarmStart(
+            r=jnp.where(keep, st.r, cold.r),
+            bids=cold.bids,
+            rho=jnp.where(frozen, st.rho, cold.rho),
+            lane_iters=jnp.where(frozen, st.lane_iters,
+                                 jnp.zeros_like(st.lane_iters)),
+            active=~frozen)
+
+    def commit(self, r, rho, lane_iters) -> None:
+        """Store a fresh equilibrium and mark every lane clean.
+
+        Parameters
+        ----------
+        r : jnp.ndarray
+            (B, n_max) equilibrium allocation of the just-finished solve.
+        rho : jnp.ndarray
+            (B,) final RM prices (``Solution.aux``).
+        lane_iters : jnp.ndarray
+            (B,) per-lane iteration counts (``Solution.iters``).
+        """
+        dt = self._scn.A.dtype
+        self._state = WindowState(
+            r=jnp.asarray(r, dt),
+            rho=jnp.asarray(rho, dt),
+            lane_iters=jnp.asarray(lane_iters, jnp.int32),
+            solved=jnp.ones((self.batch_size,), bool))
+        self.dirty[:] = False
+
+    # -------------------------------------------------------------- internals
+    def _mark_dirty(self, lane: int) -> None:
+        self.dirty[lane] = True
+        self.baseline_stale[lane] = True
+
+    def _check_lane(self, lane: int) -> None:
+        if not 0 <= lane < self.batch_size:
+            raise IndexError(f"lane {lane} out of range [0, {self.batch_size})")
+
+    def _check_slot(self, lane: int, slot: int) -> None:
+        self._check_lane(lane)
+        if not 0 <= slot < self.n_max or not self._mask[lane, slot]:
+            raise IndexError(f"(lane={lane}, slot={slot}) holds no class")
+
+    def _write_class(self, lane: int, slot: int, raw: dict) -> None:
+        vals = _derive_class(raw, self._scn.A.dtype)
+        kw = {}
+        for f in _CLASS_FIELDS:
+            kw[f] = getattr(self._scn, f).at[lane, slot].set(vals[f])
+        self._scn = self._scn.replace(**kw)
+
+    def _refresh_rho_hat(self, lane: int) -> None:
+        # rho_hat = max_i rho_up over ADMITTED classes (paper (P5e) interval
+        # end); an empty lane degenerates to the single candidate rho_bar.
+        row = self._mask[lane]
+        rho_up_row = jnp.where(jnp.asarray(row), self._scn.rho_up[lane],
+                               self._scn.rho_bar[lane])
+        self._scn = self._scn.replace(
+            rho_hat=self._scn.rho_hat.at[lane].set(jnp.max(rho_up_row)))
+
+
+def grown_n_max(n_max: int, growth_factor: float) -> int:
+    """Deterministic growth schedule shared by the window and trace tools.
+
+    Parameters
+    ----------
+    n_max : int
+        Current padded width.
+    growth_factor : float
+        Multiplicative headroom (> 1).
+
+    Returns
+    -------
+    int
+        ``max(ceil(growth_factor * n_max), n_max + 1)``.
+    """
+    return max(int(math.ceil(n_max * growth_factor)), n_max + 1)
+
+
+# --------------------------------------------------------------------------
+# Event-trace generation (tests + benchmarks/streaming_perf.py)
+# --------------------------------------------------------------------------
+
+
+def sample_event_trace(seed: int, window: AdmissionWindow, n_events: int, *,
+                       p_arrive: float = 0.45, p_depart: float = 0.30,
+                       p_edit: float = 0.15, p_capacity: float = 0.10,
+                       params_fn=None) -> List[StreamEvent]:
+    """Random, replayable event trace applicable to ``window`` (unmutated).
+
+    The generator simulates the window's slot-assignment and growth rules on
+    a host-side copy of the occupancy mask, so departure / edit events always
+    address slots that will actually be occupied when the trace is applied in
+    order — the same trace can therefore be replayed against an identically
+    initialised second window (the cold baseline of the benchmark).
+
+    Parameters
+    ----------
+    seed : int
+        Seeds both the structural RNG and the per-arrival parameter draws.
+    window : AdmissionWindow
+        Snapshot defining initial occupancy, ``n_max`` and growth factor.
+    n_events : int
+        Trace length.
+    p_arrive, p_depart, p_edit, p_capacity : float, optional
+        Event-kind mixture (renormalised).  Kinds that are momentarily
+        impossible (departing from an all-empty window) fall back to arrival.
+    params_fn : callable, optional
+        ``params_fn(jax_key) -> dict`` drawing one class's raw parameters;
+        defaults to :func:`repro.core.profiles.sample_class_params`
+        (the paper's Table 5 design of experiments).
+
+    Returns
+    -------
+    list of StreamEvent
+        Events in application order.
+    """
+    params_fn = params_fn or sample_class_params
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    probs = np.asarray([p_arrive, p_depart, p_edit, p_capacity], float)
+    probs = probs / probs.sum()
+
+    mask = window._mask.copy()
+    n_max = window.n_max
+    R = np.asarray(window._scn.R, float).copy()
+    B = mask.shape[0]
+
+    events: List[StreamEvent] = []
+    for _ in range(n_events):
+        kind = rng.choice(4, p=probs)
+        occupied = np.argwhere(mask)
+        if kind in (1, 2) and occupied.size == 0:
+            kind = 0
+        if kind == 0:                                   # arrival
+            lane = int(rng.integers(B))
+            key, sub = jax.random.split(key)
+            events.append(ClassArrival(lane=lane, params=params_fn(sub)))
+            free = np.flatnonzero(~mask[lane])
+            if free.size == 0:                          # mirror window.grow
+                new = grown_n_max(n_max, window.growth_factor)
+                mask = np.concatenate(
+                    [mask, np.zeros((B, new - n_max), bool)], axis=1)
+                n_max = new
+                free = np.flatnonzero(~mask[lane])
+            mask[lane, int(free[0])] = True
+        elif kind == 1:                                 # departure
+            lane, slot = occupied[rng.integers(len(occupied))]
+            events.append(ClassDeparture(lane=int(lane), slot=int(slot)))
+            mask[lane, slot] = False
+        elif kind == 2:                                 # SLA edit
+            lane, slot = occupied[rng.integers(len(occupied))]
+            key, sub = jax.random.split(key)
+            fresh = params_fn(sub)
+            events.append(SLAEdit(
+                lane=int(lane), slot=int(slot),
+                updates={k: fresh[k]
+                         for k in ("E", "m", "rho_up", "H_up", "H_low")}))
+        else:                                           # capacity change
+            lane = int(rng.integers(B))
+            R[lane] *= float(rng.uniform(0.9, 1.1))
+            events.append(CapacityChange(lane=lane, R=float(R[lane])))
+    return events
+
+
+def replay(window: AdmissionWindow, events: Sequence[StreamEvent]) -> None:
+    """Apply ``events`` to ``window`` in order (no solving).
+
+    Parameters
+    ----------
+    window : AdmissionWindow
+        Mutated in place.
+    events : Sequence[StreamEvent]
+        A trace, e.g. from :func:`sample_event_trace`.
+    """
+    for ev in events:
+        window.apply(ev)

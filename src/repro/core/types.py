@@ -7,9 +7,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _register(cls):
@@ -113,35 +115,82 @@ class ScenarioBatch:
     def n_max(self) -> int:
         return self.mask.shape[1]
 
+    def take(self, lanes) -> "ScenarioBatch":
+        """Gather a sub-batch of the given lane indices (order preserved).
+
+        Utility for partial work over a batch (what-if subsets, sharding
+        lanes across devices).  Note the gathered shape follows
+        ``len(lanes)``, so jitted consumers retrace per distinct count —
+        for shape-stable per-lane work, index lanes individually instead.
+        """
+        lanes = jnp.asarray(lanes)
+        return ScenarioBatch(
+            scenarios=jax.tree_util.tree_map(lambda l: l[lanes],
+                                             self.scenarios),
+            mask=self.mask[lanes], n_classes=self.n_classes[lanes])
+
     def instance(self, b: int) -> Scenario:
-        """Recover the b-th (unpadded) single-instance Scenario."""
-        n = int(self.n_classes[b])
+        """Recover the b-th (unpadded) single-instance Scenario.
+
+        Valid classes are gathered through the mask (slot order preserved),
+        so this also works for streaming windows whose recycled free slots
+        leave holes rather than a padded suffix.
+        """
+        sel = np.asarray(self.mask[b])
 
         def pick(leaf):
             leaf = leaf[b]
-            return leaf[:n] if leaf.ndim else leaf
+            return leaf[sel] if leaf.ndim else leaf
 
         return jax.tree_util.tree_map(pick, self.scenarios)
+
+
+#: Raw-parameter field names of :class:`Scenario` (per-class, user-settable).
+#: Everything else in the container is derived from these via :func:`derive`.
+RAW_CLASS_FIELDS = ("A", "B", "E", "cM", "cR", "H_up", "H_low", "m", "rho_up")
+
+
+def neutral_class_values(rho_bar: float) -> dict:
+    """Per-class values that make a padded / vacated slot solver-inert.
+
+    Neutral values keep every solver formula finite and an exact no-op for
+    the slot: zero allocation bounds (``r_low = r_up = 0``) so it never
+    receives capacity, zero penalty slope (``alpha = beta = p = m = 0``) so
+    it never contributes to cost or penalty, a unit work profile so divisions
+    stay finite, and a ``rho_up`` equal to ``rho_bar`` so the slot's bid is a
+    price candidate that is always present anyway.
+
+    Parameters
+    ----------
+    rho_bar : float
+        The instance's unit-time chip cost (the neutral bid value).
+
+    Returns
+    -------
+    dict
+        Field name -> neutral scalar for every per-class field of
+        :class:`Scenario` (raw and derived).
+    """
+    return {
+        "A": 1.0, "B": 1.0, "E": -1.0, "cM": 1.0, "cR": 1.0,
+        "H_up": 1.0, "H_low": 1.0, "m": 0.0, "rho_up": float(rho_bar),
+        "psi_low": 1.0, "psi_up": 1.0, "alpha": 0.0, "beta": 0.0,
+        "xiM": 1.0, "xiR": 1.0, "K": 1.0, "r_up": 0.0, "r_low": 0.0,
+        "p": 0.0,
+    }
 
 
 def pad_scenario(scn: Scenario, n_max: int) -> Scenario:
     """Pad per-class arrays of ``scn`` to ``n_max`` with neutral classes.
 
-    Neutral values keep every solver formula finite and inert for padded
-    slots: zero allocation bounds / prices / penalties, unit work profile.
+    See :func:`neutral_class_values` for why the padding is solver-inert.
     """
     n = scn.n
     if n > n_max:
         raise ValueError(f"scenario has {n} classes > n_max={n_max}")
     pad = n_max - n
     dt = scn.A.dtype
-    neutral = {
-        "A": 1.0, "B": 1.0, "E": -1.0, "cM": 1.0, "cR": 1.0,
-        "H_up": 1.0, "H_low": 1.0, "m": 0.0, "rho_up": float(scn.rho_bar),
-        "psi_low": 1.0, "psi_up": 1.0, "alpha": 0.0, "beta": 0.0,
-        "xiM": 1.0, "xiR": 1.0, "K": 1.0, "r_up": 0.0, "r_low": 0.0,
-        "p": 0.0,
-    }
+    neutral = neutral_class_values(float(scn.rho_bar))
     kw = {}
     for f in dataclasses.fields(Scenario):
         leaf = getattr(scn, f.name)
@@ -195,3 +244,73 @@ def objective(scn: Scenario, r, psi) -> jnp.ndarray:
 def deadline_lhs(scn: Scenario, psi, sM, sR) -> jnp.ndarray:
     """LHS of (P2d): A/(sM psi) + B/(sR psi) + E  (<= 0 when deadline met)."""
     return scn.A / (sM * psi) + scn.B / (sR * psi) + scn.E
+
+
+# --------------------------------------------------------------------------
+# Streaming admission: events + per-window solver state
+# --------------------------------------------------------------------------
+#
+# Events are plain host-side records (NOT pytrees): they mutate the
+# AdmissionWindow (core.streaming) between solves; only the resulting padded
+# ScenarioBatch ever crosses into jitted code.
+
+
+@dataclass(frozen=True)
+class ClassArrival:
+    """A new job class entering ``lane``'s allocation game.
+
+    ``params`` holds the raw per-class scalars (the :data:`RAW_CLASS_FIELDS`:
+    A, B, E, cM, cR, H_up, H_low, m, rho_up); derived constants are computed
+    by the window on admission.  The slot is chosen by the window (lowest
+    free slot, growing ``n_max`` only when the lane's row is full).
+    """
+    lane: int
+    params: dict
+
+
+@dataclass(frozen=True)
+class ClassDeparture:
+    """Job class in (``lane``, ``slot``) leaves; its slot is recycled."""
+    lane: int
+    slot: int
+
+
+@dataclass(frozen=True)
+class SLAEdit:
+    """In-place SLA / profile renegotiation for the class in (lane, slot).
+
+    ``updates`` maps raw field names (subset of :data:`RAW_CLASS_FIELDS`) to
+    new values; the window merges them and re-derives the class constants.
+    """
+    lane: int
+    slot: int
+    updates: dict
+
+
+@dataclass(frozen=True)
+class CapacityChange:
+    """Lane capacity R changes (node failures / restores, paper Fig. 2)."""
+    lane: int
+    R: float
+
+
+StreamEvent = Union[ClassArrival, ClassDeparture, SLAEdit, CapacityChange]
+
+
+class WindowState(NamedTuple):
+    """Last-equilibrium solver state an :class:`AdmissionWindow` carries.
+
+    Shapes: ``r`` is (B, n_max); ``rho``/``lane_iters``/``solved`` are (B,).
+    ``solved`` marks lanes whose stored equilibrium is valid (a lane that
+    has been solved at least once since construction); the window's separate
+    host-side *dirty* mask marks lanes whose scenario changed after the
+    state was stored.  Together they drive the warm-start: clean solved
+    lanes are frozen at their stored equilibrium, all others re-iterate.
+    Equilibrium bids are intentionally NOT stored: a frozen lane never uses
+    them and a dirty lane must restart from the cold ``rho_bar`` bids to
+    reproduce the cold Alg. 4.1 trajectory (bids are monotone in the game).
+    """
+    r: jnp.ndarray
+    rho: jnp.ndarray
+    lane_iters: jnp.ndarray
+    solved: jnp.ndarray

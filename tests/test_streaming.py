@@ -1,0 +1,272 @@
+"""Streaming admission engine tests.
+
+Core guarantee under test: after ANY event sequence, the warm-started
+incremental ``solve_streaming`` is numerically equivalent (<= 1e-6, in
+practice bit-level) to a cold ``solve_distributed_batch`` of the same final
+window — including ragged growth past ``n_max`` and lanes departing
+mid-stream — while only dirty lanes iterate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionWindow, CapacityChange, ClassArrival,
+                        ClassDeparture, SLAEdit, sample_class_params,
+                        sample_event_trace, sample_scenario,
+                        solve_centralized, solve_centralized_batch,
+                        solve_distributed_batch, solve_streaming, replay)
+
+
+def make_window(ns=(5, 8, 3, 6), cf=1.2, n_max=None, seed0=0):
+    scns = [sample_scenario(jax.random.PRNGKey(seed0 + i), n,
+                            capacity_factor=cf)
+            for i, n in enumerate(ns)]
+    return AdmissionWindow(scns, n_max=n_max)
+
+
+def assert_equiv_cold(window, res, tol=1e-6):
+    """Streaming result == cold batched re-solve of the same window."""
+    cold = solve_distributed_batch(window.batch)
+    np.testing.assert_allclose(np.asarray(res.fractional.r),
+                               np.asarray(cold.r), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(res.fractional.psi),
+                               np.asarray(cold.psi), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(res.fractional.total),
+                               np.asarray(cold.total), rtol=tol)
+    np.testing.assert_allclose(np.asarray(res.fractional.aux),
+                               np.asarray(cold.aux), rtol=tol)
+    np.testing.assert_array_equal(np.asarray(res.iters),
+                                  np.asarray(cold.iters))
+    np.testing.assert_array_equal(np.asarray(res.feasible),
+                                  np.asarray(cold.feasible))
+
+
+# --------------------------------------------------------------------------
+# Equivalence with a cold re-solve under event traces
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_equals_cold_after_random_trace(seed):
+    """Event-by-event streaming solves land on the cold equilibrium of every
+    intermediate window (the acceptance criterion, three random traces)."""
+    window = make_window(n_max=9, seed0=10 * seed)
+    solve_streaming(window, integer=False)
+    trace = sample_event_trace(100 + seed, window, 30)
+    for i, ev in enumerate(trace):
+        window.apply(ev)
+        res = solve_streaming(window, integer=False)
+        if i % 7 == 0 or i == len(trace) - 1:   # spot-check along the way
+            assert_equiv_cold(window, res)
+    assert_equiv_cold(window, res)
+
+
+def test_streaming_only_iterates_dirty_lanes():
+    window = make_window()
+    first = solve_streaming(window, integer=False)
+    assert first.resolved.all()                 # first solve is cold
+    window.arrive(2, **sample_class_params(jax.random.PRNGKey(7)))
+    res = solve_streaming(window, integer=False)
+    np.testing.assert_array_equal(res.resolved, [False, False, True, False])
+    # frozen lanes carry their stored equilibrium bit-for-bit
+    for b in (0, 1, 3):
+        np.testing.assert_array_equal(np.asarray(res.fractional.r[b]),
+                                      np.asarray(first.fractional.r[b]))
+        assert int(res.iters[b]) == int(first.iters[b])
+    assert_equiv_cold(window, res)
+    # no events since: nothing iterates, result identical
+    res2 = solve_streaming(window, integer=False)
+    assert not res2.resolved.any()
+    np.testing.assert_array_equal(np.asarray(res2.fractional.r),
+                                  np.asarray(res.fractional.r))
+
+
+def test_streaming_growth_past_n_max():
+    """Arrival burst grows the padded width; stored equilibria of clean
+    lanes stay exact across the repad, and the grown window still matches a
+    cold re-solve."""
+    window = make_window(ns=(4, 5), n_max=5)
+    base = solve_streaming(window, integer=False)
+    assert window.n_max == 5
+    for i in range(4):                          # lane 1 overflows n_max=5
+        window.arrive(1, **sample_class_params(jax.random.PRNGKey(50 + i)))
+    assert window.n_max == 10                   # ceil(2.0 * 5)
+    res = solve_streaming(window, integer=False)
+    np.testing.assert_array_equal(res.resolved, [False, True])
+    np.testing.assert_array_equal(np.asarray(res.fractional.r[0][:5]),
+                                  np.asarray(base.fractional.r[0]))
+    assert np.all(np.asarray(res.fractional.r[0][5:]) == 0.0)
+    assert_equiv_cold(window, res)
+
+
+def test_streaming_departure_and_slot_recycling():
+    window = make_window(ns=(3, 6))
+    solve_streaming(window, integer=False)
+    # depart lane 0 entirely, mid-stream
+    for slot in list(window.occupied(0)):
+        window.depart(0, slot)
+    assert window.n_classes[0] == 0
+    res = solve_streaming(window, integer=False)
+    assert np.all(np.asarray(res.fractional.r[0]) == 0.0)
+    assert bool(res.feasible[0])                # an empty lane is trivially ok
+    assert_equiv_cold(window, res)
+    # the freed low slots are recycled, lowest first
+    assert window.arrive(0, **sample_class_params(jax.random.PRNGKey(3))) == 0
+    assert window.arrive(0, **sample_class_params(jax.random.PRNGKey(4))) == 1
+    res = solve_streaming(window, integer=False)
+    assert_equiv_cold(window, res)
+
+
+def test_streaming_sla_edit_and_capacity():
+    window = make_window(ns=(5, 4))
+    solve_streaming(window, integer=False)
+    window.apply(SLAEdit(lane=0, slot=2, updates={"E": -600.0, "m": 28000.0}))
+    window.apply(CapacityChange(lane=1,
+                                R=0.8 * float(window.batch.scenarios.R[1])))
+    res = solve_streaming(window, integer=False)
+    assert res.resolved.all()
+    assert_equiv_cold(window, res)
+
+
+def test_event_objects_and_replay_determinism():
+    w1, w2 = make_window(n_max=8), make_window(n_max=8)
+    t1 = sample_event_trace(9, w1, 20)
+    t2 = sample_event_trace(9, w2, 20)
+    assert t1 == t2                             # replayable: same seed, trace
+    replay(w1, t1)
+    replay(w2, t2)
+    np.testing.assert_array_equal(w1._mask, w2._mask)
+    np.testing.assert_allclose(np.asarray(w1.batch.scenarios.A),
+                               np.asarray(w2.batch.scenarios.A), rtol=0)
+    kinds = {type(e) for e in t1}
+    assert ClassArrival in kinds and ClassDeparture in kinds
+
+
+def test_window_validation_errors():
+    window = make_window(ns=(3,))
+    with pytest.raises(IndexError):
+        window.depart(0, 5)                     # padded slot holds no class
+    with pytest.raises(IndexError):
+        window.arrive(4, **sample_class_params(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError):
+        window.edit(0, 0, not_a_field=1.0)
+    with pytest.raises(ValueError):
+        window.arrive(0, A=1.0)                 # missing raw fields
+
+
+# --------------------------------------------------------------------------
+# Centralized baseline: masked + batched water-filling cross-check
+# --------------------------------------------------------------------------
+
+def test_centralized_batch_matches_per_instance():
+    window = make_window(ns=(5, 8, 3), cf=0.95)
+    batch = window.batch
+    cb = solve_centralized_batch(batch)
+    for b in range(batch.batch_size):
+        single = solve_centralized(batch.instance(b))
+        n = int(batch.n_classes[b])
+        np.testing.assert_allclose(np.asarray(cb.r[b][:n]),
+                                   np.asarray(single.r), rtol=1e-9)
+        assert float(cb.total[b]) == pytest.approx(float(single.total),
+                                                   rel=1e-9)
+    # padded classes are inert
+    assert np.all(np.asarray(cb.r)[~np.asarray(batch.mask)] == 0.0)
+
+
+def test_streaming_cross_check_gap_nonnegative():
+    window = make_window(cf=0.95)
+    res = solve_streaming(window, integer=False, cross_check=True)
+    assert res.centralized_gap is not None
+    # GNEP equilibrium can never beat the exact (P3) optimum
+    assert np.all(np.asarray(res.centralized_gap) >= -1e-9)
+    assert not window.baseline_stale.any()      # memoized after the check
+    # events invalidate only the touched lanes' baselines ...
+    window.arrive(1, **sample_class_params(jax.random.PRNGKey(11)))
+    window.depart(0, window.occupied(0)[-1])
+    np.testing.assert_array_equal(window.baseline_stale,
+                                  [True, True, False, False])
+    frozen_baselines = window.baseline_totals[2:].copy()
+    res = solve_streaming(window, integer=False, cross_check=True)
+    assert np.all(np.asarray(res.centralized_gap) >= -1e-9)
+    # ... and untouched lanes' memoized baselines are served unchanged
+    np.testing.assert_array_equal(window.baseline_totals[2:],
+                                  frozen_baselines)
+    # the memoized gaps equal a from-scratch batched baseline
+    cold_cent = solve_centralized_batch(window.batch)
+    np.testing.assert_allclose(
+        np.asarray(res.centralized_gap),
+        np.asarray((res.fractional.total - cold_cent.total)
+                   / jnp.maximum(jnp.abs(cold_cent.total), 1.0)),
+        rtol=1e-9, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Rounding + fleet integration
+# --------------------------------------------------------------------------
+
+def test_streaming_integer_rounding_consistent():
+    window = make_window(cf=0.95)
+    window.arrive(2, **sample_class_params(jax.random.PRNGKey(5)))
+    res = solve_streaming(window)
+    mask = np.asarray(window.batch.mask)
+    for x in (res.integer.r, res.integer.sM, res.integer.sR, res.integer.h):
+        x = np.asarray(x)
+        np.testing.assert_array_equal(x, np.round(x))
+        assert np.all(x[~mask] == 0.0)
+    R = np.asarray(window.batch.scenarios.R)
+    assert np.all(np.asarray(res.integer.r).sum(axis=1)
+                  <= np.floor(R) + 1e-9)
+
+
+def test_fleet_epoch_stream_matches_fresh_epoch():
+    """Streaming fleet epochs land on the same allocation a from-scratch
+    single-fleet epoch computes for the post-event tenant mix."""
+    from repro.cluster import FleetSimulator, TenantSpec, epoch_stream
+
+    def tenants(k, start=0):
+        return [TenantSpec(f"t{start + i}", "x", "train_4k",
+                           deadline_s=100.0 + 7.0 * (start + i),
+                           H_up=10 + (start + i), H_low=4,
+                           penalty_per_job=20000.0 + 500.0 * (start + i))
+                for i in range(k)]
+
+    profiles = {f"t{i}": (1.0 + 0.2 * i, 0.5, 1.0) for i in range(8)}
+    mk = lambda chips, k: FleetSimulator(total_chips=chips,
+                                         tenants=tenants(k))
+    streamed = [mk(800, 2), mk(1200, 4)]
+    for f in streamed:
+        f._profiles = dict(profiles)
+
+    newcomer = tenants(1, start=5)[0]
+    epochs = [
+        [],                                      # epoch 0: initial mix
+        [("arrive", 0, newcomer), ("depart", 1, "t1")],
+        [("edit", 0, "t0", {"deadline_s": 80.0}), ("capacity", 1, 1100)],
+    ]
+    got = list(epoch_stream(streamed, epochs))
+    assert len(got) == 3 and all(len(a) == 2 for a in got)
+    assert all(a.feasible for epoch in got for a in epoch)
+
+    # replay each end state on fresh fleets solved the plain (cold) way
+    fresh0 = mk(800, 2)
+    fresh0.tenants.append(newcomer)
+    fresh0.tenants[0].deadline_s = 80.0
+    fresh1 = mk(1100, 4)
+    fresh1.tenants = [t for t in fresh1.tenants if t.name != "t1"]
+    for f in (fresh0, fresh1):
+        f._profiles = dict(profiles)
+    want0, want1 = fresh0.epoch(), fresh1.epoch()
+
+    assert got[-1][0].chips == want0.chips
+    assert got[-1][0].h == want0.h
+    assert got[-1][1].chips == want1.chips
+    assert got[-1][1].h == want1.h
+    assert got[-1][0].total_cost == pytest.approx(want0.total_cost, rel=1e-6)
+    assert got[-1][1].total_cost == pytest.approx(want1.total_cost, rel=1e-6)
+    # streaming appended one Allocation per epoch to each fleet's history
+    assert [len(f.history) for f in streamed] == [3, 3]
+
+    # a duplicate tenant name would silently desync slots <-> window: guard
+    dup = tenants(1)[0]                       # "t0" already exists in fleet 0
+    with pytest.raises(ValueError, match="already has a tenant"):
+        list(epoch_stream(streamed, [[("arrive", 0, dup)]]))
