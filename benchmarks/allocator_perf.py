@@ -6,20 +6,42 @@
 scenarios solved by one vmapped ``solve_distributed_batch`` program vs. a
 per-instance Python loop over the jitted single solver, reported in
 scenarios/sec.
+
+``--shard`` benchmarks the device-sharded engine: the same batch solved
+unsharded vs over a 1-D lane mesh at growing device counts (forced host
+devices on CPU — the flag is injected automatically when missing), in
+scenarios/sec per device count.  Each device's shard exits as soon as its
+own lanes converge, so throughput scales with devices even before real
+parallel hardware enters.
+
+``--json PATH`` additionally writes the machine-readable record
+(``BENCH_allocator.json`` by convention) that ``scripts/check_bench.py``
+gates CI against.
 """
 import argparse
+import sys
 import time
+
+# Forced host devices must be configured BEFORE jax initializes its backend,
+# hence the sys.argv sniff at import time; programmatic main([...]) callers
+# import jax first and must set the topology themselves (run_shard warns
+# when it finds a single device).
+if "--shard" in sys.argv:
+    from repro._env import force_host_devices
+    force_host_devices()
 
 import jax
 import numpy as np
 
-from benchmarks.common import row, timed
-from repro.core import (sample_scenario, solve_centralized, solve_distributed,
+from benchmarks.common import row, timed, write_bench_json
+from repro.core import (lane_mesh, sample_scenario, shard_batch,
+                        solve_centralized, solve_distributed,
                         solve_distributed_batch, solve_distributed_python,
                         stack_scenarios)
 
 
 def run(sizes=(100, 500, 1000, 2000)):
+    out = {}
     for n in sizes:
         scn = sample_scenario(jax.random.PRNGKey(0), n, capacity_factor=0.95)
         t0 = time.perf_counter()
@@ -30,17 +52,25 @@ def run(sizes=(100, 500, 1000, 2000)):
         row(f"alloc_n{n}", t_jit,
             f"paper_serial_s={t_serial:.4f};jit_s={t_jit:.5f};"
             f"centralized_s={t_cent:.5f};speedup={t_serial/t_jit:.0f}x")
+        out[n] = {"n": n, "jit_s": t_jit, "serial_s": t_serial,
+                  "speedup": t_serial / t_jit}
+    return out[max(out)]
+
+
+def make_scenarios(B, n, ragged, seed0=0):
+    ns = ([max(3, n - (i % 5) * (n // 5)) for i in range(B)]
+          if ragged else [n] * B)
+    return [sample_scenario(jax.random.PRNGKey(seed0 + i), ni,
+                            capacity_factor=0.95)
+            for i, ni in enumerate(ns)]
 
 
 def run_batch(batch_sizes=(16, 64, 256), n=17, ragged=False, iters=3):
-    """Batched engine vs per-instance loop at each B; returns the speedups."""
-    speedups = {}
+    """Batched engine vs per-instance loop at each B (one CSV row per B);
+    returns the metrics dict of the LAST batch size only."""
+    last = {}
     for B in batch_sizes:
-        ns = ([max(3, n - (i % 5) * (n // 5)) for i in range(B)]
-              if ragged else [n] * B)
-        scns = [sample_scenario(jax.random.PRNGKey(i), ni,
-                                capacity_factor=0.95)
-                for i, ni in enumerate(ns)]
+        scns = make_scenarios(B, n, ragged)
         batch = stack_scenarios(scns)
 
         def loop():
@@ -52,18 +82,63 @@ def run_batch(batch_sizes=(16, 64, 256), n=17, ragged=False, iters=3):
                         iters=iters)
         sps_loop = B / t_loop
         sps_batch = B / t_batch
-        speedups[B] = sps_batch / sps_loop
+        last = {"B": B, "n": n, "ragged": ragged,
+                "scenarios_per_sec": sps_batch,
+                "loop_scenarios_per_sec": sps_loop,
+                "speedup": sps_batch / sps_loop}
         row(f"alloc_batch_B{B}_n{n}{'_ragged' if ragged else ''}", t_batch,
             f"loop_s={t_loop:.4f};batch_s={t_batch:.5f};"
             f"loop_sps={sps_loop:.0f};batch_sps={sps_batch:.0f};"
-            f"speedup={speedups[B]:.1f}x")
-    return speedups
+            f"speedup={last['speedup']:.1f}x")
+    return last
+
+
+def run_shard(B=256, n=96, ragged=True, iters=3, device_counts=None):
+    """Sharded engine across growing lane-mesh sizes, steady state: the
+    batch is placed on the mesh ONCE (``shard_batch``, the fleet-sweep
+    resident-batch pattern) so repeated solves pay zero resharding.
+    Returns the metrics at the largest device count plus the scaling over
+    1 device (near-linear up to the physical core count on CPU)."""
+    avail = jax.device_count()
+    if avail == 1:
+        print("run_shard: WARNING single-device topology — set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 (or call "
+              "repro._env.force_host_devices) before jax initializes; "
+              "nothing sharded will be measured", file=sys.stderr)
+    if device_counts is None:
+        device_counts = [d for d in (1, 2, 4, 8, 16) if d <= avail]
+    scns = make_scenarios(B, n, ragged)
+    batch = stack_scenarios(scns)
+
+    t_plain = timed(lambda: solve_distributed_batch(batch).total, iters=iters)
+    row(f"alloc_shard_B{B}_n{n}_unsharded", t_plain,
+        f"sps={B / t_plain:.0f}")
+
+    per_dev = {}
+    for d in device_counts:
+        mesh = lane_mesh(d)
+        resident = shard_batch(batch, mesh)
+        t = timed(
+            lambda: solve_distributed_batch(resident, mesh=mesh).total,
+            iters=iters)
+        per_dev[d] = B / t
+        row(f"alloc_shard_B{B}_n{n}_dev{d}", t,
+            f"sps={per_dev[d]:.0f};vs_unsharded={t_plain / t:.2f}x;"
+            f"vs_dev1={per_dev[d] / per_dev[device_counts[0]]:.2f}x")
+    d_max = device_counts[-1]
+    return {"B": B, "n": n, "ragged": ragged, "max_devices": d_max,
+            "scenarios_per_sec": per_dev[d_max],
+            "unsharded_scenarios_per_sec": B / t_plain,
+            "per_device_count": {str(d): s for d, s in per_dev.items()},
+            "scaling": per_dev[d_max] / per_dev[device_counts[0]]}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
                     help="benchmark the batched multi-scenario engine")
+    ap.add_argument("--shard", action="store_true",
+                    help="benchmark the device-sharded engine (lane mesh)")
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=[16, 64, 256])
     ap.add_argument("--n", type=int, default=17, help="classes per scenario")
     ap.add_argument("--ragged", action="store_true",
@@ -73,14 +148,32 @@ def main(argv=None):
                     help="per-instance mode: class counts to sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny sweep, 1 timing iter")
+    ap.add_argument("--json", nargs="?", const="BENCH_allocator.json",
+                    default=None, metavar="PATH",
+                    help="write machine-readable results "
+                         "(default PATH: BENCH_allocator.json)")
     args = ap.parse_args(argv)
 
+    # 3 timing iters even in smoke: the regression gate needs medians, and
+    # the smoke's savings come from the smaller sizes, not fewer samples
+    iters = 3
+    results = {}
+    if args.shard:
+        # fixed sizes (not --n): lanes must carry real per-iteration work
+        # for device scaling to be visible over dispatch overhead; the
+        # smoke trims the device sweep, not the problem size
+        dc = ([d for d in (1, 2, 8) if d <= jax.device_count()]
+              if args.smoke else None)
+        results["shard"] = run_shard(iters=iters, device_counts=dc)
     if args.batch:
         bs = [16] if args.smoke else args.batch_sizes
-        run_batch(bs, n=args.n, ragged=args.ragged,
-                  iters=1 if args.smoke else 3)
-    else:
-        run([100] if args.smoke else tuple(args.sizes))
+        results["batch"] = run_batch(bs, n=args.n, ragged=args.ragged,
+                                     iters=iters)
+    if not (args.batch or args.shard):
+        results["single"] = run([100] if args.smoke else tuple(args.sizes))
+
+    if args.json:
+        write_bench_json(args.json, "allocator", results, smoke=args.smoke)
 
 
 if __name__ == "__main__":

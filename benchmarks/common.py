@@ -1,4 +1,7 @@
+import json
+import subprocess
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -19,3 +22,43 @@ def timed(fn, *, warmup=1, iters=3):
 
 def row(name, seconds, derived=""):
     print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def git_sha() -> str:
+    """Short sha of HEAD, or "unknown" outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=Path(__file__).resolve().parent,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def bench_meta(**extra) -> dict:
+    """Provenance header every BENCH_*.json carries (see check_bench.py)."""
+    return {
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.jax_enable_x64),
+        **extra,
+    }
+
+
+def write_bench_json(path, benchmark: str, results: dict, **meta) -> None:
+    """Write one machine-readable benchmark record (the perf trajectory).
+
+    ``results`` maps mode name -> flat dict of config + metric leaves.
+    Exactly the metric names in ``scripts/check_bench.py``'s ``GATED``
+    table (``scenarios_per_sec``, ``events_per_sec``, ``speedup``,
+    ``scaling``) are regression-gated; context metrics like
+    ``loop_scenarios_per_sec`` / ``unsharded_events_per_sec`` are
+    recorded but not compared.
+    """
+    payload = {"benchmark": benchmark, **bench_meta(**meta),
+               "results": results}
+    p = Path(path)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {p}")

@@ -17,19 +17,35 @@ run); the streaming engine's win is doing only the dirty lane's iterations
 and none of the host-side re-stacking.  Acceptance (ISSUE 2): >= 3x higher
 events/sec than cold at B = 64 on CPU.
 
+``--shard`` adds the device-sharded warm path (``solve_streaming(mesh=...)``
+over a 1-D lane mesh; forced host devices are injected on CPU when
+missing): shards whose lanes are all clean exit with zero iterations, so
+per-event work concentrates on the dirty lane's shard.  ``--json PATH``
+writes the machine-readable record (``BENCH_streaming.json``) that
+``scripts/check_bench.py`` gates CI against.
+
     PYTHONPATH=src python -m benchmarks.streaming_perf            # full
     PYTHONPATH=src python -m benchmarks.streaming_perf --smoke    # CI
 """
 import argparse
+import sys
 import time
+
+# Forced host devices must be configured BEFORE jax initializes its backend,
+# hence the sys.argv sniff at import time; programmatic main([...]) callers
+# import jax first and must set the topology themselves (run_shard warns
+# when it finds a single device).
+if "--shard" in sys.argv:
+    from repro._env import force_host_devices
+    force_host_devices()
 
 import jax
 import numpy as np
 
-from benchmarks.common import row
-from repro.core import (AdmissionWindow, sample_event_trace, sample_scenario,
-                        solve_distributed_batch, solve_streaming,
-                        stack_scenarios)
+from benchmarks.common import row, write_bench_json
+from repro.core import (AdmissionWindow, lane_mesh, sample_event_trace,
+                        sample_scenario, solve_distributed_batch,
+                        solve_streaming, stack_scenarios)
 
 
 def build_window(B, n, *, headroom=2.0, seed=0):
@@ -47,23 +63,53 @@ def cold_resolve(window):
     return batch, solve_distributed_batch(batch)
 
 
+def stream_events(window, trace, *, mesh=None, chunk=1):
+    """Warm-path event loop; returns (total_s, per-solve latencies, result).
+
+    ``chunk`` > 1 coalesces that many events per re-solve (the
+    ``epoch_stream`` pattern: apply an epoch's events, solve once) — the
+    coalesced dirty lanes spread across the mesh's shards, which is where
+    the sharded streaming path parallelizes.
+    """
+    jax.block_until_ready(
+        solve_streaming(window, integer=False, mesh=mesh).fractional.r)
+    lat = []
+    t0 = time.perf_counter()
+    res = None
+    for i in range(0, len(trace), chunk):
+        t1 = time.perf_counter()
+        for ev in trace[i:i + chunk]:
+            window.apply(ev)
+        res = solve_streaming(window, integer=False, mesh=mesh)
+        jax.block_until_ready(res.fractional.r)
+        lat.append(time.perf_counter() - t1)
+    return time.perf_counter() - t0, lat, res
+
+
+def assert_equiv(window, warm_r, cold_r):
+    """Final warm equilibrium == final cold equilibrium (through the mask).
+
+    The cold re-stack compacts each lane's classes to a prefix while the
+    live window keeps them in their (recycled) slots, so gather through the
+    mask before comparing.  Tolerance is loose only to absorb the
+    summation-order difference of the two layouts; the layout-identical
+    equivalence (<= 1e-6) is asserted in tests/test_streaming.py and
+    tests/test_sharding.py.
+    """
+    warm_r, cold_r = np.asarray(warm_r), np.asarray(cold_r)
+    for b in range(window.batch_size):
+        sel = np.flatnonzero(window._mask[b])
+        np.testing.assert_allclose(warm_r[b, sel], cold_r[b, :sel.size],
+                                   rtol=1e-5, atol=1e-5)
+
+
 def run(B=64, n=12, n_events=120, seed=0):
-    """Time warm vs cold event handling; returns the events/sec speedup."""
+    """Time warm vs cold event handling; returns the metrics dict."""
     trace = sample_event_trace(seed + 1, build_window(B, n, seed=seed),
                                n_events)
 
-    # -- warm: streaming engine ---------------------------------------------
     w = build_window(B, n, seed=seed)
-    jax.block_until_ready(solve_streaming(w, integer=False).fractional.r)
-    lat_w = []
-    t0 = time.perf_counter()
-    for ev in trace:
-        t1 = time.perf_counter()
-        w.apply(ev)
-        res_w = solve_streaming(w, integer=False)
-        jax.block_until_ready(res_w.fractional.r)
-        lat_w.append(time.perf_counter() - t1)
-    t_warm = time.perf_counter() - t0
+    t_warm, lat_w, res_w = stream_events(w, trace)
 
     # -- cold: re-stack + full batched re-solve per event -------------------
     c = build_window(B, n, seed=seed)
@@ -78,17 +124,7 @@ def run(B=64, n=12, n_events=120, seed=0):
         lat_c.append(time.perf_counter() - t1)
     t_cold = time.perf_counter() - t0
 
-    # -- equivalence of the final equilibria --------------------------------
-    # The cold re-stack compacts each lane's classes to a prefix while the
-    # live window keeps them in their (recycled) slots, so gather through
-    # the mask before comparing.  Tolerance is loose only to absorb the
-    # summation-order difference of the two layouts; the layout-identical
-    # equivalence (<= 1e-6) is asserted in tests/test_streaming.py.
-    warm_r, cold_r = np.asarray(res_w.fractional.r), np.asarray(res_c.r)
-    for b in range(w.batch_size):
-        sel = np.flatnonzero(w._mask[b])
-        np.testing.assert_allclose(warm_r[b, sel], cold_r[b, :sel.size],
-                                   rtol=1e-5, atol=1e-5)
+    assert_equiv(w, res_w.fractional.r, res_c.r)
 
     eps_w, eps_c = n_events / t_warm, n_events / t_cold
     speedup = eps_w / eps_c
@@ -97,7 +133,54 @@ def run(B=64, n=12, n_events=120, seed=0):
         f"warm_p50_ms={1e3 * np.median(lat_w):.2f};"
         f"cold_p50_ms={1e3 * np.median(lat_c):.2f};"
         f"speedup={speedup:.1f}x")
-    return speedup
+    return {"B": B, "n": n, "n_events": n_events,
+            "events_per_sec": eps_w, "cold_events_per_sec": eps_c,
+            "warm_p50_ms": 1e3 * float(np.median(lat_w)),
+            "speedup": speedup}
+
+
+def run_shard(B=64, n=24, n_events=64, seed=0, chunk=8, device_counts=None):
+    """Coalesced streaming epochs (``chunk`` events per re-solve, the
+    ``epoch_stream`` pattern) under a lane mesh at growing device counts vs
+    the unsharded warm path; returns the largest count's metrics +
+    scaling.  Coalescing matters: a single dirty lane keeps one shard busy,
+    ``chunk`` dirty lanes spread across all of them."""
+    avail = jax.device_count()
+    if avail == 1:
+        print("run_shard: WARNING single-device topology — set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 (or call "
+              "repro._env.force_host_devices) before jax initializes; "
+              "nothing sharded will be measured", file=sys.stderr)
+    if device_counts is None:
+        device_counts = [d for d in (1, 2, 4, 8, 16) if d <= avail]
+    trace = sample_event_trace(seed + 1, build_window(B, n, seed=seed),
+                               n_events)
+
+    w = build_window(B, n, seed=seed)
+    t_plain, _, res_plain = stream_events(w, trace, chunk=chunk)
+    row(f"stream_shard_B{B}_n{n}_c{chunk}_unsharded", t_plain / n_events,
+        f"evps={n_events / t_plain:.1f}")
+
+    per_dev = {}
+    for d in device_counts:
+        mesh = lane_mesh(d)
+        wd = build_window(B, n, seed=seed)
+        t, _, res_d = stream_events(wd, trace, mesh=mesh, chunk=chunk)
+        per_dev[d] = n_events / t
+        row(f"stream_shard_B{B}_n{n}_c{chunk}_dev{d}", t / n_events,
+            f"evps={per_dev[d]:.1f};vs_unsharded={t_plain / t:.2f}x;"
+            f"vs_dev1={per_dev[d] / per_dev[device_counts[0]]:.2f}x")
+        # sharded warm path lands on the same equilibria
+        np.testing.assert_allclose(np.asarray(res_d.fractional.r),
+                                   np.asarray(res_plain.fractional.r),
+                                   rtol=1e-6, atol=1e-6)
+    d_max = device_counts[-1]
+    return {"B": B, "n": n, "n_events": n_events, "chunk": chunk,
+            "max_devices": d_max,
+            "events_per_sec": per_dev[d_max],
+            "unsharded_events_per_sec": n_events / t_plain,
+            "per_device_count": {str(d): s for d, s in per_dev.items()},
+            "scaling": per_dev[d_max] / per_dev[device_counts[0]]}
 
 
 def main(argv=None):
@@ -105,13 +188,31 @@ def main(argv=None):
     ap.add_argument("--batch-size", "-B", type=int, default=64)
     ap.add_argument("--n", type=int, default=12, help="initial classes/lane")
     ap.add_argument("--events", type=int, default=120)
+    ap.add_argument("--shard", action="store_true",
+                    help="also benchmark the device-sharded warm path")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI smoke: tiny window and trace")
+    ap.add_argument("--json", nargs="?", const="BENCH_streaming.json",
+                    default=None, metavar="PATH",
+                    help="write machine-readable results "
+                         "(default PATH: BENCH_streaming.json)")
     args = ap.parse_args(argv)
+
+    results = {}
     if args.smoke:
-        run(B=8, n=6, n_events=12)
+        results["stream"] = run(B=8, n=6, n_events=12)
     else:
-        run(B=args.batch_size, n=args.n, n_events=args.events)
+        results["stream"] = run(B=args.batch_size, n=args.n,
+                                n_events=args.events)
+    if args.shard:
+        # fixed sizes (not -B/--n): the sharded section needs lanes with
+        # enough per-solve work for the comparison to measure anything,
+        # and the gate needs a stable config; the smoke trims the trace
+        results["shard"] = (run_shard(n_events=32) if args.smoke
+                            else run_shard())
+
+    if args.json:
+        write_bench_json(args.json, "streaming", results, smoke=args.smoke)
 
 
 if __name__ == "__main__":

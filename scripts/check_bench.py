@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for scripts/ci.sh.
+
+Compares freshly measured smoke numbers (``benchmarks/*_perf.py --smoke
+--json``) against the committed baselines in ``benchmarks/baselines/`` and
+fails when a gated metric drops below its tolerance band:
+
+* **ratio metrics** (``speedup``, ``scaling``) are machine-portable-ish
+  (both sides of the ratio ran on the same box) — gated at
+  ``fresh >= baseline * (1 - RATIO_TOL)``;
+* **throughput metrics** (``scenarios_per_sec``, ``events_per_sec``) vary
+  wildly across machines, so they only catch order-of-magnitude
+  regressions — gated at ``fresh >= baseline * (1 - ABS_TOL)``.
+
+Config keys (B, n, devices, ...) of every gated section must match the
+baseline exactly — otherwise the comparison is meaningless and the gate
+fails loudly instead of silently passing on easier settings.
+
+Usage (what scripts/ci.sh does):
+
+    python -m benchmarks.allocator_perf --batch --shard --smoke \
+        --json /tmp/bench/BENCH_allocator.json
+    python -m benchmarks.streaming_perf --shard --smoke \
+        --json /tmp/bench/BENCH_streaming.json
+    python scripts/check_bench.py --fresh-dir /tmp/bench
+
+Refresh the committed baselines (after an intentional perf change) by
+writing the fresh JSONs into ``benchmarks/baselines/`` instead.
+"""
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+
+#: metric name -> tolerance class
+GATED = {
+    "speedup": "ratio",
+    "scaling": "ratio",
+    "scenarios_per_sec": "throughput",
+    "events_per_sec": "throughput",
+}
+#: config keys that must match between baseline and fresh for a section
+CONFIG_KEYS = ("B", "n", "n_events", "chunk", "max_devices", "ragged")
+
+
+def load(path: Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_section(name, base: dict, fresh: dict, tols: dict) -> list:
+    errors = []
+    for k in CONFIG_KEYS:
+        if base.get(k) != fresh.get(k):
+            errors.append(f"{name}: config mismatch {k}: baseline="
+                          f"{base.get(k)!r} fresh={fresh.get(k)!r}")
+    if errors:
+        return errors
+    for metric, klass in GATED.items():
+        if metric not in base:
+            continue
+        if metric not in fresh:
+            errors.append(f"{name}.{metric}: missing from fresh results")
+            continue
+        tol = tols[klass]
+        floor = base[metric] * (1.0 - tol)
+        status = "ok" if fresh[metric] >= floor else "FAIL"
+        print(f"  {name}.{metric:<20} baseline={base[metric]:>10.2f} "
+              f"fresh={fresh[metric]:>10.2f} floor={floor:>10.2f} "
+              f"[{klass}] {status}")
+        if status == "FAIL":
+            errors.append(
+                f"{name}.{metric}: {fresh[metric]:.2f} < floor "
+                f"{floor:.2f} (baseline {base[metric]:.2f}, -{tol:.0%})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the just-measured BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--ratio-tol", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_RATIO_TOL",
+                                                 0.6)),
+                    help="allowed drop for speedup/scaling ratios "
+                         "(loose: 2-core CI boxes jitter ~2x)")
+    ap.add_argument("--throughput-tol", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_ABS_TOL",
+                                                 0.8)),
+                    help="allowed drop for absolute throughput "
+                         "(looser still: machines differ)")
+    args = ap.parse_args()
+    tols = {"ratio": args.ratio_tol, "throughput": args.throughput_tol}
+
+    baselines = sorted(Path(args.baseline_dir).glob("BENCH_*.json"))
+    if not baselines:
+        print(f"check_bench: no baselines in {args.baseline_dir}",
+              file=sys.stderr)
+        return 1
+
+    errors = []
+    for bpath in baselines:
+        fpath = Path(args.fresh_dir) / bpath.name
+        if not fpath.exists():
+            errors.append(f"{bpath.name}: fresh file missing "
+                          f"(benchmark not run?)")
+            continue
+        base, fresh = load(bpath), load(fpath)
+        print(f"{bpath.name} (baseline sha {base.get('git_sha')}, "
+              f"fresh sha {fresh.get('git_sha')}):")
+        if base.get("device_count") != fresh.get("device_count"):
+            errors.append(
+                f"{bpath.name}: device_count mismatch baseline="
+                f"{base.get('device_count')} fresh={fresh.get('device_count')}"
+                " — run under the same forced host-device topology "
+                "(scripts/ci.sh exports it)")
+            continue
+        if base.get("smoke") != fresh.get("smoke"):
+            errors.append(
+                f"{bpath.name}: smoke mismatch baseline={base.get('smoke')} "
+                f"fresh={fresh.get('smoke')} — smoke and full runs use "
+                "different problem sizes")
+            continue
+        bad_env = [k for k in ("backend", "x64")
+                   if base.get(k) != fresh.get(k)]
+        if bad_env:
+            errors.append(
+                f"{bpath.name}: " + "; ".join(
+                    f"{k} mismatch baseline={base.get(k)!r} "
+                    f"fresh={fresh.get(k)!r}" for k in bad_env)
+                + " — throughputs across backends are not comparable")
+            continue
+        for section, bvals in base.get("results", {}).items():
+            fvals = fresh.get("results", {}).get(section)
+            if fvals is None:
+                errors.append(f"{bpath.name}: results.{section} missing "
+                              f"from fresh run")
+                continue
+            errors += compare_section(f"{bpath.name}:{section}", bvals,
+                                      fvals, tols)
+
+    for e in errors:
+        print(f"check_bench: {e}", file=sys.stderr)
+    if errors:
+        print(f"check_bench: FAILED ({len(errors)} problem(s))",
+              file=sys.stderr)
+        return 1
+    print(f"check_bench: OK ({len(baselines)} baseline file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,8 +24,8 @@ DOC_FILES = [ROOT / "README.md", ROOT / "benchmarks" / "README.md",
              *sorted((ROOT / "docs").glob("*.md"))]
 
 CORE_MODULES = ["types", "profiles", "game", "centralized", "rounding",
-                "streaming", "allocator"]
-PARAM_STRICT = {"game", "centralized", "streaming", "allocator"}
+                "streaming", "sharding", "allocator"]
+PARAM_STRICT = {"game", "centralized", "streaming", "sharding", "allocator"}
 
 LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
 

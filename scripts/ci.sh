@@ -1,10 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 verification + docs gate + fast allocator benchmark smoke.
+# Tier-1 verification + docs gate + engine benchmark smokes + perf gate.
 #
 #   scripts/ci.sh          # full tier-1 suite + docs check + engine smokes
 #   scripts/ci.sh --fast   # skip the slow end-to-end model tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# One device topology for EVERYTHING below (tests, smokes, perf gate):
+# CPU-only (also skips the minutes-long TPU metadata probe on TPU-library
+# machines) with 8 forced host devices so the device-sharding layer
+# (core/sharding.py) runs identically here, in hosted CI and on laptops.
+# The device count mirrors repro._env.FORCED_HOST_DEVICES (the python
+# entry points use that helper; keep the two in sync).
+export JAX_PLATFORMS=cpu
+if [[ "${XLA_FLAGS:-}" != *"--xla_force_host_platform_device_count"* ]]; then
+    export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_force_host_platform_device_count=8"
+fi
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
 
 PYTEST_ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -12,14 +24,24 @@ if [[ "${1:-}" == "--fast" ]]; then
 fi
 
 echo "== docs check (links + core API docstrings) =="
-PYTHONPATH=src python scripts/check_docs.py
+python scripts/check_docs.py
 
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== allocator benchmark smoke (batched engine) =="
-PYTHONPATH=src python -m benchmarks.allocator_perf --batch --smoke
-PYTHONPATH=src python -m benchmarks.allocator_perf --smoke
+# Hosted CI sets BENCH_OUT to a workspace path so the fresh JSONs can be
+# uploaded as an artifact; locally they land in a throwaway tmpdir.
+BENCH_DIR="${BENCH_OUT:-$(mktemp -d)}"
+mkdir -p "${BENCH_DIR}"
 
-echo "== streaming admission engine smoke =="
-PYTHONPATH=src python -m benchmarks.streaming_perf --smoke
+echo "== allocator benchmark smoke (batched + sharded engine) =="
+python -m benchmarks.allocator_perf --batch --shard --smoke \
+    --json "${BENCH_DIR}/BENCH_allocator.json"
+python -m benchmarks.allocator_perf --smoke
+
+echo "== streaming admission engine smoke (warm + sharded) =="
+python -m benchmarks.streaming_perf --shard --smoke \
+    --json "${BENCH_DIR}/BENCH_streaming.json"
+
+echo "== benchmark regression gate (vs benchmarks/baselines/) =="
+python scripts/check_bench.py --fresh-dir "${BENCH_DIR}"

@@ -1,0 +1,32 @@
+"""Process-environment knobs that must be set BEFORE jax initializes.
+
+Deliberately jax-free: importing this module must not trigger backend
+initialization, or the knobs it sets would be ignored.
+"""
+from __future__ import annotations
+
+import os
+
+#: Forced host-device count shared by tests/conftest.py, the --shard
+#: benchmarks and scripts/ci.sh (which re-states it in shell).  The perf
+#: gate (scripts/check_bench.py) hard-fails on device_count mismatches, so
+#: every entry point must agree on this number.
+FORCED_HOST_DEVICES = 8
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int = FORCED_HOST_DEVICES) -> None:
+    """Inject ``--xla_force_host_platform_device_count=n`` into XLA_FLAGS.
+
+    No-op when the flag is already present (an explicit topology pin wins).
+    Only affects the CPU platform; must run before jax touches a backend.
+
+    Parameters
+    ----------
+    n : int, optional
+        Device count to force (default :data:`FORCED_HOST_DEVICES`).
+    """
+    if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + f" {_FLAG}={n}").strip()

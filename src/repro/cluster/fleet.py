@@ -170,7 +170,8 @@ class FleetSimulator:
 def epoch_batch(fleets: Sequence[FleetSimulator], *,
                 profiles: Optional[Sequence[Optional[dict]]] = None,
                 eps_bar: float = 0.03, lam: float = 0.05,
-                max_iters: int = 200, sweep_fn=None) -> List[Allocation]:
+                max_iters: int = 200, sweep_fn=None,
+                mesh=None) -> List[Allocation]:
     """One allocator epoch for MANY fleets: every fleet's RM/CM game is a lane
     of one batched GNEP solve (ragged tenant counts pad to n_max), then one
     vectorized Algorithm 4.2 rounding pass.  This is the multi-cluster analog
@@ -182,6 +183,11 @@ def epoch_batch(fleets: Sequence[FleetSimulator], *,
     fleets without one fall back to their stored profiles or the dry-run
     roofline files.
 
+    ``mesh``: optional 1-D lane mesh (``repro.core.sharding.lane_mesh``) —
+    the fleets' games shard across devices, one lane slice per device; a
+    fleet count that does not divide the device count is padded with inert
+    lanes.  Per-fleet allocations match the unsharded epoch.
+
     Appends the resulting Allocation to each fleet's history and returns the
     per-fleet list, in input order.
     """
@@ -192,7 +198,7 @@ def epoch_batch(fleets: Sequence[FleetSimulator], *,
     scns = [f.scenario(profiles=getattr(f, "_profiles", None)) for f in fleets]
     batch = stack_scenarios(scns)
     res = solve_batch(batch, "distributed", eps_bar=eps_bar, lam=lam,
-                      max_iters=max_iters, sweep_fn=sweep_fn)
+                      max_iters=max_iters, sweep_fn=sweep_fn, mesh=mesh)
     allocs = []
     for b, f in enumerate(fleets):
         inst = res.instance(b)
@@ -212,6 +218,7 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
                  epochs: Iterable[Sequence[FleetEvent]], *,
                  n_max: Optional[int] = None, eps_bar: float = 0.03,
                  lam: float = 0.05, max_iters: int = 200, sweep_fn=None,
+                 mesh=None,
                  cross_check: bool = False) -> Iterator[List[Allocation]]:
     """Drive MANY fleets' games through a tenant arrival/departure trace.
 
@@ -242,6 +249,10 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
         Initial padded width headroom for the window.
     eps_bar, lam, max_iters, sweep_fn
         Solver knobs, forwarded to ``solve_streaming``.
+    mesh : jax.sharding.Mesh, optional
+        1-D lane mesh: every fleet's window lane lives on its shard; the
+        dirty-lane warm-start split is preserved across devices
+        (``solve_streaming(mesh=...)``).
     cross_check : bool, optional
         Cross-check every epoch against the exact centralized optimum.
 
@@ -297,7 +308,7 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
             apply_event(ev)
         res = solve_streaming(window, eps_bar=eps_bar, lam=lam,
                               max_iters=max_iters, sweep_fn=sweep_fn,
-                              cross_check=cross_check)
+                              mesh=mesh, cross_check=cross_check)
         # one device->host transfer per array, not per tenant
         r_np, h_np = np.asarray(res.integer.r), np.asarray(res.integer.h)
         total_np, iters_np = np.asarray(res.integer.total), np.asarray(res.iters)

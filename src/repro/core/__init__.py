@@ -12,6 +12,10 @@ from repro.core.profiles import (from_roofline, sample_class_params,
                                  sample_scenario)
 from repro.core.rounding import (IntegerSolution, round_solution,
                                  round_solution_batch)
+from repro.core.sharding import (LANE_AXIS, lane_mesh, lane_sharding,
+                                 pad_batch_lanes, pad_warm_start,
+                                 padded_lane_count, shard_batch,
+                                 solve_sharded_batch)
 from repro.core.streaming import (AdmissionWindow, replay, sample_event_trace)
 from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
                               RAW_CLASS_FIELDS, Scenario, ScenarioBatch,
@@ -24,12 +28,15 @@ __all__ = [
     "BatchWarmStart", "CapacityChange", "ClassArrival", "ClassDeparture",
     "InfeasibleError", "IntegerSolution", "RAW_CLASS_FIELDS", "SLAEdit",
     "Scenario", "ScenarioBatch", "Solution", "StreamEvent", "StreamingResult",
-    "WindowState", "cm_best_response", "cm_bid_update", "cold_start",
-    "deadline_lhs", "derive", "distributed_walltime_estimate",
-    "from_roofline", "kkt_residual", "neutral_class_values", "objective",
-    "objective_of_r", "pad_scenario", "replay", "rm_solve", "round_solution",
-    "round_solution_batch", "sample_class_params", "sample_event_trace",
-    "sample_scenario", "solve", "solve_batch", "solve_centralized",
-    "solve_centralized_batch", "solve_distributed", "solve_distributed_batch",
-    "solve_distributed_python", "solve_streaming", "stack_scenarios",
+    "WindowState", "LANE_AXIS", "cm_best_response", "cm_bid_update",
+    "cold_start", "deadline_lhs", "derive", "distributed_walltime_estimate",
+    "from_roofline", "kkt_residual", "lane_mesh", "lane_sharding",
+    "neutral_class_values", "objective", "objective_of_r", "pad_batch_lanes",
+    "pad_scenario", "pad_warm_start", "padded_lane_count", "replay",
+    "rm_solve", "round_solution", "round_solution_batch", "shard_batch",
+    "sample_class_params", "sample_event_trace", "sample_scenario",
+    "solve", "solve_batch",
+    "solve_centralized", "solve_centralized_batch", "solve_distributed",
+    "solve_distributed_batch", "solve_distributed_python",
+    "solve_sharded_batch", "solve_streaming", "stack_scenarios",
 ]

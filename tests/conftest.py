@@ -3,7 +3,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
+# Force a multi-device CPU topology BEFORE jax initializes its backend so the
+# device-sharding layer (core/sharding.py, tests/test_sharding.py) is testable
+# anywhere.  Only the CPU platform is affected; a machine whose XLA_FLAGS
+# already pins a device count keeps it.
+from repro._env import force_host_devices  # noqa: E402  (jax-free import)
+
+force_host_devices()
+
+import jax  # noqa: E402
 
 # The allocator math (paper Sec. 3-4) is validated at f64; model code uses
 # explicit f32/bf16 dtypes so enabling x64 here must not change model behavior

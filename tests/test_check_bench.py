@@ -1,0 +1,99 @@
+"""scripts/check_bench.py gate logic: passes in-band, fails regressions,
+refuses config mismatches (which would silently compare different work)."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def record(**metrics):
+    return {"benchmark": "allocator", "git_sha": "test", "backend": "cpu",
+            "device_count": 8, "x64": True, "smoke": True,
+            "results": {"batch": {"B": 16, "n": 17, **metrics}}}
+
+
+def write(d, name, payload):
+    (d / name).write_text(json.dumps(payload))
+
+
+def run_gate(tmp_path, baseline, fresh, monkeypatch):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    write(bdir, "BENCH_allocator.json", baseline)
+    write(fdir, "BENCH_allocator.json", fresh)
+    monkeypatch.setattr(
+        sys, "argv", ["check_bench", "--fresh-dir", str(fdir),
+                      "--baseline-dir", str(bdir)])
+    return check_bench.main()
+
+
+def test_gate_passes_within_band(tmp_path, monkeypatch):
+    base = record(speedup=10.0, scenarios_per_sec=1000.0)
+    fresh = record(speedup=5.0, scenarios_per_sec=300.0)   # -50%, -70%: ok
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 0
+
+
+def test_gate_fails_ratio_regression(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=2.0)                 # below the -60% ratio floor
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_throughput_collapse(tmp_path, monkeypatch):
+    base = record(scenarios_per_sec=1000.0)
+    fresh = record(scenarios_per_sec=100.0)     # order-of-magnitude drop
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_config_mismatch(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    fresh["results"]["batch"]["B"] = 8          # easier config: refuse
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_missing_section_or_file(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    del fresh["results"]["batch"]               # benchmark silently skipped
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_device_topology_mismatch(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    fresh["device_count"] = 1                   # different forced topology
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_smoke_mismatch(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    fresh["smoke"] = False                      # full run vs smoke baseline
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_backend_mismatch(tmp_path, monkeypatch):
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    fresh["backend"] = "gpu"                    # incomparable throughputs
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_committed_baselines_parse():
+    """The committed baselines are well-formed and carry gated metrics."""
+    files = sorted((ROOT / "benchmarks" / "baselines").glob("BENCH_*.json"))
+    assert len(files) >= 2
+    for f in files:
+        rec = json.loads(f.read_text())
+        assert rec["device_count"] == 8 and rec["smoke"] is True
+        gated = [m for sec in rec["results"].values()
+                 for m in sec if m in check_bench.GATED]
+        assert gated, f"{f.name} has no gated metrics"

@@ -1,0 +1,271 @@
+"""Device-sharded lane-parallel solver tests.
+
+Core guarantee under test: ``solve_distributed_batch(mesh=...)`` /
+``solve_streaming(mesh=...)`` over the forced host devices
+(``conftest.py`` sets ``--xla_force_host_platform_device_count=8``) match
+the unsharded solvers to <= 1e-6 (in practice bit-equal) — including ragged
+class counts, lane counts not divisible by the device count, streaming
+dirty-lane re-solves and warm-start parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionWindow, lane_mesh, pad_batch_lanes,
+                        pad_warm_start, padded_lane_count,
+                        sample_class_params, sample_event_trace,
+                        sample_scenario, solve_batch, solve_distributed_batch,
+                        solve_streaming, stack_scenarios)
+from repro.core.game import cold_start
+
+D = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    D < 2, reason="needs >= 2 devices (conftest forces 8 on CPU)")
+
+# deliberately NOT divisible by 8 (or 4, or 2): exercises inert-lane padding
+RAGGED_NS = [5, 17, 9, 12, 3, 26, 7, 31, 11, 4, 8]
+
+
+def make_batch(ns=RAGGED_NS, cf=0.95, seed0=0):
+    scns = [sample_scenario(jax.random.PRNGKey(seed0 + i), n,
+                            capacity_factor=cf)
+            for i, n in enumerate(ns)]
+    return scns, stack_scenarios(scns)
+
+
+def assert_solution_equiv(sharded, ref, tol=1e-6):
+    np.testing.assert_allclose(np.asarray(sharded.r), np.asarray(ref.r),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sharded.psi), np.asarray(ref.psi),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sharded.total),
+                               np.asarray(ref.total), rtol=tol)
+    np.testing.assert_allclose(np.asarray(sharded.aux), np.asarray(ref.aux),
+                               rtol=tol)
+    np.testing.assert_array_equal(np.asarray(sharded.iters),
+                                  np.asarray(ref.iters))
+    np.testing.assert_array_equal(np.asarray(sharded.feasible),
+                                  np.asarray(ref.feasible))
+
+
+# --------------------------------------------------------------------------
+# Lane padding helpers
+# --------------------------------------------------------------------------
+
+def test_padded_lane_count():
+    assert padded_lane_count(11, 8) == 16
+    assert padded_lane_count(16, 8) == 16
+    assert padded_lane_count(1, 8) == 8
+    assert padded_lane_count(9, 1) == 9
+    with pytest.raises(ValueError):
+        padded_lane_count(0, 8)
+
+
+def test_pad_batch_lanes_inert():
+    _, batch = make_batch()
+    padded = pad_batch_lanes(batch, 16)
+    assert padded.batch_size == 16 and padded.n_max == batch.n_max
+    # real lanes untouched, pad lanes fully masked off and trivially feasible
+    np.testing.assert_array_equal(np.asarray(padded.mask[:11]),
+                                  np.asarray(batch.mask))
+    assert not np.asarray(padded.mask[11:]).any()
+    assert np.all(np.asarray(padded.n_classes[11:]) == 0)
+    # solving the padded batch leaves real lanes' results unchanged and the
+    # pad lanes converge immediately to the empty allocation
+    ref = solve_distributed_batch(batch)
+    sol = solve_distributed_batch(padded)
+    np.testing.assert_array_equal(np.asarray(sol.r[:11]), np.asarray(ref.r))
+    np.testing.assert_array_equal(np.asarray(sol.iters[:11]),
+                                  np.asarray(ref.iters))
+    assert np.all(np.asarray(sol.r[11:]) == 0.0)
+    assert np.asarray(sol.feasible[11:]).all()
+    # identity fast path + guard
+    assert pad_batch_lanes(batch, batch.batch_size) is batch
+    with pytest.raises(ValueError):
+        pad_batch_lanes(batch, batch.batch_size - 1)
+
+
+def test_pad_warm_start_frozen():
+    _, batch = make_batch(ns=[4, 7, 5])
+    init = cold_start(batch)
+    padded = pad_warm_start(init, 8)
+    assert padded.active.shape == (8,)
+    assert np.asarray(padded.active[:3]).all()
+    assert not np.asarray(padded.active[3:]).any()      # pad lanes frozen
+    assert np.all(np.asarray(padded.r[3:]) == 0.0)
+    assert pad_warm_start(init, 3) is init
+
+
+def test_lane_mesh_validation():
+    with pytest.raises(ValueError):
+        lane_mesh(0)
+    with pytest.raises(ValueError):
+        lane_mesh(D + 1)
+    mesh = lane_mesh()
+    assert mesh.devices.size == D and mesh.axis_names == ("lanes",)
+
+
+# --------------------------------------------------------------------------
+# Sharded == unsharded: batched solves
+# --------------------------------------------------------------------------
+
+@needs_devices
+def test_sharded_matches_unsharded_ragged():
+    """Ragged class counts AND a lane count (11) not divisible by the
+    device count: every lane's trajectory matches the unsharded solver."""
+    _, batch = make_batch()
+    ref = solve_distributed_batch(batch)
+    sol = solve_distributed_batch(batch, mesh=lane_mesh())
+    assert sol.r.shape == ref.r.shape                   # padding trimmed
+    assert_solution_equiv(sol, ref)
+
+
+@needs_devices
+@pytest.mark.parametrize("n_dev", sorted({2, D}))
+def test_sharded_device_counts_agree(n_dev):
+    """The result is independent of the mesh size (1 device == 2 == D)."""
+    _, batch = make_batch(ns=[6, 13, 4, 9, 21])
+    ref = solve_distributed_batch(batch, mesh=lane_mesh(1))
+    sol = solve_distributed_batch(batch, mesh=lane_mesh(n_dev))
+    assert_solution_equiv(sol, ref)
+    assert_solution_equiv(ref, solve_distributed_batch(batch))
+
+
+@needs_devices
+def test_sharded_divisible_lane_count():
+    """B an exact multiple of the device count: no padding path."""
+    _, batch = make_batch(ns=[5, 9, 13, 7] * (2 * D // 4 if D >= 4 else 2))
+    assert batch.batch_size % D == 0 or D < 4
+    ref = solve_distributed_batch(batch)
+    sol = solve_distributed_batch(batch, mesh=lane_mesh())
+    assert_solution_equiv(sol, ref)
+
+
+@needs_devices
+def test_solve_batch_facade_with_mesh():
+    """allocator.solve_batch(mesh=...): identical integer allocations."""
+    scns, batch = make_batch(ns=[5, 17, 9, 12, 3])
+    ref = solve_batch(batch)
+    res = solve_batch(batch, mesh=lane_mesh())
+    np.testing.assert_array_equal(np.asarray(res.integer.r),
+                                  np.asarray(ref.integer.r))
+    np.testing.assert_array_equal(np.asarray(res.integer.h),
+                                  np.asarray(ref.integer.h))
+    np.testing.assert_allclose(np.asarray(res.total), np.asarray(ref.total),
+                               rtol=1e-9)
+    np.testing.assert_array_equal(np.asarray(res.iters),
+                                  np.asarray(ref.iters))
+
+
+@needs_devices
+def test_sharded_warm_start_parity():
+    """A mixed frozen/active BatchWarmStart shards faithfully: frozen lanes
+    pass their stored equilibrium through untouched, active lanes iterate the
+    cold trajectory — exactly as unsharded."""
+    _, batch = make_batch(ns=[6, 11, 4, 9, 14, 3])
+    base = solve_distributed_batch(batch)
+    cold = cold_start(batch)
+    frozen = jnp.asarray([True, False, True, False, False, True])
+    init = cold._replace(
+        r=jnp.where(frozen[:, None], base.r, cold.r),
+        rho=jnp.where(frozen, base.aux, cold.rho),
+        lane_iters=jnp.where(frozen, base.iters.astype(jnp.int32),
+                             cold.lane_iters),
+        active=~frozen)
+    ref = solve_distributed_batch(batch, init=init)
+    sol = solve_distributed_batch(batch, init=init, mesh=lane_mesh())
+    assert_solution_equiv(sol, ref)
+    # frozen lanes really were pass-through in both paths
+    for b in (0, 2, 5):
+        np.testing.assert_array_equal(np.asarray(sol.r[b]),
+                                      np.asarray(base.r[b]))
+        assert int(sol.iters[b]) == int(base.iters[b])
+
+
+# --------------------------------------------------------------------------
+# Sharded == unsharded: streaming dirty-lane re-solves
+# --------------------------------------------------------------------------
+
+def make_window(ns=(5, 8, 3, 6, 4), cf=1.2, n_max=None, seed0=0):
+    scns = [sample_scenario(jax.random.PRNGKey(seed0 + i), n,
+                            capacity_factor=cf)
+            for i, n in enumerate(ns)]
+    return AdmissionWindow(scns, n_max=n_max)
+
+
+@needs_devices
+def test_streaming_dirty_lane_resolve_under_mesh():
+    """Only the dirtied lane iterates, and the sharded streaming result
+    equals both the unsharded streaming result and a cold re-solve."""
+    mesh = lane_mesh()
+    w_mesh, w_ref = make_window(), make_window()
+    first_m = solve_streaming(w_mesh, integer=False, mesh=mesh)
+    first_r = solve_streaming(w_ref, integer=False)
+    assert first_m.resolved.all()
+    assert_solution_equiv(first_m.fractional, first_r.fractional)
+
+    params = sample_class_params(jax.random.PRNGKey(7))
+    w_mesh.arrive(2, **params)
+    w_ref.arrive(2, **params)
+    res_m = solve_streaming(w_mesh, integer=False, mesh=mesh)
+    res_r = solve_streaming(w_ref, integer=False)
+    np.testing.assert_array_equal(res_m.resolved,
+                                  [False, False, True, False, False])
+    assert_solution_equiv(res_m.fractional, res_r.fractional)
+    # frozen lanes carried their stored equilibrium across the shard trip
+    for b in (0, 1, 3, 4):
+        np.testing.assert_array_equal(np.asarray(res_m.fractional.r[b]),
+                                      np.asarray(first_m.fractional.r[b]))
+    cold = solve_distributed_batch(w_mesh.batch)
+    assert_solution_equiv(res_m.fractional, cold)
+
+
+@needs_devices
+def test_streaming_random_trace_under_mesh():
+    """Event-by-event sharded streaming lands on the unsharded equilibria
+    throughout a random trace (arrivals, departures, edits, capacity)."""
+    mesh = lane_mesh()
+    w_mesh, w_ref = make_window(n_max=9), make_window(n_max=9)
+    solve_streaming(w_mesh, integer=False, mesh=mesh)
+    solve_streaming(w_ref, integer=False)
+    trace = sample_event_trace(42, w_mesh, 25)
+    for i, ev in enumerate(trace):
+        w_mesh.apply(ev)
+        w_ref.apply(ev)
+        res_m = solve_streaming(w_mesh, integer=False, mesh=mesh)
+        if i % 5 == 0 or i == len(trace) - 1:
+            res_r = solve_streaming(w_ref, integer=False)
+            np.testing.assert_array_equal(res_m.resolved, res_r.resolved)
+            assert_solution_equiv(res_m.fractional, res_r.fractional)
+        else:
+            solve_streaming(w_ref, integer=False)
+    assert_solution_equiv(res_m.fractional,
+                          solve_distributed_batch(w_mesh.batch))
+
+
+# --------------------------------------------------------------------------
+# Fleet integration
+# --------------------------------------------------------------------------
+
+@needs_devices
+def test_fleet_epoch_batch_with_mesh():
+    from repro.cluster import FleetSimulator, TenantSpec, epoch_batch
+
+    def tenants(k):
+        return [TenantSpec(f"t{i}", "x", "train_4k", deadline_s=100.0,
+                           H_up=10 + i, H_low=4, penalty_per_job=20000.0)
+                for i in range(k)]
+
+    profiles = {f"t{i}": (1.0 + 0.2 * i, 0.5, 1.0) for i in range(4)}
+    mk = lambda chips, k: FleetSimulator(total_chips=chips,
+                                         tenants=tenants(k))
+    plain = [mk(800, 2), mk(1200, 4), mk(600, 3)]
+    meshed = [mk(800, 2), mk(1200, 4), mk(600, 3)]
+    for f in plain + meshed:
+        f._profiles = profiles
+    want = epoch_batch(plain)
+    got = epoch_batch(meshed, mesh=lane_mesh())
+    for g, w in zip(got, want):
+        assert g.chips == w.chips and g.h == w.h
+        assert g.total_cost == pytest.approx(w.total_cost, rel=1e-9)
