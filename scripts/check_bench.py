@@ -44,7 +44,10 @@ GATED = {
     "events_per_sec": "throughput",
 }
 #: config keys that must match between baseline and fresh for a section
-CONFIG_KEYS = ("B", "n", "n_events", "chunk", "max_devices", "ragged")
+#: ("path" tags which engine path a section measured — per-event vs
+#: coalesced-epochs vs shard-coalesced events/sec are not comparable)
+CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
+               "ragged", "path")
 
 
 def load(path: Path) -> dict:

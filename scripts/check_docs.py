@@ -3,16 +3,26 @@
 
 1. Link check: every relative markdown link in README.md, benchmarks/README.md
    and docs/*.md must resolve to an existing file (fragments stripped).
-2. Docstring lint for the `repro.core` public API: every public module-level
+2. Anchor check: docs/PAPER_MAP.md anchors paper concepts to code as
+   `` `symbol` [src/path.py:line](../src/path.py#Lline) ``.  Line numbers rot
+   as code moves, so every symbol-adjacent anchor is verified by IMPORTING
+   the module, resolving the symbol, and requiring the anchored line to fall
+   inside the symbol's current source span (decorator lines included) — plus
+   the link text and target fragment must agree.  A symbol that no longer
+   exists fails loudly instead of pointing at unrelated code.
+3. Docstring lint for the `repro.core` public API: every public module-level
    function and class needs a docstring; in the modules carrying the paper
-   math facade (game, allocator, centralized, streaming) a function's
-   docstring must also mention every one of its parameters by name
-   (NumPy-style sections are how; the lint only enforces coverage).
+   math facade (game, allocator, centralized, streaming, sharding) a
+   function's docstring must also mention every one of its parameters by
+   name (NumPy-style sections are how; the lint only enforces coverage),
+   and public *methods* of public classes are held to the same standard —
+   the streaming/sharding engine surface is mostly classes.
 
-Exit code 0 iff both checks pass.  Run from the repo root:
+Exit code 0 iff all checks pass.  Run from the repo root:
 
     PYTHONPATH=src python scripts/check_docs.py
 """
+import importlib
 import inspect
 import re
 import sys
@@ -27,7 +37,17 @@ CORE_MODULES = ["types", "profiles", "game", "centralized", "rounding",
                 "streaming", "sharding", "allocator"]
 PARAM_STRICT = {"game", "centralized", "streaming", "sharding", "allocator"}
 
+#: fewer recognized anchors than this means the PAPER_MAP format (or this
+#: regex) drifted and the anchor check is silently checking nothing
+MIN_ANCHORS = 15
+
 LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+# `symbol` ...few words... [src/path.py:line](target) — the gap may not
+# contain backticks or brackets, so each symbol pairs with the next link
+ANCHOR_RE = re.compile(
+    r"`(?P<sym>~?[A-Za-z_][\w.]*)`[^`\[\]]{0,40}?"
+    r"\[(?P<path>src/[\w/]+\.py):(?P<line>\d+)\]\((?P<target>[^)\s]+)\)")
 
 
 def check_links() -> list:
@@ -49,6 +69,70 @@ def check_links() -> list:
     return errors
 
 
+def _symbol_span(path_str: str, symbol: str):
+    """(start, end) source lines of ``symbol`` in the module at ``path_str``.
+
+    The symbol is resolved by import (dotted names walk attributes), then
+    unwrapped (``jax.jit`` etc. keep ``__wrapped__``) so the span covers the
+    real ``def``/``class`` block including its decorators.  The resolved
+    object must actually be *defined* in the anchored file — otherwise an
+    anchor into a re-exporting module would be compared against line
+    numbers of a different file and the staleness check would be
+    meaningless.
+    """
+    mod_name = path_str[len("src/"):-len(".py")].replace("/", ".")
+    obj = importlib.import_module(mod_name)
+    for part in symbol.lstrip("~").split("."):
+        obj = getattr(obj, part)
+    obj = inspect.unwrap(obj)
+    src_file = Path(inspect.getsourcefile(obj)).resolve()
+    if src_file != (ROOT / path_str).resolve():
+        shown = (src_file.relative_to(ROOT) if src_file.is_relative_to(ROOT)
+                 else src_file)
+        raise ValueError(f"symbol is defined in {shown}, not {path_str} "
+                         "(anchor the defining module)")
+    lines, start = inspect.getsourcelines(obj)
+    return start, start + len(lines) - 1
+
+
+def check_anchors() -> list:
+    errors = []
+    md = ROOT / "docs" / "PAPER_MAP.md"
+    if not md.exists():
+        return [f"{md.relative_to(ROOT)}: file missing"]
+    n_anchors = 0
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        for m in ANCHOR_RE.finditer(line):
+            n_anchors += 1
+            where = f"docs/PAPER_MAP.md:{i}"
+            sym, path_str = m["sym"], m["path"]
+            lineno = int(m["line"])
+            frag = m["target"].rsplit("#L", 1)
+            if (len(frag) != 2 or frag[1] != m["line"]
+                    or not frag[0].endswith(path_str)):
+                errors.append(f"{where}: anchor text {path_str}:{lineno} "
+                              f"disagrees with link target {m['target']}")
+                continue
+            if not (ROOT / path_str).exists():
+                errors.append(f"{where}: anchored file missing: {path_str}")
+                continue
+            try:
+                start, end = _symbol_span(path_str, sym)
+            except Exception as e:                       # noqa: BLE001
+                errors.append(f"{where}: cannot resolve `{sym}` in "
+                              f"{path_str} ({type(e).__name__}: {e})")
+                continue
+            if not start <= lineno <= end:
+                errors.append(
+                    f"{where}: stale anchor `{sym}` -> {path_str}:{lineno} "
+                    f"(symbol now spans lines {start}-{end})")
+    if n_anchors < MIN_ANCHORS:
+        errors.append(
+            f"docs/PAPER_MAP.md: only {n_anchors} symbol anchors recognized "
+            f"(>= {MIN_ANCHORS} expected) — doc format or ANCHOR_RE drifted")
+    return errors
+
+
 def _params_of(fn) -> list:
     try:
         sig = inspect.signature(fn)
@@ -56,6 +140,18 @@ def _params_of(fn) -> list:
         return []
     return [p for p in sig.parameters
             if p not in ("self", "cls") and not p.startswith("_")]
+
+
+def _lint_function(where: str, fn, strict: bool, errors: list) -> None:
+    doc = inspect.getdoc(fn)
+    if not doc:
+        errors.append(f"{where}: missing docstring")
+        return
+    if strict:
+        missing = [p for p in _params_of(fn) if p not in doc]
+        if missing:
+            errors.append(f"{where}: docstring does not mention "
+                          f"parameter(s) {missing}")
 
 
 def check_docstrings() -> list:
@@ -71,20 +167,23 @@ def check_docstrings() -> list:
             if getattr(obj, "__module__", None) != mod.__name__:
                 continue               # re-export, linted at home
             where = f"repro.core.{name}.{sym}"
-            doc = inspect.getdoc(obj)
-            if not doc:
-                errors.append(f"{where}: missing docstring")
+            if inspect.isfunction(obj):
+                _lint_function(where, obj, strict, errors)
                 continue
-            if strict and inspect.isfunction(obj):
-                missing = [p for p in _params_of(obj) if p not in doc]
-                if missing:
-                    errors.append(f"{where}: docstring does not mention "
-                                  f"parameter(s) {missing}")
+            if not inspect.getdoc(obj):
+                errors.append(f"{where}: missing docstring")
+            if not strict:
+                continue
+            # public methods of public classes carry the same standard
+            # (the streaming/sharding engine surface is mostly classes)
+            for meth, fn in vars(obj).items():
+                if not meth.startswith("_") and inspect.isfunction(fn):
+                    _lint_function(f"{where}.{meth}", fn, strict, errors)
     return errors
 
 
 def main() -> int:
-    errors = check_links() + check_docstrings()
+    errors = check_links() + check_anchors() + check_docstrings()
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if errors:
@@ -93,8 +192,10 @@ def main() -> int:
         return 1
     n_links = sum(len(LINK_RE.findall(f.read_text()))
                   for f in DOC_FILES if f.exists())
+    n_anchors = len(ANCHOR_RE.findall(
+        (ROOT / "docs" / "PAPER_MAP.md").read_text()))
     print(f"check_docs: OK ({len(DOC_FILES)} docs, {n_links} links, "
-          f"{len(CORE_MODULES)} core modules)")
+          f"{n_anchors} verified anchors, {len(CORE_MODULES)} core modules)")
     return 0
 
 

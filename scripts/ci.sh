@@ -39,8 +39,8 @@ python -m benchmarks.allocator_perf --batch --shard --smoke \
     --json "${BENCH_DIR}/BENCH_allocator.json"
 python -m benchmarks.allocator_perf --smoke
 
-echo "== streaming admission engine smoke (warm + sharded) =="
-python -m benchmarks.streaming_perf --shard --smoke \
+echo "== streaming admission engine smoke (warm + coalesced + sharded) =="
+python -m benchmarks.streaming_perf --coalesce --shard --smoke \
     --json "${BENCH_DIR}/BENCH_streaming.json"
 
 echo "== benchmark regression gate (vs benchmarks/baselines/) =="

@@ -24,8 +24,10 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (AdmissionWindow, RAW_CLASS_FIELDS, Scenario, derive,
-                        solve, solve_batch, solve_streaming, stack_scenarios)
+from repro.core import (AdmissionWindow, CapacityChange, ClassArrival,
+                        ClassDeparture, RAW_CLASS_FIELDS, Scenario, SLAEdit,
+                        derive, solve, solve_batch, solve_streaming,
+                        stack_scenarios)
 from repro.utils import fdtype
 
 
@@ -210,7 +212,8 @@ def epoch_batch(fleets: Sequence[FleetSimulator], *,
 
 # Fleet-level stream events: ("arrive", fleet, TenantSpec[, profile]),
 # ("depart", fleet, tenant_name), ("edit", fleet, tenant_name, spec_updates),
-# ("capacity", fleet, new_total_chips).
+# ("capacity", fleet, new_total_chips), ("fleet-arrive", FleetSimulator),
+# ("fleet-depart", fleet).
 FleetEvent = Tuple
 
 
@@ -218,23 +221,34 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
                  epochs: Iterable[Sequence[FleetEvent]], *,
                  n_max: Optional[int] = None, eps_bar: float = 0.03,
                  lam: float = 0.05, max_iters: int = 200, sweep_fn=None,
-                 mesh=None,
-                 cross_check: bool = False) -> Iterator[List[Allocation]]:
+                 mesh=None, cross_check: bool = False,
+                 compact_below: Optional[float] = None
+                 ) -> Iterator[List[Allocation]]:
     """Drive MANY fleets' games through a tenant arrival/departure trace.
 
     The multi-fleet analog of the paper's *runtime* loop: every fleet is one
     lane of one live :class:`~repro.core.AdmissionWindow`; each epoch's
     events (tenants arriving, leaving, renegotiating SLAs, capacity changes)
-    dirty only the lanes they touch, and one warm-started incremental
-    ``solve_streaming`` re-equilibrates exactly those lanes — fleets with no
-    events keep their equilibrium at zero solver cost, unlike
-    :func:`epoch_batch` which re-stacks and re-solves everything.
+    are *coalesced* into one window update
+    (:meth:`~repro.core.AdmissionWindow.apply_epoch` — one scatter per
+    Scenario field, however many events the epoch carries) and one
+    warm-started incremental ``solve_streaming`` re-equilibrates exactly the
+    dirtied lanes — fleets with no events keep their equilibrium at zero
+    solver cost, unlike :func:`epoch_batch` which re-stacks and re-solves
+    everything.  Whole fleets can join and leave mid-stream (the window
+    grows/shrinks its lane count at the epoch boundary), and a sparse
+    long-lived window is re-packed when ``compact_below`` is set.
 
     Parameters
     ----------
     fleets : Sequence[FleetSimulator]
-        One lane each.  Tenant lists and histories are kept in sync as
-        events apply; allocations append to each fleet's ``history``.
+        One lane each; copied internally, so the caller's sequence is never
+        mutated (and fleet-indexed events address the *internal* order once
+        ``fleet-arrive``/``fleet-depart`` reshuffle it).  The fleet objects
+        themselves are shared: tenant lists and histories are kept in sync
+        as events apply, and allocations append to each fleet's
+        ``history``.  The yielded allocation lists follow the current
+        internal fleet order.
     epochs : Iterable[Sequence[FleetEvent]]
         Outer iterable = allocator epochs (the paper's hourly re-solves);
         each element is the event list to apply before that epoch's solve:
@@ -244,7 +258,12 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
           to also register the tenant's profile;
         * ``("depart", fleet_idx, tenant_name)``;
         * ``("edit", fleet_idx, tenant_name, {TenantSpec field: value})``;
-        * ``("capacity", fleet_idx, new_total_chips)``.
+        * ``("capacity", fleet_idx, new_total_chips)``;
+        * ``("fleet-arrive", FleetSimulator)`` — a new cluster joins as a
+          fresh window lane (its current tenants admitted wholesale);
+        * ``("fleet-depart", fleet_idx)`` — a cluster leaves; its lane is
+          removed and later indices shift down by one (indices always
+          refer to the *current* fleet ordering).
     n_max : int, optional
         Initial padded width headroom for the window.
     eps_bar, lam, max_iters, sweep_fn
@@ -252,16 +271,22 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
     mesh : jax.sharding.Mesh, optional
         1-D lane mesh: every fleet's window lane lives on its shard; the
         dirty-lane warm-start split is preserved across devices
-        (``solve_streaming(mesh=...)``).
+        (``solve_streaming(mesh=...)``).  Lane-count changes re-pad to the
+        device multiple per solve (inert lanes), so grow/shrink composes.
     cross_check : bool, optional
         Cross-check every epoch against the exact centralized optimum.
+    compact_below : float, optional
+        Occupancy threshold: after an epoch's events apply, if the window's
+        occupied-slot fraction drops below this value the window is
+        compacted (``AdmissionWindow.compact``) and the tenant->slot maps
+        are remapped.  None (default) never compacts.
 
     Yields
     ------
     list of Allocation
-        Per-fleet allocations after each epoch, in input order.  Unlike
-        :func:`epoch_batch`, no :class:`~repro.core.InfeasibleError` is
-        raised: an overloaded fleet (arrival burst, capacity loss) is a
+        Per-fleet allocations after each epoch, in current fleet order.
+        Unlike :func:`epoch_batch`, no :class:`~repro.core.InfeasibleError`
+        is raised: an overloaded fleet (arrival burst, capacity loss) is a
         legitimate transient here, flagged on ``Allocation.feasible`` — its
         chips/h are the over-capacity projection and must not be deployed.
     """
@@ -271,13 +296,51 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
     # tenant name -> window slot, per lane (initial stack order is 0..n-1)
     slots: List[Dict[str, int]] = [
         {t.name: i for i, t in enumerate(f.tenants)} for f in fleets]
+    # class events buffered per epoch; arrivals' slots resolve at flush
+    pending: List = []
+    pending_arrivals: List[Tuple[int, str]] = []
+
+    def flush_pending() -> None:
+        if not pending:
+            return
+        granted = window.apply_epoch(pending)
+        for slot, (b, name) in zip((s for s in granted if s is not None),
+                                   pending_arrivals):
+            slots[b][name] = slot
+        pending.clear()
+        pending_arrivals.clear()
+
+    def slot_of(b: int, name: str) -> int:
+        # a tenant that arrived earlier in this same epoch has no slot yet
+        if any(pb == b and pn == name for pb, pn in pending_arrivals):
+            flush_pending()
+        return slots[b][name]
 
     def apply_event(ev: FleetEvent) -> None:
-        kind, b = ev[0], int(ev[1])
+        kind = ev[0]
+        if kind == "fleet-arrive":
+            f = ev[1]
+            flush_pending()                      # lane ops at flush boundaries
+            b = window.add_lane(
+                f.scenario(profiles=getattr(f, "_profiles", None)))
+            fleets.append(f)
+            slots.append({t.name: i for i, t in enumerate(f.tenants)})
+            assert b == len(fleets) - 1
+            return
+        if kind == "fleet-depart":
+            b = int(ev[1])
+            flush_pending()
+            window.remove_lane(b)
+            del fleets[b]
+            del slots[b]
+            return
+        b = int(ev[1])
         f = fleets[b]
         if kind == "arrive":
             spec = ev[2]
-            if spec.name in slots[b]:
+            if (spec.name in slots[b]
+                    or any(pb == b and pn == spec.name
+                           for pb, pn in pending_arrivals)):
                 raise ValueError(
                     f"fleet {b} already has a tenant named {spec.name!r}")
             if len(ev) > 3 and ev[3] is not None:
@@ -285,27 +348,36 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
                 profs[spec.name] = tuple(ev[3])
                 f._profiles = profs
             f.tenants.append(spec)
-            slots[b][spec.name] = window.arrive(
-                b, **f.tenant_class_params(spec))
+            pending.append(ClassArrival(lane=b,
+                                        params=f.tenant_class_params(spec)))
+            pending_arrivals.append((b, spec.name))
         elif kind == "depart":
             name = ev[2]
-            window.depart(b, slots[b].pop(name))
+            pending.append(ClassDeparture(lane=b, slot=slot_of(b, name)))
+            del slots[b][name]
             f.tenants[:] = [t for t in f.tenants if t.name != name]
         elif kind == "edit":
             name, updates = ev[2], dict(ev[3])
             (spec,) = [t for t in f.tenants if t.name == name]
             for k, v in updates.items():
                 setattr(spec, k, v)
-            window.edit(b, slots[b][name], **f.tenant_class_params(spec))
+            pending.append(SLAEdit(lane=b, slot=slot_of(b, name),
+                                   updates=f.tenant_class_params(spec)))
         elif kind == "capacity":
             f.R = int(ev[2])
-            window.set_capacity(b, float(f.R))
+            pending.append(CapacityChange(lane=b, R=float(f.R)))
         else:
             raise ValueError(f"unknown fleet event kind {kind!r}")
 
     for events in epochs:
         for ev in events:
             apply_event(ev)
+        flush_pending()
+        if compact_below is not None and window.occupancy < compact_below:
+            slot_map = window.compact()
+            for b in range(len(slots)):
+                slots[b] = {name: int(slot_map[b, s])
+                            for name, s in slots[b].items()}
         res = solve_streaming(window, eps_bar=eps_bar, lam=lam,
                               max_iters=max_iters, sweep_fn=sweep_fn,
                               mesh=mesh, cross_check=cross_check)

@@ -1,7 +1,8 @@
 """The paper's contribution: GNEP-based runtime capacity allocation."""
 from repro.core.allocator import (AllocationResult, BatchAllocationResult,
                                   InfeasibleError, StreamingResult, solve,
-                                  solve_batch, solve_streaming)
+                                  solve_batch, solve_coalesced,
+                                  solve_streaming)
 from repro.core.centralized import (kkt_residual, objective_of_r,
                                     solve_centralized, solve_centralized_batch)
 from repro.core.game import (BatchWarmStart, cm_best_response, cm_bid_update,
@@ -16,7 +17,8 @@ from repro.core.sharding import (LANE_AXIS, lane_mesh, lane_sharding,
                                  pad_batch_lanes, pad_warm_start,
                                  padded_lane_count, shard_batch,
                                  solve_sharded_batch)
-from repro.core.streaming import (AdmissionWindow, replay, sample_event_trace)
+from repro.core.streaming import (AdmissionWindow, EventEpoch, FlushPolicy,
+                                  grown_n_max, replay, sample_event_trace)
 from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
                               RAW_CLASS_FIELDS, Scenario, ScenarioBatch,
                               SLAEdit, Solution, StreamEvent, WindowState,
@@ -26,16 +28,18 @@ from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
 __all__ = [
     "AdmissionWindow", "AllocationResult", "BatchAllocationResult",
     "BatchWarmStart", "CapacityChange", "ClassArrival", "ClassDeparture",
-    "InfeasibleError", "IntegerSolution", "RAW_CLASS_FIELDS", "SLAEdit",
+    "EventEpoch", "FlushPolicy", "InfeasibleError", "IntegerSolution",
+    "RAW_CLASS_FIELDS", "SLAEdit",
     "Scenario", "ScenarioBatch", "Solution", "StreamEvent", "StreamingResult",
     "WindowState", "LANE_AXIS", "cm_best_response", "cm_bid_update",
     "cold_start", "deadline_lhs", "derive", "distributed_walltime_estimate",
-    "from_roofline", "kkt_residual", "lane_mesh", "lane_sharding",
+    "from_roofline", "grown_n_max", "kkt_residual", "lane_mesh",
+    "lane_sharding",
     "neutral_class_values", "objective", "objective_of_r", "pad_batch_lanes",
     "pad_scenario", "pad_warm_start", "padded_lane_count", "replay",
     "rm_solve", "round_solution", "round_solution_batch", "shard_batch",
     "sample_class_params", "sample_event_trace", "sample_scenario",
-    "solve", "solve_batch",
+    "solve", "solve_batch", "solve_coalesced",
     "solve_centralized", "solve_centralized_batch", "solve_distributed",
     "solve_distributed_batch", "solve_distributed_python",
     "solve_sharded_batch", "solve_streaming", "stack_scenarios",

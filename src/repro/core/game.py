@@ -453,6 +453,12 @@ def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
         False are frozen at their stored equilibrium (zero iterations),
         active lanes iterate from ``init.r`` / ``init.bids``.  ``None``
         (default) is the cold Alg. 4.1 init for every lane (``cold_start``).
+        This is the plumbing the event-coalesced epochs ride: however many
+        events an ``EventEpoch`` folds, the flush arrives here as one init
+        whose ``active`` set is the union of the dirtied lanes — and after
+        an ``AdmissionWindow.compact()`` the window hands in the *remapped*
+        stored equilibrium, so frozen lanes pass through bit-identically on
+        the packed layout.
     mesh : jax.sharding.Mesh, optional
         1-D device mesh (see ``repro.core.sharding.lane_mesh``): lanes are
         padded to a multiple of the device count with inert lanes and each

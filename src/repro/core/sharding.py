@@ -11,7 +11,12 @@ Managers per game, independent games per lane) maps directly onto hardware:
   count with *inert* lanes — the lane-axis analog of the per-class padding
   convention (``types.neutral_class_values``): an inert lane has an
   all-False mask, unit capacity/cost scalars and converges in one
-  iteration, so it never changes any real lane's trajectory;
+  iteration, so it never changes any real lane's trajectory.  The same
+  construction backs dynamic windows: ``AdmissionWindow.add_lane`` builds
+  its new row with it, and because :func:`solve_sharded_batch` re-derives
+  the padding from the *current* lane count on every call, windows that
+  grow, shrink or compact between solves stay valid on a resident mesh
+  (the repad is mesh-aware by construction);
 * :func:`solve_sharded_batch` runs Algorithm 4.1 under
   ``jax.experimental.shard_map.shard_map``: each device iterates a local
   ``while_loop`` over its own lane slice, with the per-lane convergence

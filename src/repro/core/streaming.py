@@ -27,29 +27,81 @@ engine (``game.solve_distributed_batch``) into that runtime system:
   numerically equivalent to a cold re-solve of the final window while doing
   only the dirty lanes' work.
 
-The user-facing facade is :func:`repro.core.allocator.solve_streaming`
-(warm solve + Algorithm 4.2 rounding + optional centralized cross-check);
+* Windows are *dynamic*: :meth:`AdmissionWindow.apply_epoch` folds any
+  number of events into one atomic, coalesced update (one scatter per
+  Scenario field instead of one dispatch per event — the CPU dispatch
+  bottleneck PR 3 recorded); :class:`EventEpoch` + :class:`FlushPolicy`
+  decide *when* to re-solve (count / dirty-fraction triggers); lanes can be
+  added and removed between solves (:meth:`AdmissionWindow.add_lane` /
+  :meth:`AdmissionWindow.remove_lane`); and :meth:`AdmissionWindow.compact`
+  re-packs sparse long-lived windows, remapping the stored equilibrium so
+  frozen lanes stay frozen across the re-layout.
+
+The user-facing facades are :func:`repro.core.allocator.solve_streaming`
+(warm solve + Algorithm 4.2 rounding + optional centralized cross-check) and
+:func:`repro.core.allocator.solve_coalesced` (epoch-coalesced event stream);
 :func:`sample_event_trace` generates random-but-replayable event traces for
 tests and ``benchmarks/streaming_perf.py``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import game
+from repro.core import game, sharding
 from repro.core.profiles import sample_class_params
 from repro.core.types import (RAW_CLASS_FIELDS, CapacityChange, ClassArrival,
                               ClassDeparture, Scenario, ScenarioBatch,
                               SLAEdit, StreamEvent, WindowState, derive,
-                              neutral_class_values, stack_scenarios)
+                              neutral_class_values, pad_scenario,
+                              stack_scenarios)
 
 #: Per-class Scenario fields (raw + derived) scattered on every class write.
 _CLASS_FIELDS = tuple(neutral_class_values(0.0).keys())
+
+
+def _pad_idx(idx: list) -> list:
+    """Pad a scatter-index list to the next power of two by repeating its
+    last entry.  Scattering the same value to a duplicated index is
+    idempotent, and the bucketed shapes bound how many signatures the
+    jitted scatter helpers below ever compile — epochs of any size hit a
+    warm compile cache after the first few flushes."""
+    if not idx:
+        return idx
+    return idx + [idx[-1]] * ((1 << (len(idx) - 1).bit_length()) - len(idx))
+
+
+@jax.jit
+def _scatter_class_fields(scn: Scenario, li, si, vals) -> Scenario:
+    """One fused scatter updating every per-class field at (li, si).
+
+    The write path of both the per-event and the coalesced engines: doing
+    all ~20 field updates inside one jitted program costs ONE dispatch per
+    event epoch instead of one per (field, event) — on CPU the dispatch,
+    not the math, is the streaming bottleneck (ROADMAP caveat from PR 3).
+    """
+    return scn.replace(**{f: getattr(scn, f).at[li, si].set(vals[f])
+                          for f in _CLASS_FIELDS})
+
+
+@jax.jit
+def _refresh_hats(scn: Scenario, lanes, rows) -> Scenario:
+    """Recompute rho_hat = max over admitted rho_up for the given lanes.
+
+    ``rows`` carries the lanes' occupancy-mask rows; an empty lane
+    degenerates to the single candidate rho_bar (paper (P5e) interval end).
+    Fused + jitted for the same dispatch-amortization reason as
+    :func:`_scatter_class_fields`.
+    """
+    hats = jnp.max(jnp.where(rows, scn.rho_up[lanes],
+                             scn.rho_bar[lanes][:, None]), axis=1)
+    return scn.replace(rho_hat=scn.rho_hat.at[lanes].set(hats))
 
 
 def _derive_class(params: dict, dtype) -> dict:
@@ -70,13 +122,47 @@ def _derive_class(params: dict, dtype) -> dict:
         computed by the same :func:`repro.core.types.derive` closed forms
         the batch constructor uses.
     """
-    missing = set(RAW_CLASS_FIELDS) - set(params)
-    if missing:
-        raise ValueError(f"class params missing fields {sorted(missing)}")
-    one = derive(**{k: jnp.asarray([params[k]], dtype)
-                    for k in RAW_CLASS_FIELDS},
-                 R=jnp.asarray(0.0, dtype), rho_bar=jnp.asarray(0.0, dtype))
-    return {f: float(getattr(one, f)[0]) for f in _CLASS_FIELDS}
+    return {f: float(v[0]) for f, v in _derive_classes([params],
+                                                       dtype).items()}
+
+
+#: jitted :func:`repro.core.types.derive` — the streaming write paths call
+#: it per event / per epoch, where eager elementwise dispatch would dominate.
+_derive_jit = jax.jit(derive)
+
+
+def _derive_classes(params_list: Sequence[dict], dtype) -> Dict[str, np.ndarray]:
+    """Derived constants for MANY classes in one device round-trip.
+
+    The coalesced-epoch analog of :func:`_derive_class`: :func:`derive` is
+    elementwise in its per-class inputs, so stacking the raw dicts and
+    deriving once yields values bit-identical to T per-class calls while
+    paying one dispatch + one host transfer per *field* instead of per
+    (field, class).
+
+    Parameters
+    ----------
+    params_list : Sequence[dict]
+        Raw per-class scalar dicts; keys exactly :data:`RAW_CLASS_FIELDS`.
+    dtype : jnp.dtype
+        Float dtype of the window's leaves.
+
+    Returns
+    -------
+    dict
+        Field name -> (T,) numpy array for every per-class field of
+        :class:`Scenario`, aligned with ``params_list``.
+    """
+    for params in params_list:
+        missing = set(RAW_CLASS_FIELDS) - set(params)
+        if missing:
+            raise ValueError(f"class params missing fields {sorted(missing)}")
+    many = _derive_jit(**{k: jnp.asarray([p[k] for p in params_list], dtype)
+                          for k in RAW_CLASS_FIELDS},
+                       R=jnp.asarray(0.0, dtype),
+                       rho_bar=jnp.asarray(0.0, dtype))
+    host = jax.device_get([getattr(many, f) for f in _CLASS_FIELDS])
+    return dict(zip(_CLASS_FIELDS, host))
 
 
 class AdmissionWindow:
@@ -96,8 +182,10 @@ class AdmissionWindow:
     Parameters
     ----------
     scenarios : Sequence[Scenario]
-        Initial (possibly ragged) instances, one per lane.  The lane count B
-        is fixed for the window's lifetime; class counts are not.
+        Initial (possibly ragged) instances, one per lane.  Neither the lane
+        count B nor the class counts are fixed: lanes grow/shrink between
+        solves via :meth:`add_lane` / :meth:`remove_lane`, and sparse
+        windows re-pack via :meth:`compact`.
     n_max : int, optional
         Initial padded width.  Defaults to the largest initial class count;
         give headroom to avoid early growth repads.
@@ -167,6 +255,17 @@ class AdmissionWindow:
         """Last committed equilibrium, or None before the first solve."""
         return self._state
 
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the (B, n_max) slot grid holding an admitted class.
+
+        The compaction signal: a long-lived window whose tenants churn
+        drifts toward a sparse mask (occupancy well below 1), paying solver
+        work proportional to ``n_max`` for classes that are long gone —
+        :meth:`compact` re-packs it.
+        """
+        return float(self._mask.mean()) if self._mask.size else 0.0
+
     def occupied(self, lane: int) -> List[int]:
         """Slot indices currently holding an admitted class in ``lane``."""
         return [int(i) for i in np.flatnonzero(self._mask[lane])]
@@ -196,6 +295,144 @@ class AdmissionWindow:
         else:
             raise TypeError(f"unknown event {event!r}")
         return None
+
+    def apply_epoch(self, events: Sequence[StreamEvent]) -> List[Optional[int]]:
+        """Fold MANY events into one atomic, coalesced window update.
+
+        Numerically identical to applying ``events`` one by one with
+        :meth:`apply` (same slot assignments, same growth schedule, same
+        written values — the per-slot constants come from the same
+        :func:`derive` closed forms), but the device work is *coalesced*:
+        every touched slot is written with ONE scatter per Scenario field,
+        so an epoch of K events costs ~20 dispatches instead of ~20·K.
+        This is the dispatch amortization that makes coalesced re-solve
+        epochs (:class:`EventEpoch`, ``allocator.solve_coalesced``) pay off
+        on dispatch-bound backends.
+
+        The update is atomic: events are validated against a host-side
+        simulation of the whole epoch first, so an invalid event (unknown
+        lane, departing an empty slot, bad SLA fields) raises before any
+        state is mutated.
+
+        Parameters
+        ----------
+        events : Sequence[StreamEvent]
+            Events in application order (the order defines slot assignment
+            for arrivals and the merge order of SLA edits).
+
+        Returns
+        -------
+        list of (int or None)
+            One entry per event: the slot granted to a
+            :class:`ClassArrival`, None for every other kind.
+        """
+        events = list(events)
+        if not events:
+            return []
+        # ---- simulate: net per-slot effect + validation, no mutation yet
+        sim_mask = self._mask.copy()
+        n_max, B = self.n_max, self.batch_size
+        staged: Dict[Tuple[int, int], Optional[dict]] = {}  # None = vacated
+        vacated: Set[Tuple[int, int]] = set()
+        new_R: Dict[int, float] = {}
+        granted: List[Optional[int]] = []
+        for ev in events:
+            if isinstance(ev, ClassArrival):
+                self._check_lane(ev.lane)
+                missing = set(RAW_CLASS_FIELDS) - set(ev.params)
+                if missing:
+                    raise ValueError(
+                        f"class params missing fields {sorted(missing)}")
+                free = np.flatnonzero(~sim_mask[ev.lane])
+                if free.size == 0:                  # mirror self.grow
+                    grown = grown_n_max(n_max, self.growth_factor)
+                    sim_mask = np.concatenate(
+                        [sim_mask, np.zeros((B, grown - n_max), bool)], axis=1)
+                    n_max = grown
+                    free = np.flatnonzero(~sim_mask[ev.lane])
+                slot = int(free[0])
+                sim_mask[ev.lane, slot] = True
+                staged[(ev.lane, slot)] = dict(ev.params)
+                granted.append(slot)
+                continue
+            granted.append(None)
+            if isinstance(ev, ClassDeparture):
+                self._check_lane(ev.lane)
+                if not 0 <= ev.slot < n_max or not sim_mask[ev.lane, ev.slot]:
+                    raise IndexError(
+                        f"(lane={ev.lane}, slot={ev.slot}) holds no class")
+                sim_mask[ev.lane, ev.slot] = False
+                staged[(ev.lane, ev.slot)] = None
+                vacated.add((ev.lane, ev.slot))
+            elif isinstance(ev, SLAEdit):
+                self._check_lane(ev.lane)
+                if not 0 <= ev.slot < n_max or not sim_mask[ev.lane, ev.slot]:
+                    raise IndexError(
+                        f"(lane={ev.lane}, slot={ev.slot}) holds no class")
+                bad = set(ev.updates) - set(RAW_CLASS_FIELDS)
+                if bad:
+                    raise ValueError(f"unknown raw fields {sorted(bad)}")
+                base = (staged[(ev.lane, ev.slot)]
+                        if (ev.lane, ev.slot) in staged
+                        else self._raw[(ev.lane, ev.slot)])
+                staged[(ev.lane, ev.slot)] = {**base, **ev.updates}
+            elif isinstance(ev, CapacityChange):
+                self._check_lane(ev.lane)
+                new_R[ev.lane] = float(ev.R)
+            else:
+                raise TypeError(f"unknown event {ev!r}")
+
+        # ---- commit: grow once, then one scatter per field
+        if n_max > self.n_max:
+            self.grow(n_max)
+        dt = self._scn.A.dtype
+        if staged:
+            keys = sorted(staged)
+            rho_bar_np = np.asarray(self._scn.rho_bar)
+            neutral = neutral_class_values(0.0)
+            vals = {f: np.full(len(keys), neutral[f], np.dtype(dt))
+                    for f in _CLASS_FIELDS}
+            for i, k in enumerate(keys):            # vacated slots go neutral
+                if staged[k] is None:
+                    vals["rho_up"][i] = rho_bar_np[k[0]]
+            occ_pos = [i for i, k in enumerate(keys) if staged[k] is not None]
+            if occ_pos:
+                opad = _pad_idx(occ_pos)          # bucket the derive, too
+                derived = _derive_classes([staged[keys[i]] for i in opad], dt)
+                for f in _CLASS_FIELDS:
+                    vals[f][occ_pos] = derived[f][:len(occ_pos)]
+            pidx = _pad_idx(list(range(len(keys))))   # shape-bucketed scatter
+            li = jnp.asarray([keys[i][0] for i in pidx])
+            si = jnp.asarray([keys[i][1] for i in pidx])
+            self._scn = _scatter_class_fields(
+                self._scn, li, si,
+                {f: jnp.asarray(vals[f][pidx], dt) for f in _CLASS_FIELDS})
+            for k in keys:
+                occupied = staged[k] is not None
+                self._mask[k] = occupied
+                if occupied:
+                    self._raw[k] = dict(staged[k])
+                else:
+                    self._raw.pop(k, None)
+            if vacated and self._state is not None:
+                vk = _pad_idx(sorted(vacated))
+                self._state = self._state._replace(
+                    r=self._state.r.at[jnp.asarray([k[0] for k in vk]),
+                                       jnp.asarray([k[1] for k in vk])
+                                       ].set(0.0))
+        if new_R:
+            lanes_R = _pad_idx(sorted(new_R))
+            self._scn = self._scn.replace(
+                R=self._scn.R.at[jnp.asarray(lanes_R)].set(
+                    jnp.asarray([new_R[l] for l in lanes_R], dt)))
+        class_lanes = sorted({k[0] for k in staged})
+        if class_lanes:
+            padded_lanes = _pad_idx(class_lanes)
+            self._scn = _refresh_hats(self._scn, jnp.asarray(padded_lanes),
+                                      jnp.asarray(self._mask[padded_lanes]))
+        for lane in {*class_lanes, *new_R}:
+            self._mark_dirty(lane)
+        return granted
 
     def arrive(self, lane: int, **params) -> int:
         """Admit a new class to ``lane``; returns its slot.
@@ -230,11 +467,11 @@ class AdmissionWindow:
     def depart(self, lane: int, slot: int) -> None:
         """Remove the class at (lane, slot); the slot becomes recyclable."""
         self._check_slot(lane, slot)
+        dt = self._scn.A.dtype
         neutral = neutral_class_values(float(self._scn.rho_bar[lane]))
-        kw = {}
-        for f in _CLASS_FIELDS:
-            kw[f] = getattr(self._scn, f).at[lane, slot].set(neutral[f])
-        self._scn = self._scn.replace(**kw)
+        self._scn = _scatter_class_fields(
+            self._scn, jnp.asarray([lane]), jnp.asarray([slot]),
+            {f: jnp.asarray([neutral[f]], dt) for f in _CLASS_FIELDS})
         self._mask[lane, slot] = False
         self._raw.pop((lane, slot), None)
         self._refresh_rho_hat(lane)
@@ -300,6 +537,187 @@ class AdmissionWindow:
             self._state = st._replace(
                 r=jnp.concatenate([st.r, jnp.zeros((B, pad), dt)], axis=1))
 
+    # ------------------------------------------------------- dynamic lanes
+    def add_lane(self, scn: Optional[Scenario] = None, *,
+                 R: Optional[float] = None,
+                 rho_bar: Optional[float] = None) -> int:
+        """Append one lane (a new cluster / fleet joining the window).
+
+        The lane row is built by :func:`repro.core.sharding.pad_batch_lanes`
+        — the same inert-lane construction the device-sharded solver pads
+        ragged fleets with — then overwritten with ``scn`` when given, so a
+        batch resident on a lane mesh stays shardable (the mesh path repads
+        to the device multiple per solve; see ``sharding.shard_batch``).
+        Stored equilibria of existing lanes are untouched; the new lane
+        starts dirty/never-solved, so the next ``solve_streaming`` iterates
+        exactly it (plus any other dirty lanes).
+
+        Call between solves (flush boundaries): an :class:`EventEpoch` with
+        pending events still references pre-growth lane numbering only, so
+        ordering is safe, but slot simulation assumes a fixed B per epoch.
+
+        Parameters
+        ----------
+        scn : Scenario, optional
+            Initial classes of the new lane (ragged n is fine; the window
+            grows ``n_max`` first if ``scn.n`` exceeds it).  ``None`` admits
+            an *empty* lane that later arrivals fill.
+        R : float, optional
+            Lane capacity, required (with ``rho_bar``) when ``scn`` is None.
+        rho_bar : float, optional
+            Lane unit chip cost, required (with ``R``) when ``scn`` is None.
+
+        Returns
+        -------
+        int
+            The new lane's index (the previous ``batch_size``).
+        """
+        if scn is None and (R is None or rho_bar is None):
+            raise ValueError("an empty lane needs explicit R= and rho_bar=")
+        if scn is not None and scn.n > self.n_max:
+            self.grow(int(scn.n))
+        b = self.batch_size
+        dt = self._scn.A.dtype
+        self._scn = sharding.pad_batch_lanes(self.batch, b + 1).scenarios
+        self._mask = np.concatenate(
+            [self._mask, np.zeros((1, self.n_max), bool)], axis=0)
+        if scn is not None:
+            row = pad_scenario(scn, self.n_max)
+            self._scn = self._scn.replace(
+                **{f.name: getattr(self._scn, f.name).at[b].set(
+                       jnp.asarray(getattr(row, f.name), dt))
+                   for f in dataclasses.fields(Scenario)})
+            self._mask[b, :scn.n] = True
+            cols = {f: np.asarray(getattr(scn, f)) for f in RAW_CLASS_FIELDS}
+            for i in range(scn.n):
+                self._raw[(b, i)] = {f: float(cols[f][i])
+                                     for f in RAW_CLASS_FIELDS}
+        else:
+            self._scn = self._scn.replace(
+                R=self._scn.R.at[b].set(float(R)),
+                rho_bar=self._scn.rho_bar.at[b].set(float(rho_bar)),
+                rho_hat=self._scn.rho_hat.at[b].set(float(rho_bar)),
+                rho_up=self._scn.rho_up.at[b].set(
+                    jnp.full((self.n_max,), float(rho_bar), dt)))
+        if self._state is not None:
+            st = self._state
+            self._state = st._replace(
+                r=jnp.concatenate([st.r, jnp.zeros((1, self.n_max), dt)],
+                                  axis=0),
+                rho=jnp.concatenate([st.rho, jnp.ones((1,), dt)]),
+                lane_iters=jnp.concatenate(
+                    [st.lane_iters, jnp.zeros((1,), jnp.int32)]),
+                solved=jnp.concatenate([st.solved, jnp.zeros((1,), bool)]))
+        self.dirty = np.append(self.dirty, True)
+        self.baseline_totals = np.append(self.baseline_totals, np.nan)
+        self.baseline_stale = np.append(self.baseline_stale, True)
+        return b
+
+    def remove_lane(self, lane: int) -> None:
+        """Drop ``lane`` (a cluster / fleet leaving) and shrink B by one.
+
+        Lanes above ``lane`` shift down by one; the caller owns any external
+        lane-indexed bookkeeping (``cluster.epoch_stream`` does this for its
+        fleet list).  Stored equilibria of the surviving lanes move with
+        them — clean lanes stay frozen across the shrink.  Like
+        :meth:`add_lane`, call at flush boundaries only.
+        """
+        self._check_lane(lane)
+        if self.batch_size == 1:
+            raise ValueError("cannot remove the last lane")
+        self._scn = self._scn.replace(
+            **{f.name: jnp.delete(getattr(self._scn, f.name), lane, axis=0)
+               for f in dataclasses.fields(Scenario)})
+        self._mask = np.delete(self._mask, lane, axis=0)
+        self.dirty = np.delete(self.dirty, lane)
+        self.baseline_totals = np.delete(self.baseline_totals, lane)
+        self.baseline_stale = np.delete(self.baseline_stale, lane)
+        if self._state is not None:
+            st = self._state
+            self._state = st._replace(
+                r=jnp.delete(st.r, lane, axis=0),
+                rho=jnp.delete(st.rho, lane),
+                lane_iters=jnp.delete(st.lane_iters, lane),
+                solved=jnp.delete(st.solved, lane))
+        self._raw = {(b - (b > lane), s): raw
+                     for (b, s), raw in self._raw.items() if b != lane}
+
+    def compact(self, *, n_max: Optional[int] = None) -> np.ndarray:
+        """Re-pack every lane's admitted classes into a slot prefix.
+
+        Long-lived windows go sparse: churn leaves holes in the mask and
+        growth ratchets ``n_max`` up, so every solve pays O(n_max) for
+        classes that are long gone.  Compaction gathers each lane's
+        admitted classes down to slots ``0..k-1`` (relative order
+        preserved), shrinks ``n_max`` to the widest lane (or the requested
+        ``n_max``), and remaps the stored equilibrium and raw-parameter
+        book-keeping the same way — so clean lanes stay *frozen* through
+        the next solve and every post-compaction solve is numerically
+        equivalent (<= 1e-6; bit-equal on backends with order-stable
+        reductions) to solving the uncompacted window, just on a smaller
+        program.  Dirty flags and memoized centralized baselines are
+        untouched (the per-lane scenarios are semantically unchanged).
+
+        Call at flush boundaries only: pending events and previously
+        sampled traces address classes by their *old* slots.  The new
+        ``n_max`` changes XLA shapes, so the next solve recompiles — that
+        one-off cost is why compaction is a policy decision
+        (``docs/OPERATIONS.md``), not automatic.
+
+        Parameters
+        ----------
+        n_max : int, optional
+            Target padded width; defaults to the minimal width (the
+            largest per-lane class count, floor 1).  Must be >= it.
+
+        Returns
+        -------
+        np.ndarray
+            (B, old_n_max) int map: old slot -> new slot, -1 where the old
+            slot held no class.  Callers with slot-addressed bookkeeping
+            (e.g. ``cluster.epoch_stream``'s tenant->slot maps) remap
+            through it.
+        """
+        counts = self._mask.sum(axis=1)
+        min_width = max(int(counts.max()), 1)
+        target = min_width if n_max is None else int(n_max)
+        if target < min_width:
+            raise ValueError(
+                f"n_max={target} below the widest lane ({min_width})")
+        B, old = self.batch_size, self.n_max
+        slot_map = np.full((B, old), -1, np.int64)
+        src = np.zeros((B, target), np.int64)
+        for b in range(B):
+            occ = np.flatnonzero(self._mask[b])
+            slot_map[b, occ] = np.arange(occ.size)
+            src[b, :occ.size] = occ
+        new_mask = np.arange(target)[None, :] < counts[:, None]
+        if target == old and np.array_equal(new_mask, self._mask):
+            return slot_map                      # already packed at this width
+        dt = self._scn.A.dtype
+        srcj, nm = jnp.asarray(src), jnp.asarray(new_mask)
+        neutral = neutral_class_values(0.0)
+        kw = {}
+        for f in _CLASS_FIELDS:
+            gathered = jnp.take_along_axis(getattr(self._scn, f), srcj,
+                                           axis=1)
+            if f == "rho_up":
+                fill = jnp.broadcast_to(self._scn.rho_bar[:, None],
+                                        (B, target))
+            else:
+                fill = jnp.full((B, target), neutral[f], dt)
+            kw[f] = jnp.where(nm, gathered, fill).astype(dt)
+        self._scn = self._scn.replace(**kw)
+        self._mask = new_mask
+        self._raw = {(b, int(slot_map[b, s])): raw
+                     for (b, s), raw in self._raw.items()}
+        if self._state is not None:
+            st = self._state
+            self._state = st._replace(
+                r=jnp.where(nm, jnp.take_along_axis(st.r, srcj, axis=1),
+                            0.0).astype(dt))
+        return slot_map
+
     # ------------------------------------------------------------ solver state
     def warm_start(self) -> game.BatchWarmStart:
         """Incremental-re-solve init for ``solve_distributed_batch``.
@@ -363,20 +781,17 @@ class AdmissionWindow:
             raise IndexError(f"(lane={lane}, slot={slot}) holds no class")
 
     def _write_class(self, lane: int, slot: int, raw: dict) -> None:
-        vals = _derive_class(raw, self._scn.A.dtype)
-        kw = {}
-        for f in _CLASS_FIELDS:
-            kw[f] = getattr(self._scn, f).at[lane, slot].set(vals[f])
-        self._scn = self._scn.replace(**kw)
+        dt = self._scn.A.dtype
+        vals = _derive_class(raw, dt)
+        self._scn = _scatter_class_fields(
+            self._scn, jnp.asarray([lane]), jnp.asarray([slot]),
+            {f: jnp.asarray([vals[f]], dt) for f in _CLASS_FIELDS})
 
     def _refresh_rho_hat(self, lane: int) -> None:
         # rho_hat = max_i rho_up over ADMITTED classes (paper (P5e) interval
         # end); an empty lane degenerates to the single candidate rho_bar.
-        row = self._mask[lane]
-        rho_up_row = jnp.where(jnp.asarray(row), self._scn.rho_up[lane],
-                               self._scn.rho_bar[lane])
-        self._scn = self._scn.replace(
-            rho_hat=self._scn.rho_hat.at[lane].set(jnp.max(rho_up_row)))
+        self._scn = _refresh_hats(self._scn, jnp.asarray([lane]),
+                                  jnp.asarray(self._mask[lane][None]))
 
 
 def grown_n_max(n_max: int, growth_factor: float) -> int:
@@ -395,6 +810,161 @@ def grown_n_max(n_max: int, growth_factor: float) -> int:
         ``max(ceil(growth_factor * n_max), n_max + 1)``.
     """
     return max(int(math.ceil(n_max * growth_factor)), n_max + 1)
+
+
+# --------------------------------------------------------------------------
+# Event coalescing: fold many events into one re-solve epoch
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlushPolicy:
+    """When should an :class:`EventEpoch` stop accumulating and re-solve?
+
+    The re-solve cadence is the operator's real control knob (see
+    ``docs/OPERATIONS.md``): coalescing K events per solve amortizes the
+    per-solve dispatch cost ~K-fold at the price of K events of equilibrium
+    staleness.  Triggers compose with OR; a policy with both triggers None
+    never auto-flushes (purely manual ``EventEpoch.flush`` calls).
+
+    Attributes
+    ----------
+    max_events : int, optional
+        Flush once this many events are buffered (the latency bound: no
+        admitted class waits more than ``max_events`` events for capacity).
+    max_dirty_fraction : float, optional
+        Flush once the prospective dirty-lane fraction (window-dirty plus
+        buffered lanes, over B) reaches this value.  Past ~0.5 the
+        frozen-lane saving of the warm start is mostly gone, so waiting
+        longer buys staleness without saving work.
+    """
+    max_events: Optional[int] = 8
+    max_dirty_fraction: Optional[float] = None
+
+    def should_flush(self, *, n_events: int, n_dirty: int,
+                     batch_size: int) -> bool:
+        """Evaluate the triggers against an epoch's current accumulation.
+
+        Parameters
+        ----------
+        n_events : int
+            Events buffered so far.
+        n_dirty : int
+            Prospective dirty lanes of the flush (window dirty | buffered).
+        batch_size : int
+            Window lane count B.
+
+        Returns
+        -------
+        bool
+            True when any configured trigger fires.
+        """
+        if self.max_events is not None and n_events >= self.max_events:
+            return True
+        if (self.max_dirty_fraction is not None and batch_size > 0
+                and n_dirty / batch_size >= self.max_dirty_fraction):
+            return True
+        return False
+
+
+class EventEpoch:
+    """Accumulate events against a window; one coalesced solve per flush.
+
+    The coalescing layer between per-event streaming (PR 2) and the
+    operator's cadence policy: events buffer on the host (zero device
+    work), and :meth:`flush` folds them into the window with ONE scatter
+    per Scenario field (:meth:`AdmissionWindow.apply_epoch`) followed by
+    ONE warm-started ``solve_streaming`` over the union of dirtied lanes.
+    Replaying a trace through epochs lands on exactly the per-event
+    equilibria at every flush boundary: a lane dirtied anywhere in the
+    epoch restarts from the cold Algorithm 4.1 init on its *final*
+    scenario, which is precisely what the last per-event solve would have
+    computed (``tests/test_coalescing.py``).
+
+    Parameters
+    ----------
+    window : AdmissionWindow
+        The live window; mutated only at flush.
+    policy : FlushPolicy, optional
+        Auto-flush triggers consulted by :meth:`add` (default: flush every
+        8 events).
+
+    Attributes
+    ----------
+    flushes : int
+        Completed flushes.
+    events_folded : int
+        Total events applied across all flushes.
+    last_slots : list
+        Per-event slot grants of the most recent flush (see
+        :meth:`AdmissionWindow.apply_epoch`).
+    """
+
+    def __init__(self, window: AdmissionWindow,
+                 policy: Optional[FlushPolicy] = None):
+        self.window = window
+        self.policy = policy or FlushPolicy()
+        self._events: List[StreamEvent] = []
+        self.flushes = 0
+        self.events_folded = 0
+        self.last_slots: List[Optional[int]] = []
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    @property
+    def pending(self) -> Tuple[StreamEvent, ...]:
+        """Buffered, not-yet-applied events (application order)."""
+        return tuple(self._events)
+
+    @property
+    def dirty_lanes(self) -> Set[int]:
+        """Lanes the next flush will re-solve: window-dirty | buffered."""
+        return (set(np.flatnonzero(self.window.dirty))
+                | {ev.lane for ev in self._events})
+
+    def add(self, event: StreamEvent) -> bool:
+        """Buffer one event; report whether the policy wants a flush.
+
+        Parameters
+        ----------
+        event : StreamEvent
+            Any of the four event kinds; validated at flush (atomically,
+            see :meth:`AdmissionWindow.apply_epoch`).
+
+        Returns
+        -------
+        bool
+            True when the flush policy's triggers fire — the caller
+            decides to :meth:`flush` (``allocator.solve_coalesced`` does).
+        """
+        self._events.append(event)
+        return self.policy.should_flush(
+            n_events=len(self._events), n_dirty=len(self.dirty_lanes),
+            batch_size=self.window.batch_size)
+
+    def flush(self, **solve_kwargs):
+        """Apply the buffered events and re-solve the window once.
+
+        Parameters
+        ----------
+        **solve_kwargs
+            Forwarded to :func:`repro.core.allocator.solve_streaming`
+            (``mesh=``, ``integer=``, solver knobs, ...).
+
+        Returns
+        -------
+        repro.core.allocator.StreamingResult
+            The coalesced re-solve (an empty flush with a clean window is
+            legal and nearly free: every lane freezes).
+        """
+        from repro.core.allocator import solve_streaming
+        self.last_slots = self.window.apply_epoch(self._events)
+        self.events_folded += len(self._events)
+        self._events = []
+        res = solve_streaming(self.window, **solve_kwargs)
+        self.flushes += 1
+        return res
 
 
 # --------------------------------------------------------------------------

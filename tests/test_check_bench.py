@@ -59,6 +59,20 @@ def test_gate_fails_config_mismatch(tmp_path, monkeypatch):
     assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
 
 
+def test_gate_fails_engine_path_mismatch(tmp_path, monkeypatch):
+    """The `path` tag is config: per-event vs coalesced-epochs events/sec
+    measure different engines and must never be silently compared."""
+    base = record(events_per_sec=100.0)
+    fresh = record(events_per_sec=100.0)
+    base["results"]["batch"]["path"] = "per-event"
+    fresh["results"]["batch"]["path"] = "coalesced-epochs"
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+    fresh["results"]["batch"]["path"] = "per-event"
+    again = tmp_path / "matching-paths"
+    again.mkdir()
+    assert run_gate(again, base, fresh, monkeypatch) == 0
+
+
 def test_gate_fails_missing_section_or_file(tmp_path, monkeypatch):
     base = record(speedup=10.0)
     fresh = record(speedup=10.0)
