@@ -34,7 +34,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, timed, write_bench_json
-from repro.core import (lane_mesh, sample_scenario, shard_batch,
+from repro.core import (SolverConfig, lane_mesh, sample_scenario, shard_batch,
                         solve_centralized, solve_distributed,
                         solve_distributed_batch, solve_distributed_python,
                         stack_scenarios)
@@ -173,7 +173,10 @@ def main(argv=None):
         results["single"] = run([100] if args.smoke else tuple(args.sizes))
 
     if args.json:
-        write_bench_json(args.json, "allocator", results, smoke=args.smoke)
+        # solver-config provenance: check_bench.py treats the fingerprint as
+        # configuration and refuses cross-config (or pre-redesign) compares
+        write_bench_json(args.json, "allocator", results, smoke=args.smoke,
+                         solver_config=SolverConfig().fingerprint())
 
 
 if __name__ == "__main__":

@@ -3,11 +3,11 @@
 After every event (class arrival / departure / SLA edit / capacity change)
 the window must be re-equilibrated.  Two ways:
 
-* **warm** — the streaming engine: apply the event to the live
-  ``AdmissionWindow`` (free-slot recycling, no re-stacking) and
-  ``solve_streaming`` (only the dirtied lane iterates; clean lanes are
-  frozen at their stored equilibrium).
-* **cold** — the PR-1 status quo, what ``epoch_batch`` does per epoch:
+* **warm** — the engine path: a ``CapacityEngine`` session over the live
+  ``AdmissionWindow`` (free-slot recycling, no re-stacking);
+  ``session.apply`` with a per-event flush policy re-solves only the
+  dirtied lane, clean lanes are frozen at their stored equilibrium.
+* **cold** — the PR-1 status quo, what ``epoch_batch`` did per epoch:
   rebuild the per-lane Scenario list from the window, ``stack_scenarios``
   the whole batch and ``solve_distributed_batch`` every lane from the cold
   Algorithm 4.1 init.
@@ -17,21 +17,24 @@ run); the streaming engine's win is doing only the dirty lane's iterations
 and none of the host-side re-stacking.  Acceptance (ISSUE 2): >= 3x higher
 events/sec than cold at B = 64 on CPU.
 
-``--coalesce [K ...]`` adds the *epoch-coalesced* path (``solve_coalesced``:
-fold K events into one scatter-per-field window update + ONE warm re-solve)
-against the per-event warm path — per-event streaming is dispatch-bound on
-CPU (the PR 3 caveat), so coalescing is the amortization knob.  Acceptance
+``--coalesce [K ...]`` adds the *epoch-coalesced* path
+(``session.stream`` under ``FlushPolicy(max_events=K)``: fold K events into
+one scatter-per-field window update + ONE warm re-solve) against the
+per-event warm path — per-event streaming is dispatch-bound on CPU (the
+PR 3 caveat), so coalescing is the amortization knob.  Acceptance
 (ISSUE 4): >= 2x higher events/sec than per-event at B = 64 on CPU.
 
 ``--shard`` adds the device-sharded coalesced path
-(``solve_coalesced(mesh=...)`` over a 1-D lane mesh; forced host devices are
+(``SolverConfig(mesh=...)`` over a 1-D lane mesh; forced host devices are
 injected on CPU when missing): shards whose lanes are all clean exit with
 zero iterations, and an epoch's dirty lanes spread across shards.
 
 ``--json PATH`` writes the machine-readable record (``BENCH_streaming.json``)
 that ``scripts/check_bench.py`` gates CI against; every section carries a
 ``path`` tag (``per-event`` / ``coalesced-epochs`` / ``shard-coalesced``) so
-the per-event, coalesced and sharded events/sec can never be conflated.
+the per-event, coalesced and sharded events/sec can never be conflated, and
+the record carries the ``SolverConfig`` fingerprint so engine-path numbers
+are never compared against pre-redesign baselines.
 
     PYTHONPATH=src python -m benchmarks.streaming_perf            # full
     PYTHONPATH=src python -m benchmarks.streaming_perf --smoke    # CI
@@ -52,10 +55,19 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, write_bench_json
-from repro.core import (AdmissionWindow, FlushPolicy, lane_mesh,
-                        sample_event_trace, sample_scenario, solve_coalesced,
-                        solve_distributed_batch, solve_streaming,
-                        stack_scenarios)
+from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
+                        Policies, RoundingPolicy, SolverConfig, lane_mesh,
+                        sample_event_trace, sample_scenario,
+                        solve_distributed_batch, stack_scenarios)
+
+
+def make_engine(k, *, mesh=None):
+    """Benchmark engine: flush every ``k`` events, rounding off (both paths
+    time the fractional solve, as the pre-redesign benchmark did)."""
+    return CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(flush=FlushPolicy(max_events=k),
+                 rounding=RoundingPolicy(False)))
 
 
 def build_window(B, n, *, headroom=2.0, seed=0):
@@ -74,56 +86,54 @@ def cold_resolve(window):
 
 
 def stream_events(build, trace, *, mesh=None):
-    """Per-event warm path; returns (total_s, per-solve latencies, result).
+    """Per-event warm path (``session.apply``, flush every event); returns
+    (total_s, per-solve latencies, result).
 
     ``build`` is a zero-arg window factory: a full untimed replay on a
     throwaway window warms every compile cache (solver program AND the
     fused event-write scatters) so the timed pass measures steady-state
     dispatch, not one-off XLA compiles.
     """
-    w = build()
-    jax.block_until_ready(
-        solve_streaming(w, integer=False, mesh=mesh).fractional.r)
+    eng = make_engine(1, mesh=mesh)
+    sess = eng.open_window(build())
+    jax.block_until_ready(sess.solve().fractional.r)
     for ev in trace:                              # compile-cache warmup pass
-        w.apply(ev)
-        jax.block_until_ready(
-            solve_streaming(w, integer=False, mesh=mesh).fractional.r)
+        jax.block_until_ready(sess.apply(ev).fractional.r)
 
-    window = build()
-    jax.block_until_ready(
-        solve_streaming(window, integer=False, mesh=mesh).fractional.r)
+    sess = eng.open_window(build())
+    jax.block_until_ready(sess.solve().fractional.r)
     lat = []
     t0 = time.perf_counter()
     res = None
     for ev in trace:
         t1 = time.perf_counter()
-        window.apply(ev)
-        res = solve_streaming(window, integer=False, mesh=mesh)
+        res = sess.apply(ev)
         jax.block_until_ready(res.fractional.r)
         lat.append(time.perf_counter() - t1)
     return time.perf_counter() - t0, lat, res
 
 
 def stream_coalesced(build, trace, k, *, mesh=None):
-    """Coalesced warm path (``solve_coalesced``, k events per flush);
+    """Coalesced warm path (``session.stream``, k events per flush);
     returns (total_s, final result).  Same ``build``-factory warmup
     convention as :func:`stream_events`."""
+    eng = make_engine(k, mesh=mesh)
+
     def replay(w):
+        sess = eng.open_window(w)
         res = None
-        for res in solve_coalesced(w, trace,
-                                   policy=FlushPolicy(max_events=k),
-                                   integer=False, mesh=mesh):
+        for res in sess.stream(trace):
             jax.block_until_ready(res.fractional.r)
         return res
 
     w = build()                                   # compile-cache warmup pass
     jax.block_until_ready(
-        solve_streaming(w, integer=False, mesh=mesh).fractional.r)
+        make_engine(1, mesh=mesh).open_window(w).solve().fractional.r)
     replay(w)
 
     window = build()
     jax.block_until_ready(
-        solve_streaming(window, integer=False, mesh=mesh).fractional.r)
+        make_engine(1, mesh=mesh).open_window(window).solve().fractional.r)
     t0 = time.perf_counter()
     res = replay(window)
     return time.perf_counter() - t0, res
@@ -184,7 +194,7 @@ def run(B=64, n=12, n_events=120, seed=0):
 
 
 def run_coalesce(B=64, n=12, n_events=120, seed=0, ks=(2, 4, 8, 16)):
-    """Coalesced epochs (``solve_coalesced``) vs the per-event warm path on
+    """Coalesced epochs (``session.stream``) vs the per-event warm path on
     the same trace; returns the largest factor's metrics.  ``speedup`` is
     events/sec at the largest K over per-event events/sec — the ISSUE 4
     acceptance asks >= 2x at B = 64 on CPU."""
@@ -302,7 +312,11 @@ def main(argv=None):
                             else run_shard())
 
     if args.json:
-        write_bench_json(args.json, "streaming", results, smoke=args.smoke)
+        # the engine-config fingerprint is part of the record's identity:
+        # check_bench.py refuses to compare records measured under
+        # different solver configs (or pre-redesign records without one)
+        write_bench_json(args.json, "streaming", results, smoke=args.smoke,
+                         solver_config=SolverConfig().fingerprint())
 
 
 if __name__ == "__main__":

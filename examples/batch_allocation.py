@@ -10,7 +10,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sample_scenario, solve_batch, stack_scenarios
+from repro.core import CapacityEngine, sample_scenario, stack_scenarios
+
+ENGINE = CapacityEngine()              # one configured engine for every solve
 
 
 def whatif_capacity_sweep():
@@ -21,7 +23,7 @@ def whatif_capacity_sweep():
     factors = np.linspace(0.88, 1.2, 16)
     R0 = float(jnp.sum(base.r_up))
     scns = [base.replace(R=jnp.asarray(f * R0, base.A.dtype)) for f in factors]
-    res = solve_batch(scns)
+    res = ENGINE.solve(scns)
     for f, tot, it in zip(factors, np.asarray(res.total),
                           np.asarray(res.iters)):
         print(f"  R = {f:4.2f} * R_o  ->  total = {tot:12.1f} cents  "
@@ -34,7 +36,7 @@ def ragged_tenant_mix():
     ns = [5, 12, 40, 17, 64, 8]
     scns = [sample_scenario(jax.random.PRNGKey(i), n, capacity_factor=0.95)
             for i, n in enumerate(ns)]
-    res = solve_batch(stack_scenarios(scns))
+    res = ENGINE.solve(stack_scenarios(scns))
     for b, n in enumerate(ns):
         inst = res.instance(b)
         print(f"  cluster {b}: n={n:3d}  chips={int(jnp.sum(inst.integer.r))}"

@@ -8,22 +8,24 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 
-from repro.core import sample_scenario, solve
+from repro.core import CapacityEngine, sample_scenario
 
 
 def allocator_demo():
     print("=== GNEP capacity allocation (the paper) ===")
     scn = sample_scenario(jax.random.PRNGKey(0), n_classes=50,
                           capacity_factor=0.92)
+    engine = CapacityEngine()          # paper-default SolverConfig + Policies
     for method in ("centralized", "distributed"):
-        res = solve(scn, method)
+        res = engine.solve(scn, method=method)
         it = res.integer
         print(f"{method:12s}: total={float(it.total):12.1f} cents  "
               f"chips={int(jnp.sum(it.r))}/{int(scn.R)}  "
               f"admitted={int(jnp.sum(it.h))}/{int(jnp.sum(scn.H_up))} jobs  "
               f"iters={res.iters}")
-    gap = (float(solve(scn, 'distributed').fractional.total)
-           / float(solve(scn, 'centralized').fractional.total) - 1)
+    gap = (float(engine.solve(scn).fractional.total)
+           / float(engine.solve(scn, method='centralized').fractional.total)
+           - 1)
     print(f"equilibrium vs optimum gap: {gap*100:.2f}%  (paper: <= ~2%)")
 
 

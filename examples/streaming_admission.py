@@ -1,10 +1,12 @@
 """Streaming admission: the paper's *runtime* capacity-allocation loop.
 
-Job classes arrive, renegotiate SLAs and leave while the window stays live:
-each event dirties exactly one lane, and ``solve_streaming`` re-equilibrates
-only that lane (warm-started incremental re-solve) while every other
-cluster's equilibrium is frozen for free.  Every solve is cross-checked
-against the exact centralized (P3) optimum.
+One ``CapacityEngine`` session drives four running clusters: job classes
+arrive, renegotiate SLAs and leave while the window stays live.  Events
+buffer in the session and flush into ONE coalesced re-solve; only dirtied
+lanes iterate while every other cluster's equilibrium is frozen for free.
+The cross-check policy compares every solve against the exact centralized
+(P3) optimum, and a deadline-aware flush policy shows an SLA-critical event
+jumping the coalescing queue.
 
     PYTHONPATH=src python examples/streaming_admission.py
 """
@@ -14,14 +16,17 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import (AdmissionWindow, sample_class_params, sample_scenario,
-                        solve_streaming)
+from repro.core import (CapacityChange, CapacityEngine, ClassArrival,
+                        ClassDeparture, CrossCheckPolicy, FlushPolicy,
+                        Policies, SLAEdit, sample_class_params,
+                        sample_scenario)
 
 
-def show(tag, window, res):
+def show(tag, session, res):
     print(f"\n=== {tag} ===")
     print(f"  re-solved lanes: {np.flatnonzero(res.resolved).tolist()} "
           f"(iters: {np.asarray(res.iters)[res.resolved].tolist()})")
+    window = session.window
     for b in range(window.batch_size):
         n = int(window.n_classes[b])
         gap = float(res.centralized_gap[b])
@@ -32,42 +37,61 @@ def show(tag, window, res):
 
 
 def main():
-    # four clusters (lanes) with ragged class counts, slot headroom of 8
+    # four clusters (lanes) with ragged class counts, slot headroom of 8.
+    # Deadline-aware cadence: bulk events coalesce (up to 8 per flush), but
+    # an SLA-critical event — a tightened deadline, or an arrival within
+    # 300 s of infeasibility — forces an immediate re-solve.
+    engine = CapacityEngine(policies=Policies(
+        flush=FlushPolicy.deadline(300.0, max_events=8),
+        cross_check=CrossCheckPolicy(True)))
     scns = [sample_scenario(jax.random.PRNGKey(i), n, capacity_factor=1.2)
             for i, n in enumerate([5, 8, 3, 6])]
-    window = AdmissionWindow(scns, n_max=8)
+    session = engine.open_window(scns, n_max=8)
 
-    res = solve_streaming(window, cross_check=True)
-    show("initial window (all lanes solve cold)", window, res)
+    show("initial window (all lanes solve cold)", session, session.solve())
 
     # a new job class arrives at cluster 2 — only lane 2 re-iterates
-    key = jax.random.PRNGKey(100)
-    slot = window.arrive(2, **sample_class_params(key))
-    res = solve_streaming(window, cross_check=True)
-    show(f"arrival at cluster 2 (granted slot {slot})", window, res)
+    session.apply(ClassArrival(
+        lane=2, params=sample_class_params(jax.random.PRNGKey(100))))
+    res = session.flush()
+    show(f"arrival at cluster 2 (granted slot {session.last_slots[0]})",
+         session, res)
 
-    # the class in slot 0 of cluster 1 departs; its slot is recycled
-    window.depart(1, window.occupied(1)[0])
-    res = solve_streaming(window, cross_check=True)
-    show("departure from cluster 1 (slot recycled)", window, res)
+    # bulk churn coalesces: a departure, a *relaxing* SLA renegotiation and
+    # a 30% capacity loss (paper Fig. 2, live) fold into ONE re-solve
+    window = session.window
+    session.apply(
+        ClassDeparture(lane=1, slot=window.occupied(1)[0]),
+        SLAEdit(lane=0, slot=window.occupied(0)[0],
+                updates={"E": -1400.0, "m": 29000.0}),
+        CapacityChange(lane=3, R=0.7 * float(window.batch.scenarios.R[3])))
+    show("coalesced epoch: departure + relaxed SLA + 30% capacity loss",
+         session, session.flush())
 
-    # cluster 0 renegotiates one SLA: tighter deadline, higher penalty
-    s0 = window.occupied(0)[0]
-    window.edit(0, s0, E=-700.0, m=29000.0)
-    res = solve_streaming(window, cross_check=True)
-    show("SLA renegotiation at cluster 0", window, res)
+    # TIGHTENING a deadline is SLA-critical: the deadline policy flushes it
+    # immediately instead of letting it wait out a coalescing epoch
+    slot0 = session.window.occupied(0)[0]
+    res = session.apply(SLAEdit(lane=0, slot=slot0, updates={"E": -800.0}))
+    assert res is not None, "tightened SLA should have flushed immediately"
+    show("SLA-critical edit at cluster 0 (tightened deadline, immediate "
+         "flush)", session, res)
 
-    # nodes fail at cluster 3: capacity drops 30% (paper Fig. 2, live)
-    window.set_capacity(3, 0.7 * float(window.batch.scenarios.R[3]))
-    res = solve_streaming(window, cross_check=True)
-    show("30% capacity loss at cluster 3", window, res)
+    # so is an arrival whose deadline is nearly exhausted (E within the
+    # 300 s slack threshold)
+    hot = sample_class_params(jax.random.PRNGKey(7))
+    hot["E"] = -120.0
+    res = session.apply(ClassArrival(lane=1, params=hot))
+    assert res is not None, "near-deadline arrival should have flushed"
+    show("SLA-critical arrival at cluster 1 (immediate flush)", session, res)
 
     # burst of arrivals at cluster 2 forces the window to grow past n_max
-    for i in range(6):
-        window.arrive(2, **sample_class_params(jax.random.PRNGKey(200 + i)))
-    res = solve_streaming(window, cross_check=True)
-    show(f"arrival burst at cluster 2 (window grew to n_max={window.n_max})",
-         window, res)
+    session.apply(*[
+        ClassArrival(lane=2,
+                     params=sample_class_params(jax.random.PRNGKey(200 + i)))
+        for i in range(6)])
+    res = session.flush()
+    show(f"arrival burst at cluster 2 (window grew to "
+         f"n_max={session.window.n_max})", session, res)
 
 
 if __name__ == "__main__":

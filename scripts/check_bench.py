@@ -14,7 +14,10 @@ fails when a gated metric drops below its tolerance band:
 
 Config keys (B, n, devices, ...) of every gated section must match the
 baseline exactly — otherwise the comparison is meaningless and the gate
-fails loudly instead of silently passing on easier settings.
+fails loudly instead of silently passing on easier settings.  The same goes
+for the record-level ``solver_config`` fingerprint (``SolverConfig
+.fingerprint()``): engine-path numbers are never compared against records
+measured under a different solver config or on the pre-redesign facades.
 
 Usage (what scripts/ci.sh does):
 
@@ -128,6 +131,15 @@ def main() -> int:
                 f"{bpath.name}: smoke mismatch baseline={base.get('smoke')} "
                 f"fresh={fresh.get('smoke')} — smoke and full runs use "
                 "different problem sizes")
+            continue
+        if base.get("solver_config") != fresh.get("solver_config"):
+            errors.append(
+                f"{bpath.name}: solver_config mismatch baseline="
+                f"{base.get('solver_config')!r} fresh="
+                f"{fresh.get('solver_config')!r} — numbers measured under "
+                "different SolverConfigs (or on the pre-redesign facades, "
+                "which recorded none) are not comparable; refresh the "
+                "baseline alongside the config change")
             continue
         bad_env = [k for k in ("backend", "x64")
                    if base.get(k) != fresh.get(k)]

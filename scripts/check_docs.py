@@ -34,8 +34,9 @@ DOC_FILES = [ROOT / "README.md", ROOT / "benchmarks" / "README.md",
              *sorted((ROOT / "docs").glob("*.md"))]
 
 CORE_MODULES = ["types", "profiles", "game", "centralized", "rounding",
-                "streaming", "sharding", "allocator"]
-PARAM_STRICT = {"game", "centralized", "streaming", "sharding", "allocator"}
+                "streaming", "sharding", "engine", "allocator"]
+PARAM_STRICT = {"game", "centralized", "streaming", "sharding", "engine",
+                "allocator"}
 
 #: fewer recognized anchors than this means the PAPER_MAP format (or this
 #: regex) drifted and the anchor check is silently checking nothing

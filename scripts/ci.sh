@@ -17,6 +17,11 @@ if [[ "${XLA_FLAGS:-}" != *"--xla_force_host_platform_device_count"* ]]; then
     export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_force_host_platform_device_count=8"
 fi
 export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+# In-repo code must be deprecation-clean w.r.t. the legacy allocator shims:
+# the benchmarks/examples below run with exactly that warning promoted to an
+# error (pytest.ini does the same for the test suite).  The message-prefix
+# filter leaves third-party DeprecationWarnings alone.
+export PYTHONWARNINGS="error:repro.core.allocator:DeprecationWarning::"
 
 PYTEST_ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then

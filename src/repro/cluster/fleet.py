@@ -24,10 +24,10 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (AdmissionWindow, CapacityChange, ClassArrival,
-                        ClassDeparture, RAW_CLASS_FIELDS, Scenario, SLAEdit,
-                        derive, solve, solve_batch, solve_streaming,
-                        stack_scenarios)
+from repro.core import (CapacityChange, CapacityEngine, ClassArrival,
+                        ClassDeparture, CompactionPolicy, CrossCheckPolicy,
+                        FlushPolicy, Policies, RAW_CLASS_FIELDS, Scenario,
+                        SLAEdit, SolverConfig, derive)
 from repro.utils import fdtype
 
 
@@ -120,7 +120,7 @@ class FleetSimulator:
             self._profiles = profiles
         profiles = getattr(self, "_profiles", None)
         scn = self.scenario(profiles=profiles)
-        res = solve(scn, method=method)
+        res = CapacityEngine().solve(scn, method=method)
         return self._allocation_from_integer(res.integer,
                                              n=len(self.tenants),
                                              iters=res.iters, method=method)
@@ -198,9 +198,10 @@ def epoch_batch(fleets: Sequence[FleetSimulator], *,
             if p is not None:
                 f._profiles = p
     scns = [f.scenario(profiles=getattr(f, "_profiles", None)) for f in fleets]
-    batch = stack_scenarios(scns)
-    res = solve_batch(batch, "distributed", eps_bar=eps_bar, lam=lam,
-                      max_iters=max_iters, sweep_fn=sweep_fn, mesh=mesh)
+    engine = CapacityEngine(SolverConfig(eps_bar=eps_bar, lam=lam,
+                                         max_iters=max_iters,
+                                         sweep_fn=sweep_fn, mesh=mesh))
+    res = engine.solve(scns)
     allocs = []
     for b, f in enumerate(fleets):
         inst = res.instance(b)
@@ -226,18 +227,19 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
                  ) -> Iterator[List[Allocation]]:
     """Drive MANY fleets' games through a tenant arrival/departure trace.
 
-    The multi-fleet analog of the paper's *runtime* loop: every fleet is one
-    lane of one live :class:`~repro.core.AdmissionWindow`; each epoch's
-    events (tenants arriving, leaving, renegotiating SLAs, capacity changes)
-    are *coalesced* into one window update
-    (:meth:`~repro.core.AdmissionWindow.apply_epoch` — one scatter per
-    Scenario field, however many events the epoch carries) and one
-    warm-started incremental ``solve_streaming`` re-equilibrates exactly the
-    dirtied lanes — fleets with no events keep their equilibrium at zero
-    solver cost, unlike :func:`epoch_batch` which re-stacks and re-solves
-    everything.  Whole fleets can join and leave mid-stream (the window
-    grows/shrinks its lane count at the epoch boundary), and a sparse
-    long-lived window is re-packed when ``compact_below`` is set.
+    The multi-fleet analog of the paper's *runtime* loop, driven through one
+    :class:`~repro.core.WindowSession`: every fleet is one lane of the
+    session's live window; each epoch's events (tenants arriving, leaving,
+    renegotiating SLAs, capacity changes) buffer in the session and one
+    ``session.flush()`` per epoch coalesces them into one window update
+    (one scatter per Scenario field, however many events the epoch carries)
+    plus one warm-started incremental re-solve of exactly the dirtied lanes
+    — fleets with no events keep their equilibrium at zero solver cost,
+    unlike :func:`epoch_batch` which re-stacks and re-solves everything.
+    Whole fleets can join and leave mid-stream (the window grows/shrinks its
+    lane count at the epoch boundary), and a sparse long-lived window is
+    re-packed by the session's compaction policy when ``compact_below`` is
+    set.
 
     Parameters
     ----------
@@ -271,15 +273,16 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
     mesh : jax.sharding.Mesh, optional
         1-D lane mesh: every fleet's window lane lives on its shard; the
         dirty-lane warm-start split is preserved across devices
-        (``solve_streaming(mesh=...)``).  Lane-count changes re-pad to the
+        (``SolverConfig.mesh``).  Lane-count changes re-pad to the
         device multiple per solve (inert lanes), so grow/shrink composes.
     cross_check : bool, optional
         Cross-check every epoch against the exact centralized optimum.
     compact_below : float, optional
-        Occupancy threshold: after an epoch's events apply, if the window's
-        occupied-slot fraction drops below this value the window is
-        compacted (``AdmissionWindow.compact``) and the tenant->slot maps
-        are remapped.  None (default) never compacts.
+        Occupancy threshold (-> ``CompactionPolicy.occupancy``): after an
+        epoch's events apply, if the window's occupied-slot fraction drops
+        below this value the session compacts the window and the
+        tenant->slot maps are remapped through the report's ``slot_map``.
+        None (default) never compacts.
 
     Yields
     ------
@@ -292,22 +295,26 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
     """
     fleets = list(fleets)
     scns = [f.scenario(profiles=getattr(f, "_profiles", None)) for f in fleets]
-    window = AdmissionWindow(scns, n_max=n_max)
+    engine = CapacityEngine(
+        SolverConfig(eps_bar=eps_bar, lam=lam, max_iters=max_iters,
+                     sweep_fn=sweep_fn, mesh=mesh),
+        Policies(flush=FlushPolicy(max_events=None),   # one flush per epoch
+                 compaction=CompactionPolicy(occupancy=compact_below),
+                 cross_check=CrossCheckPolicy(cross_check)))
+    session = engine.open_window(scns, n_max=n_max)
     # tenant name -> window slot, per lane (initial stack order is 0..n-1)
     slots: List[Dict[str, int]] = [
         {t.name: i for i, t in enumerate(f.tenants)} for f in fleets]
-    # class events buffered per epoch; arrivals' slots resolve at flush
-    pending: List = []
+    # class events buffer in the session; arrivals' slots resolve at drain
     pending_arrivals: List[Tuple[int, str]] = []
 
     def flush_pending() -> None:
-        if not pending:
+        if not session.pending:
             return
-        granted = window.apply_epoch(pending)
+        granted = session.drain()
         for slot, (b, name) in zip((s for s in granted if s is not None),
                                    pending_arrivals):
             slots[b][name] = slot
-        pending.clear()
         pending_arrivals.clear()
 
     def slot_of(b: int, name: str) -> int:
@@ -321,7 +328,7 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
         if kind == "fleet-arrive":
             f = ev[1]
             flush_pending()                      # lane ops at flush boundaries
-            b = window.add_lane(
+            b = session.add_lane(
                 f.scenario(profiles=getattr(f, "_profiles", None)))
             fleets.append(f)
             slots.append({t.name: i for i, t in enumerate(f.tenants)})
@@ -330,7 +337,7 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
         if kind == "fleet-depart":
             b = int(ev[1])
             flush_pending()
-            window.remove_lane(b)
+            session.remove_lane(b)
             del fleets[b]
             del slots[b]
             return
@@ -348,12 +355,12 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
                 profs[spec.name] = tuple(ev[3])
                 f._profiles = profs
             f.tenants.append(spec)
-            pending.append(ClassArrival(lane=b,
-                                        params=f.tenant_class_params(spec)))
+            session.apply(ClassArrival(lane=b,
+                                       params=f.tenant_class_params(spec)))
             pending_arrivals.append((b, spec.name))
         elif kind == "depart":
             name = ev[2]
-            pending.append(ClassDeparture(lane=b, slot=slot_of(b, name)))
+            session.apply(ClassDeparture(lane=b, slot=slot_of(b, name)))
             del slots[b][name]
             f.tenants[:] = [t for t in f.tenants if t.name != name]
         elif kind == "edit":
@@ -361,11 +368,11 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
             (spec,) = [t for t in f.tenants if t.name == name]
             for k, v in updates.items():
                 setattr(spec, k, v)
-            pending.append(SLAEdit(lane=b, slot=slot_of(b, name),
-                                   updates=f.tenant_class_params(spec)))
+            session.apply(SLAEdit(lane=b, slot=slot_of(b, name),
+                                  updates=f.tenant_class_params(spec)))
         elif kind == "capacity":
             f.R = int(ev[2])
-            pending.append(CapacityChange(lane=b, R=float(f.R)))
+            session.apply(CapacityChange(lane=b, R=float(f.R)))
         else:
             raise ValueError(f"unknown fleet event kind {kind!r}")
 
@@ -373,14 +380,11 @@ def epoch_stream(fleets: Sequence[FleetSimulator],
         for ev in events:
             apply_event(ev)
         flush_pending()
-        if compact_below is not None and window.occupancy < compact_below:
-            slot_map = window.compact()
+        res = session.flush()                    # policy compaction + solve
+        if res.slot_map is not None:             # window was re-packed
             for b in range(len(slots)):
-                slots[b] = {name: int(slot_map[b, s])
+                slots[b] = {name: int(res.slot_map[b, s])
                             for name, s in slots[b].items()}
-        res = solve_streaming(window, eps_bar=eps_bar, lam=lam,
-                              max_iters=max_iters, sweep_fn=sweep_fn,
-                              mesh=mesh, cross_check=cross_check)
         # one device->host transfer per array, not per tenant
         r_np, h_np = np.asarray(res.integer.r), np.asarray(res.integer.h)
         total_np, iters_np = np.asarray(res.integer.total), np.asarray(res.iters)

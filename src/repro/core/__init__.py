@@ -1,10 +1,20 @@
-"""The paper's contribution: GNEP-based runtime capacity allocation."""
+"""The paper's contribution: GNEP-based runtime capacity allocation.
+
+The documented entry point is the session API in :mod:`repro.core.engine`
+(:class:`CapacityEngine` / :class:`WindowSession` + :class:`SolverConfig` /
+:class:`Policies`); the ``solve_*`` facades from earlier revisions remain as
+deprecated bit-equal shims (see ``docs/API.md`` for the migration table).
+"""
 from repro.core.allocator import (AllocationResult, BatchAllocationResult,
-                                  InfeasibleError, StreamingResult, solve,
-                                  solve_batch, solve_coalesced,
-                                  solve_streaming)
+                                  StreamingResult, solve, solve_batch,
+                                  solve_coalesced, solve_streaming)
 from repro.core.centralized import (kkt_residual, objective_of_r,
                                     solve_centralized, solve_centralized_batch)
+from repro.core.engine import (BatchSolveReport, CapacityEngine,
+                               CompactionPolicy, CrossCheckPolicy,
+                               InfeasibleError, Policies, RoundingPolicy,
+                               SolveReport, SolverConfig, WindowSession,
+                               WindowSolveReport)
 from repro.core.game import (BatchWarmStart, cm_best_response, cm_bid_update,
                              cold_start, distributed_walltime_estimate,
                              rm_solve, solve_distributed,
@@ -27,10 +37,12 @@ from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
 
 __all__ = [
     "AdmissionWindow", "AllocationResult", "BatchAllocationResult",
-    "BatchWarmStart", "CapacityChange", "ClassArrival", "ClassDeparture",
+    "BatchSolveReport", "BatchWarmStart", "CapacityChange", "CapacityEngine",
+    "ClassArrival", "ClassDeparture", "CompactionPolicy", "CrossCheckPolicy",
     "EventEpoch", "FlushPolicy", "InfeasibleError", "IntegerSolution",
-    "RAW_CLASS_FIELDS", "SLAEdit",
-    "Scenario", "ScenarioBatch", "Solution", "StreamEvent", "StreamingResult",
+    "Policies", "RAW_CLASS_FIELDS", "RoundingPolicy", "SLAEdit",
+    "Scenario", "ScenarioBatch", "Solution", "SolveReport", "SolverConfig",
+    "StreamEvent", "StreamingResult", "WindowSession", "WindowSolveReport",
     "WindowState", "LANE_AXIS", "cm_best_response", "cm_bid_update",
     "cold_start", "deadline_lhs", "derive", "distributed_walltime_estimate",
     "from_roofline", "grown_n_max", "kkt_residual", "lane_mesh",

@@ -1,187 +1,121 @@
-"""High-level allocator facade: solve + round, centralized or distributed.
+"""DEPRECATED facades over :mod:`repro.core.engine` (the session API).
 
-Single-instance (`solve`), batched (`solve_batch`) and streaming
-(`solve_streaming`) entry points share the same pipeline: fractional GNEP
-solve (Algorithm 4.1) -> integer rounding (Algorithm 4.2).  The batched path
-runs B scenarios as one XLA program and one vectorized rounding pass; the
-streaming path re-solves only the lanes an event trace has dirtied
-(see ``repro.core.streaming``).
+Every ``solve_*`` function here is a thin shim that maps its legacy kwargs
+onto a :class:`~repro.core.engine.CapacityEngine` and delegates — results
+are bit-equal to the corresponding engine call (``tests/test_engine.py``
+proves it for every historical call pattern, warm starts, meshes and
+cross-checks included).  The shims stay for external users; in-repo callers
+are migrated and CI promotes the :class:`DeprecationWarning` they emit to an
+error (``pytest.ini`` / ``scripts/ci.sh``), so no new internal dependency on
+this module can land.
+
+Migration table (old call -> engine call): ``docs/API.md``.
+
+The legacy result dataclasses are aliases of the unified report hierarchy:
+``AllocationResult`` is :class:`~repro.core.engine.SolveReport`,
+``BatchAllocationResult`` is :class:`~repro.core.engine.BatchSolveReport`,
+``StreamingResult`` is :class:`~repro.core.engine.WindowSolveReport` — old
+attribute access (``.fractional``, ``.integer``, ``.instance(b)``,
+``.resolved``, ...) keeps working unchanged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
 from typing import Optional, Sequence, Union
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.engine import (BatchSolveReport, CapacityEngine,
+                               CrossCheckPolicy, InfeasibleError, Policies,
+                               RoundingPolicy, SolveReport, SolverConfig,
+                               WindowSolveReport, _legacy_solve_window)
+from repro.core.streaming import AdmissionWindow, FlushPolicy
+from repro.core.types import Scenario, ScenarioBatch
 
-from repro.core import game
-from repro.core.centralized import solve_centralized
-from repro.core.rounding import (IntegerSolution, round_solution,
-                                 round_solution_batch)
-from repro.core.streaming import AdmissionWindow, EventEpoch, FlushPolicy
-from repro.core.types import (Scenario, ScenarioBatch, Solution,
-                              stack_scenarios)
+#: Legacy result names — aliases of the unified report hierarchy.
+AllocationResult = SolveReport
+BatchAllocationResult = BatchSolveReport
+StreamingResult = WindowSolveReport
+
+__all__ = [
+    "AllocationResult", "BatchAllocationResult", "InfeasibleError",
+    "StreamingResult", "solve", "solve_batch", "solve_coalesced",
+    "solve_streaming",
+]
 
 
-@dataclass
-class AllocationResult:
-    method: str
-    fractional: Solution
-    integer: Optional[IntegerSolution]
-    iters: int
-
-    @property
-    def r(self):
-        return self.integer.r if self.integer is not None else self.fractional.r
-
-    @property
-    def total(self):
-        return (self.integer.total if self.integer is not None
-                else self.fractional.total)
+def _warn(name: str, hint: str) -> None:
+    """Emit the facade's DeprecationWarning (message prefix is load-bearing:
+    ``pytest.ini`` and ``scripts/ci.sh`` promote exactly this prefix to an
+    error for in-repo callers)."""
+    warnings.warn(
+        f"repro.core.allocator.{name} is deprecated; use "
+        f"repro.core.engine.CapacityEngine — {hint} (see docs/API.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def solve(scn: Scenario, method: str = "distributed", *, eps_bar: float = 0.03,
           lam: float = 0.05, max_iters: int = 200,
-          integer: bool = True) -> AllocationResult:
-    """Solve the joint admission-control + capacity-allocation problem.
+          integer: bool = True) -> SolveReport:
+    """Deprecated: solve one instance (delegates to ``CapacityEngine``).
 
     Parameters
     ----------
     scn : Scenario
         One allocation instance over N job classes.
     method : str, optional
-        ``"centralized"`` (exact optimum of P2/P3 via water-filling),
-        ``"distributed"`` (Algorithm 4.1 GNEP best-reply, jitted) or
-        ``"distributed-python"`` (the paper-faithful serial loop) — all feed
-        Algorithm 4.2 when ``integer=True``, mirroring the paper's
-        experimental pipeline (Sec. 5).
+        ``"centralized"``, ``"distributed"`` or ``"distributed-python"``;
+        see :meth:`repro.core.engine.CapacityEngine.solve`.
     eps_bar, lam, max_iters
-        Algorithm 4.1 knobs (ignored by the centralized method); see
-        ``game.solve_distributed``.
+        Algorithm 4.1 knobs (-> ``SolverConfig``).
     integer : bool, optional
-        Apply Algorithm 4.2 rounding to the fractional solution.
+        Apply Algorithm 4.2 rounding (-> ``RoundingPolicy``).
 
     Returns
     -------
-    AllocationResult
-        Fractional (and, by default, integer) solutions plus iteration count.
+    SolveReport
+        Bit-equal to ``CapacityEngine(config, policies).solve(scn,
+        method=method)``.
 
     Raises
     ------
     InfeasibleError
         If ``sum(r_low) > R`` or some deadline is unattainable (E_i >= 0).
     """
-    if method == "centralized":
-        sol = solve_centralized(scn)
-    elif method == "distributed":
-        sol = game.solve_distributed(scn, eps_bar=eps_bar, lam=lam,
-                                     max_iters=max_iters)
-    elif method == "distributed-python":
-        sol, _, _ = game.solve_distributed_python(
-            scn, eps_bar=eps_bar, lam=lam, max_iters=max_iters)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
-    if not bool(sol.feasible):
-        raise InfeasibleError(
-            f"instance infeasible: sum(r_low)={float(jnp.sum(scn.r_low)):.1f} "
-            f"> R={float(scn.R):.1f} or some E_i >= 0")
-
-    integer_sol = (round_solution(scn, sol.r, sol.sM, sol.sR, sol.psi)
-                   if integer else None)
-    return AllocationResult(method=method, fractional=sol,
-                            integer=integer_sol, iters=int(sol.iters))
-
-
-class InfeasibleError(RuntimeError):
-    """Deadlines/SLAs cannot be met with the available capacity."""
-
-
-@dataclass
-class BatchAllocationResult:
-    """Result of one batched solve: every leaf carries a leading B dim.
-
-    Per-class arrays are (B, n_max) with padded classes identically zero;
-    ``instance(b)`` trims lane b back to a single-instance
-    :class:`AllocationResult`.
-    """
-    method: str
-    fractional: Solution                 # batched Solution
-    integer: Optional[IntegerSolution]   # batched IntegerSolution
-    mask: jnp.ndarray                    # (B, n_max)
-    n_classes: jnp.ndarray               # (B,)
-    iters: jnp.ndarray                   # (B,)
-    feasible: jnp.ndarray                # (B,)
-
-    @property
-    def batch_size(self) -> int:
-        return self.mask.shape[0]
-
-    @property
-    def r(self):
-        return self.integer.r if self.integer is not None else self.fractional.r
-
-    @property
-    def total(self):
-        return (self.integer.total if self.integer is not None
-                else self.fractional.total)
-
-    def instance(self, b: int) -> AllocationResult:
-        """Trim lane b to a single-instance view (mask-aware: works for
-        streaming windows whose free slots leave holes in the mask)."""
-        sel = np.asarray(self.mask[b])
-
-        def pick(leaf):
-            leaf = leaf[b]
-            return leaf[sel] if getattr(leaf, "ndim", 0) else leaf
-
-        frac = jax.tree_util.tree_map(pick, self.fractional)
-        integ = (jax.tree_util.tree_map(pick, self.integer)
-                 if self.integer is not None else None)
-        return AllocationResult(method=self.method, fractional=frac,
-                                integer=integ, iters=int(self.iters[b]))
+    _warn("solve", "CapacityEngine(SolverConfig(...)).solve(scn)")
+    eng = CapacityEngine(
+        SolverConfig(eps_bar=eps_bar, lam=lam, max_iters=max_iters),
+        Policies(rounding=RoundingPolicy(integer)))
+    return eng.solve(scn, method=method)
 
 
 def solve_batch(batch: Union[ScenarioBatch, Sequence[Scenario]],
                 method: str = "distributed", *, eps_bar: float = 0.03,
                 lam: float = 0.05, max_iters: int = 200, integer: bool = True,
                 sweep_fn=None, mesh=None,
-                check_feasible: bool = True) -> BatchAllocationResult:
-    """Solve B independent allocation instances as one batched program.
+                check_feasible: bool = True) -> BatchSolveReport:
+    """Deprecated: solve B instances at once (delegates to the engine).
 
     Parameters
     ----------
     batch : ScenarioBatch or Sequence[Scenario]
-        A prepared :class:`ScenarioBatch`, or a plain list of (possibly
-        ragged) Scenarios which is stacked/padded here.
+        A prepared batch or a plain (possibly ragged) scenario list
+        (-> ``engine._coerce``).
     method : str, optional
-        Only ``"distributed"`` (the batched GNEP engine) is supported.
+        Only ``"distributed"`` is supported on the batched path.
     eps_bar, lam, max_iters
-        Algorithm 4.1 knobs; see ``game.solve_distributed_batch``.
+        Algorithm 4.1 knobs (-> ``SolverConfig``).
     integer : bool, optional
-        Apply the lane-wise vmapped Algorithm 4.2 rounding pass.
+        Apply the vectorized Algorithm 4.2 rounding pass.
     sweep_fn : callable, optional
-        Batched RM price-sweep override (the Pallas kernel), forwarded to
-        ``solve_distributed_batch``.
+        Batched RM price-sweep override (-> ``SolverConfig.sweep_fn``).
     mesh : jax.sharding.Mesh, optional
-        1-D lane mesh (``repro.core.sharding.lane_mesh``): shard the B
-        lanes across devices, inert-lane padding handling ragged lane
-        counts; results match the unsharded path to <= 1e-6.  The rounding
-        pass runs on the gathered result (it is negligible next to the
-        solve).
+        1-D lane mesh (-> ``SolverConfig.mesh``).
     check_feasible : bool, optional
-        With True (default) an :class:`InfeasibleError` names every
-        infeasible lane; pass False to get per-lane ``feasible`` flags
-        instead (what-if sweeps legitimately probe infeasible capacity
-        points).
+        Raise on infeasible lanes (default) or return per-lane flags.
 
     Returns
     -------
-    BatchAllocationResult
-        Every leaf carries a leading B dim; ``instance(b)`` trims lane b
-        back to a single-instance view.
+    BatchSolveReport
+        Bit-equal to the corresponding ``CapacityEngine.solve`` call.
 
     Raises
     ------
@@ -189,138 +123,51 @@ def solve_batch(batch: Union[ScenarioBatch, Sequence[Scenario]],
         When ``check_feasible`` and any lane violates ``sum(r_low) <= R``
         or has some E_i >= 0.
     """
-    if not isinstance(batch, ScenarioBatch):
-        batch = stack_scenarios(batch)
-    if method != "distributed":
-        raise ValueError(
-            f"solve_batch supports method='distributed' only, got {method!r}")
-
-    sol = game.solve_distributed_batch(batch, eps_bar=eps_bar, lam=lam,
-                                       max_iters=max_iters, sweep_fn=sweep_fn,
-                                       mesh=mesh)
-    if check_feasible and not bool(jnp.all(sol.feasible)):
-        bad = [int(b) for b in jnp.nonzero(~sol.feasible)[0]]
-        raise InfeasibleError(f"instances {bad} infeasible: "
-                              "sum(r_low) > R or some E_i >= 0")
-
-    integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR, sol.psi)
-                   if integer else None)
-    return BatchAllocationResult(method=method, fractional=sol,
-                                 integer=integer_sol, mask=batch.mask,
-                                 n_classes=batch.n_classes, iters=sol.iters,
-                                 feasible=sol.feasible)
-
-
-@dataclass
-class StreamingResult(BatchAllocationResult):
-    """One streaming re-solve: a batch result plus incremental bookkeeping.
-
-    Attributes (beyond :class:`BatchAllocationResult`)
-    --------------------------------------------------
-    resolved : np.ndarray
-        (B,) bool — lanes that actually iterated this call (dirty or
-        never-solved); the complement was frozen at its stored equilibrium.
-    centralized_gap : jnp.ndarray or None
-        (B,) relative gap of the fractional GNEP total over the exact
-        centralized (P3) optimum, when ``cross_check=True`` was requested.
-    """
-    resolved: Optional[np.ndarray] = None
-    centralized_gap: Optional[jnp.ndarray] = None
+    _warn("solve_batch",
+          "CapacityEngine(SolverConfig(sweep_fn=..., mesh=...)).solve(batch)")
+    eng = CapacityEngine(
+        SolverConfig(eps_bar=eps_bar, lam=lam, max_iters=max_iters,
+                     sweep_fn=sweep_fn, mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer)))
+    return eng.solve(batch, method=method, check_feasible=check_feasible)
 
 
 def solve_streaming(window: AdmissionWindow, *, eps_bar: float = 0.03,
                     lam: float = 0.05, max_iters: int = 200,
                     integer: bool = True, sweep_fn=None, mesh=None,
                     cross_check: bool = False,
-                    cross_check_atol: float = 1e-6) -> StreamingResult:
-    """Incrementally re-solve a live :class:`AdmissionWindow`.
-
-    Only lanes dirtied by events since the last call iterate Algorithm 4.1
-    (restarting from the paper's cold init so they reproduce the cold
-    trajectory exactly); clean lanes are frozen at their stored equilibrium
-    and cost zero solver iterations.  The result is numerically equivalent
-    to a cold ``solve_batch`` of the window's current state, while steady-
-    state event handling stays on one compiled XLA program (no re-stacking,
-    no shape changes, no retrace).  The new equilibrium is committed back to
-    the window, marking every lane clean.
+                    cross_check_atol: float = 1e-6) -> WindowSolveReport:
+    """Deprecated: warm incremental window re-solve (-> ``WindowSession``).
 
     Parameters
     ----------
     window : AdmissionWindow
-        The live window; mutated (equilibrium state committed, dirty flags
-        cleared).
-    eps_bar, lam, max_iters, sweep_fn
-        Forwarded to ``game.solve_distributed_batch`` (see its docstring).
-    mesh : jax.sharding.Mesh, optional
-        1-D lane mesh (``repro.core.sharding.lane_mesh``): the window's
-        lanes shard across devices; the frozen / dirty warm-start split is
-        preserved verbatim (``BatchWarmStart`` shards over the same lane
-        axis, inert frozen lanes pad a ragged lane count), so per-lane
-        results — including which lanes iterate — match the unsharded
-        streaming path to <= 1e-6.
+        The live window; mutated (equilibrium committed, dirty flags
+        cleared) exactly as the engine path does.
+    eps_bar, lam, max_iters, sweep_fn, mesh
+        Solver knobs and placement (-> ``SolverConfig``).
     integer : bool, optional
-        Apply the vectorized Algorithm 4.2 rounding pass (default True).
+        Apply the vectorized Algorithm 4.2 rounding pass
+        (-> ``RoundingPolicy``).
     cross_check : bool, optional
-        Also compare every lane against its exact centralized (P3) optimum
-        (``solve_centralized_batch``) and attach the per-lane relative gap.
-        Baseline totals are memoized per lane in the window and recomputed
-        only for lanes whose scenario changed, mirroring the incremental
-        distributed solve.
-        Raises :class:`RuntimeError` if any feasible lane's fractional GNEP
-        total undercuts the exact optimum by more than ``cross_check_atol``
-        (impossible for a correct solver — the equilibrium is (P3)-feasible).
+        Attach the per-lane exact centralized (P3) gap
+        (-> ``CrossCheckPolicy``).
     cross_check_atol : float, optional
-        Absolute slack allowed in the sanity direction of the cross-check.
+        Sanity slack of the cross-check (-> ``CrossCheckPolicy.atol``).
 
     Returns
     -------
-    StreamingResult
-        Batch result over ALL lanes (frozen lanes carry their stored
-        equilibrium) plus ``resolved`` / ``centralized_gap`` bookkeeping.
-        Per-lane ``feasible`` flags report infeasible transients; no
-        exception is raised for them (arrival bursts legitimately overload
-        a window until load is shed).
+    WindowSolveReport
+        Bit-equal to ``engine.open_window(window).solve()`` under the same
+        config/policies.
     """
-    batch = window.batch
-    init = window.warm_start()
-    resolved = np.asarray(init.active).copy()
-
-    sol = game.solve_distributed_batch(batch, eps_bar=eps_bar, lam=lam,
-                                       max_iters=max_iters, sweep_fn=sweep_fn,
-                                       init=init, mesh=mesh)
-    window.commit(sol.r, sol.aux, sol.iters)
-
-    gap = None
-    if cross_check:
-        # The exact (P3) optimum of a lane only changes when its scenario
-        # does, so recompute just the stale lanes and serve the rest from
-        # the window's memo.  Per-lane single-instance solves keep the
-        # shapes (n_max,) regardless of how many lanes are stale — one
-        # compiled program per window width, never a retrace per stale
-        # count the way a ragged sub-batch gather would.
-        stale = np.flatnonzero(window.baseline_stale)
-        for b in stale:
-            lane = jax.tree_util.tree_map(lambda l: l[b], batch.scenarios)
-            window.baseline_totals[b] = float(
-                solve_centralized(lane, mask=batch.mask[b]).total)
-        window.baseline_stale[stale] = False
-        cent_total = jnp.asarray(window.baseline_totals, sol.total.dtype)
-        scale = jnp.maximum(jnp.abs(cent_total), 1.0)
-        gap = (sol.total - cent_total) / scale
-        undercut = (sol.total < cent_total - cross_check_atol) & sol.feasible
-        if bool(jnp.any(undercut)):
-            bad = [int(b) for b in jnp.nonzero(undercut)[0]]
-            raise RuntimeError(
-                f"lanes {bad}: GNEP total beats the exact (P3) optimum — "
-                "solver inconsistency (check mask/padding invariants)")
-
-    integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR, sol.psi)
-                   if integer else None)
-    return StreamingResult(method="streaming", fractional=sol,
-                           integer=integer_sol, mask=batch.mask,
-                           n_classes=batch.n_classes, iters=sol.iters,
-                           feasible=sol.feasible, resolved=resolved,
-                           centralized_gap=gap)
+    _warn("solve_streaming",
+          "CapacityEngine(...).open_window(window).solve()")
+    return _legacy_solve_window(window, eps_bar=eps_bar, lam=lam,
+                                max_iters=max_iters, integer=integer,
+                                sweep_fn=sweep_fn, mesh=mesh,
+                                cross_check=cross_check,
+                                cross_check_atol=cross_check_atol)
 
 
 def solve_coalesced(window: AdmissionWindow, events, *,
@@ -328,47 +175,31 @@ def solve_coalesced(window: AdmissionWindow, events, *,
                     eps_bar: float = 0.03, lam: float = 0.05,
                     max_iters: int = 200, integer: bool = True,
                     sweep_fn=None, mesh=None, cross_check: bool = False):
-    """Replay an event stream in coalesced re-solve epochs (a generator).
-
-    The dynamic-window cadence driver: events accumulate in an
-    :class:`~repro.core.streaming.EventEpoch` until ``policy`` triggers,
-    then ONE coalesced window update (one scatter per Scenario field, not
-    one dispatch per event) and ONE warm-started :func:`solve_streaming`
-    re-equilibrate every lane the epoch dirtied.  Each flush's result is
-    numerically equivalent to having re-solved after every single event
-    (the last per-event solve of the epoch; see
-    ``tests/test_coalescing.py``), so coalescing trades only *staleness
-    between flushes* — never accuracy — for an ~K-fold cut in per-event
-    solver dispatch (``benchmarks/streaming_perf.py --coalesce``).
-
-    A trailing partial epoch is flushed after the stream ends, so
-    consuming the generator always leaves the window clean and solved.
+    """Deprecated: coalesced event-stream replay (-> ``WindowSession.stream``).
 
     Parameters
     ----------
     window : AdmissionWindow
         The live window; mutated at every flush.
     events : iterable of StreamEvent
-        The event stream, in application order.  May be a lazy iterator —
-        epochs are formed as events arrive.
+        The event stream, in application order.
     policy : FlushPolicy, optional
-        Flush triggers (default: every 8 events; see
-        :class:`~repro.core.streaming.FlushPolicy`).
+        Flush triggers (default: every 8 events) (-> ``Policies.flush``).
     eps_bar, lam, max_iters, integer, sweep_fn, mesh, cross_check
-        Forwarded to :func:`solve_streaming` verbatim (the mesh path keeps
-        the frozen/dirty split sharded exactly as the per-event engine
-        does).
+        As in :func:`solve_streaming` (-> ``SolverConfig`` / ``Policies``).
 
     Yields
     ------
-    StreamingResult
-        One per flush, in stream order.
+    WindowSolveReport
+        One per flush, in stream order — bit-equal to
+        ``engine.open_window(window).stream(events)``.
     """
-    epoch = EventEpoch(window, policy=policy)
-    kw = dict(eps_bar=eps_bar, lam=lam, max_iters=max_iters, integer=integer,
-              sweep_fn=sweep_fn, mesh=mesh, cross_check=cross_check)
-    for ev in events:
-        if epoch.add(ev):
-            yield epoch.flush(**kw)
-    if len(epoch):
-        yield epoch.flush(**kw)
+    _warn("solve_coalesced",
+          "CapacityEngine(...).open_window(window).stream(events)")
+    eng = CapacityEngine(
+        SolverConfig(eps_bar=eps_bar, lam=lam, max_iters=max_iters,
+                     sweep_fn=sweep_fn, mesh=mesh),
+        Policies(flush=policy if policy is not None else FlushPolicy(),
+                 rounding=RoundingPolicy(integer),
+                 cross_check=CrossCheckPolicy(cross_check)))
+    return eng.open_window(window).stream(events)

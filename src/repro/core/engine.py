@@ -1,0 +1,921 @@
+"""Unified session API over the GNEP solver stack: one engine, one config.
+
+PRs 1-4 grew the paper's runtime capacity-allocation dynamic into seven
+divergent entry points (``solve``, ``solve_batch``, ``solve_streaming``,
+``solve_coalesced``, ``solve_centralized[_batch]``, ``solve_sharded_batch``),
+each re-threading the same ``eps_bar`` / ``lam`` / ``mesh`` / ``sweep_fn``
+kwargs.  This module replaces that zoo with a single configured-session
+abstraction (the shape design tools like D-SPACE4Cloud converge on):
+
+* :class:`SolverConfig` — every Algorithm 4.1 knob plus kernel and device
+  placement in one frozen, hashable object (``eps_bar``, ``lam``,
+  ``max_iters``, ``dtype``, ``sweep_fn``, ``mesh``) with a stable
+  :meth:`~SolverConfig.fingerprint` the benchmark regression gate records;
+* :class:`Policies` — the *operational* choices as explicit policy objects:
+  flush cadence (:class:`~repro.core.streaming.FlushPolicy`, including the
+  deadline-aware constructor), compaction occupancy
+  (:class:`CompactionPolicy`), Algorithm 4.2 rounding
+  (:class:`RoundingPolicy`) and the exact centralized (P3) cross-check
+  baseline (:class:`CrossCheckPolicy`);
+* :class:`CapacityEngine` — a small verb set: :meth:`~CapacityEngine.solve`
+  for one-shot instances/batches and :meth:`~CapacityEngine.open_window`
+  for the paper's runtime loop;
+* :class:`WindowSession` — the live loop: ``apply`` events, ``flush``
+  coalesced re-solves, ``stream`` whole traces; warm-start state, the
+  coalescing FlushPolicy loop and mesh placement all live inside;
+* the :class:`SolveReport` hierarchy — one result shape (equilibrium,
+  per-lane iterations/convergence, rounding, centralized gap, timing)
+  subsuming the legacy ``AllocationResult`` / ``BatchAllocationResult`` /
+  ``StreamingResult``.
+
+The legacy ``repro.core.allocator.solve_*`` facades are thin deprecated
+shims over this module, proven bit-equal in ``tests/test_engine.py``; the
+old-call -> engine-call migration table is ``docs/API.md``.  ``game.py`` /
+``streaming.py`` / ``sharding.py`` / ``centralized.py`` stay pure mechanism:
+adding a new backend kernel or event kind is a config/policy field here, not
+another ``solve_*`` variant.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import (Any, Callable, Iterable, Iterator, List, Optional,
+                    Sequence, Set, Union)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import game
+from repro.core.centralized import solve_centralized
+from repro.core.rounding import (IntegerSolution, round_solution,
+                                 round_solution_batch)
+from repro.core.streaming import AdmissionWindow, FlushPolicy
+from repro.core.types import (Scenario, ScenarioBatch, Solution, StreamEvent,
+                              stack_scenarios)
+
+
+class InfeasibleError(RuntimeError):
+    """Deadlines/SLAs cannot be met with the available capacity."""
+
+
+# --------------------------------------------------------------------------
+# Configuration: every solver knob in one frozen object
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Every Algorithm 4.1 knob, kernel choice and placement in one object.
+
+    Frozen and hashable (safe as a static jit argument and as a dict key),
+    with float/int leaves only — pytree-friendly by construction.  One
+    config replaces the six kwargs the legacy facades threaded separately;
+    the engine passes it to every mechanism call so no path can silently
+    drop a knob (the kwargs-drift class of bug the redesign retires).
+
+    Attributes
+    ----------
+    eps_bar : float
+        Algorithm 4.1 stopping tolerance on the relative allocation change
+        ``sum_i |r_i' - r_i| / r_i`` (paper uses 0.03).
+    lam : float
+        Bid-escalation (pseudo-gradient) step of ``game.cm_bid_update``: a
+        rejecting CM raises its bid by ``lam * rho_up`` per iteration.
+    max_iters : int
+        Best-reply iteration cap (a static jit argument: changing it
+        recompiles).
+    dtype : jnp.dtype or str, optional
+        Float dtype scenario leaves are coerced to by :func:`_coerce`.
+        ``None`` (default) keeps each input's native dtype.
+    sweep_fn : callable, optional
+        Batched RM price-sweep override, e.g. the Pallas kernel from
+        ``repro.kernels.gnep_sweep.ops.make_batched_sweep_fn`` — applied on
+        every batched/streaming solve.  Pass a memoized function object
+        (it keys the compiled-program caches by identity).
+    mesh : jax.sharding.Mesh, optional
+        1-D lane mesh (``repro.core.sharding.lane_mesh``): batched and
+        streaming solves shard their lanes across the mesh's devices,
+        inert-lane padding handling ragged lane counts.  ``None`` keeps
+        everything on one device.
+    """
+    eps_bar: float = 0.03
+    lam: float = 0.05
+    max_iters: int = 200
+    dtype: Optional[Any] = None
+    sweep_fn: Optional[Callable] = None
+    mesh: Optional[Any] = None
+
+    def fingerprint(self) -> str:
+        """Stable identity string for benchmark / baseline provenance.
+
+        ``benchmarks/*_perf.py --json`` records it and
+        ``scripts/check_bench.py`` treats it as configuration: numbers
+        measured under different solver configs (or on the pre-redesign
+        facades, which recorded none) are never compared.
+
+        Returns
+        -------
+        str
+            ``eps_bar=..|lam=..|max_iters=..|dtype=..|sweep=..|mesh=..``;
+            the sweep kernel contributes its ``__name__``, the mesh its
+            shape and axis names.
+        """
+        dtype = ("native" if self.dtype is None
+                 else jnp.dtype(self.dtype).name)
+        sweep = ("reference" if self.sweep_fn is None
+                 else getattr(self.sweep_fn, "__name__",
+                              type(self.sweep_fn).__name__))
+        mesh = ("none" if self.mesh is None
+                else "x".join(map(str, self.mesh.devices.shape))
+                + ":" + ",".join(self.mesh.axis_names))
+        return (f"eps_bar={self.eps_bar}|lam={self.lam}"
+                f"|max_iters={self.max_iters}|dtype={dtype}"
+                f"|sweep={sweep}|mesh={mesh}")
+
+
+# --------------------------------------------------------------------------
+# Policies: the operational choices, as explicit objects
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundingPolicy:
+    """Whether (and that) Algorithm 4.2 integerization runs after the solve.
+
+    Attributes
+    ----------
+    enabled : bool
+        Apply the (vectorized) Algorithm 4.2 rounding pass; reports carry
+        ``integer=None`` when disabled (what-if sweeps and benchmarks that
+        time the fractional solve alone turn it off).
+    """
+    enabled: bool = True
+
+
+@dataclass(frozen=True)
+class CrossCheckPolicy:
+    """Compare every lane against its exact centralized (P3) optimum.
+
+    When enabled, window solves attach the per-lane relative gap of the
+    GNEP total over the exact optimum (``SolveReport.centralized_gap``).
+    Baseline totals are memoized per lane in the window and recomputed only
+    for lanes whose scenario changed, mirroring the incremental solve.
+
+    Attributes
+    ----------
+    enabled : bool
+        Run the baseline (default off — it costs one water-filling solve
+        per stale lane).
+    atol : float
+        Absolute slack allowed in the sanity direction: a feasible lane's
+        GNEP total undercutting the exact optimum by more than this raises
+        ``RuntimeError`` (impossible for a correct solver).
+    """
+    enabled: bool = False
+    atol: float = 1e-6
+
+
+@dataclass(frozen=True)
+class CompactionPolicy:
+    """When a :class:`WindowSession` re-packs its sparse window.
+
+    Churn leaves holes in the occupancy mask and growth ratchets ``n_max``
+    up; solver work scales with ``B x n_max``, so long-lived windows slowly
+    pay for ghosts.  At every flush boundary the session compares
+    ``window.occupancy`` against ``occupancy`` and compacts
+    (``AdmissionWindow.compact``) when it drops below — the report carries
+    the old->new ``slot_map`` so slot-addressed bookkeeping can follow.
+
+    Attributes
+    ----------
+    occupancy : float, optional
+        Occupied-slot fraction below which the session compacts at the
+        next flush boundary.  ``None`` (default) never auto-compacts
+        (compaction changes XLA shapes — one recompile — so it stays an
+        explicit operator decision; see ``docs/OPERATIONS.md``).
+    headroom : float
+        Width multiplier for the compacted window: the target ``n_max`` is
+        ``ceil(headroom * widest lane)`` (floor: the widest lane), so a
+        value > 1 leaves slack before the next arrival forces a re-grow.
+    """
+    occupancy: Optional[float] = None
+    headroom: float = 1.0
+
+
+@dataclass(frozen=True)
+class Policies:
+    """The engine's operational policy bundle (all fields are policies).
+
+    Attributes
+    ----------
+    flush : repro.core.streaming.FlushPolicy
+        When buffered events force a coalesced re-solve — including the
+        deadline-aware triggers of ``FlushPolicy.deadline`` (SLA-critical
+        events flush immediately, bulk events keep coalescing).
+    compaction : CompactionPolicy
+        When a sparse long-lived window is re-packed.
+    rounding : RoundingPolicy
+        Whether Algorithm 4.2 integerization runs.
+    cross_check : CrossCheckPolicy
+        Whether window solves attach the exact (P3) baseline gap.
+    """
+    flush: FlushPolicy = FlushPolicy()
+    compaction: CompactionPolicy = CompactionPolicy()
+    rounding: RoundingPolicy = RoundingPolicy()
+    cross_check: CrossCheckPolicy = CrossCheckPolicy()
+
+
+# --------------------------------------------------------------------------
+# The unified report hierarchy
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SolveReport:
+    """One solved instance: the unified result shape of the engine.
+
+    Subsumes the legacy ``AllocationResult`` (its alias since the engine
+    redesign): same core fields, plus the config fingerprint and host-side
+    timing every engine call attaches.
+
+    Attributes
+    ----------
+    method : str
+        ``"centralized"``, ``"distributed"``, ``"distributed-python"``,
+        ``"distributed-batch"`` or ``"streaming"``.
+    fractional : Solution
+        The fractional equilibrium / optimum.
+    integer : IntegerSolution or None
+        Algorithm 4.2 integerization (None when rounding is disabled).
+    iters : int or jnp.ndarray
+        Best-reply iterations (per lane for batched reports).
+    config : SolverConfig or None
+        The solver config that produced this report.
+    elapsed_s : float
+        Host-side wall-clock of the engine call (dispatch + rounding; on
+        async backends the device work may still be in flight).
+    """
+    method: str
+    fractional: Solution
+    integer: Optional[IntegerSolution]
+    iters: Any
+    config: Optional[SolverConfig] = None
+    elapsed_s: float = 0.0
+
+    @property
+    def r(self):
+        """Allocation of the preferred (integer when present) solution."""
+        return self.integer.r if self.integer is not None else self.fractional.r
+
+    @property
+    def total(self):
+        """Objective total of the preferred solution."""
+        return (self.integer.total if self.integer is not None
+                else self.fractional.total)
+
+    @property
+    def converged(self):
+        """Whether Algorithm 4.1 stopped on tolerance, not the iteration cap
+        (per lane for batched reports; trivially True for closed forms)."""
+        limit = self.config.max_iters if self.config is not None else np.inf
+        return self.iters < limit
+
+
+@dataclass
+class BatchSolveReport(SolveReport):
+    """One batched solve: every leaf carries a leading B dim.
+
+    Subsumes the legacy ``BatchAllocationResult`` (its alias).  Per-class
+    arrays are (B, n_max) with padded classes identically zero;
+    :meth:`instance` trims one lane back to a single-instance
+    :class:`SolveReport`.
+
+    Attributes (beyond :class:`SolveReport`)
+    ----------------------------------------
+    mask : jnp.ndarray
+        (B, n_max) class-validity mask of the solved batch.
+    n_classes : jnp.ndarray
+        (B,) valid-class counts.
+    feasible : jnp.ndarray
+        (B,) per-lane feasibility flags (``sum(r_low) <= R`` and all
+        ``E_i < 0``).
+    """
+    mask: Optional[jnp.ndarray] = None
+    n_classes: Optional[jnp.ndarray] = None
+    feasible: Optional[jnp.ndarray] = None
+
+    @property
+    def batch_size(self) -> int:
+        """Number of lanes B in this report."""
+        return self.mask.shape[0]
+
+    def instance(self, b: int) -> SolveReport:
+        """Trim lane ``b`` to a single-instance view.
+
+        Mask-aware: works for streaming windows whose free slots leave
+        holes in the mask (gathers valid slots, never slices a prefix).
+
+        Parameters
+        ----------
+        b : int
+            Lane index.
+
+        Returns
+        -------
+        SolveReport
+            The lane's solution with per-class leaves trimmed to its valid
+            classes.
+        """
+        sel = np.asarray(self.mask[b])
+
+        def pick(leaf):
+            leaf = leaf[b]
+            return leaf[sel] if getattr(leaf, "ndim", 0) else leaf
+
+        frac = jax.tree_util.tree_map(pick, self.fractional)
+        integ = (jax.tree_util.tree_map(pick, self.integer)
+                 if self.integer is not None else None)
+        return SolveReport(method=self.method, fractional=frac, integer=integ,
+                           iters=int(self.iters[b]), config=self.config,
+                           elapsed_s=self.elapsed_s)
+
+
+@dataclass
+class WindowSolveReport(BatchSolveReport):
+    """One streaming re-solve: a batch report plus incremental bookkeeping.
+
+    Subsumes the legacy ``StreamingResult`` (its alias).
+
+    Attributes (beyond :class:`BatchSolveReport`)
+    ---------------------------------------------
+    resolved : np.ndarray
+        (B,) bool — lanes that actually iterated this solve (dirty or
+        never-solved); the complement was frozen at its stored equilibrium.
+    centralized_gap : jnp.ndarray or None
+        (B,) relative gap of the fractional GNEP total over the exact
+        centralized (P3) optimum, when the cross-check policy is enabled.
+    slot_map : np.ndarray or None
+        (B, old_n_max) old-slot -> new-slot map when this flush compacted
+        the window under a :class:`CompactionPolicy` (None otherwise);
+        callers with slot-addressed bookkeeping remap through it.
+    """
+    resolved: Optional[np.ndarray] = None
+    centralized_gap: Optional[jnp.ndarray] = None
+    slot_map: Optional[np.ndarray] = None
+
+
+# --------------------------------------------------------------------------
+# Input coercion: one helper, every entry point
+# --------------------------------------------------------------------------
+
+
+def _coerce(problem, *, dtype=None, n_max: Optional[int] = None
+            ) -> ScenarioBatch:
+    """Normalize any accepted problem form into a :class:`ScenarioBatch`.
+
+    The single input-coercion point of the engine (every verb routes
+    through it), retiring the legacy drift where ``solve_batch`` accepted a
+    ``Sequence[Scenario]`` but the streaming facades did not.
+
+    Parameters
+    ----------
+    problem : ScenarioBatch, Scenario, Sequence[Scenario] or AdmissionWindow
+        A prepared batch (returned as-is, modulo dtype), a single instance
+        (stacked as one lane), a plain — possibly ragged — scenario list
+        (stacked/padded here), or a live window (its current batch).
+    dtype : jnp.dtype or str, optional
+        Cast every float leaf to this dtype (``SolverConfig.dtype``);
+        ``None`` keeps the input's native dtypes.
+    n_max : int, optional
+        Padded width passed to ``stack_scenarios`` when stacking loose
+        scenarios (ignored for already-stacked inputs).
+
+    Returns
+    -------
+    ScenarioBatch
+        The canonical stacked + masked form every solver consumes.
+
+    Raises
+    ------
+    TypeError
+        For anything else (with the accepted forms named).
+    """
+    if isinstance(problem, AdmissionWindow):
+        batch = problem.batch
+    elif isinstance(problem, ScenarioBatch):
+        batch = problem
+    elif isinstance(problem, Scenario):
+        batch = stack_scenarios([problem], n_max=n_max)
+    elif isinstance(problem, Sequence) and not isinstance(problem, (str, bytes)):
+        items = list(problem)
+        if not all(isinstance(s, Scenario) for s in items):
+            raise TypeError(
+                "sequence inputs must contain Scenario instances only")
+        batch = stack_scenarios(items, n_max=n_max)
+    else:
+        raise TypeError(
+            f"cannot coerce {type(problem).__name__!r} — pass a Scenario, a "
+            "Sequence[Scenario], a ScenarioBatch or an AdmissionWindow")
+    if dtype is not None:
+        batch = ScenarioBatch(scenarios=_cast_floats(batch.scenarios, dtype),
+                              mask=batch.mask, n_classes=batch.n_classes)
+    return batch
+
+
+def _cast_floats(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (the one
+    dtype-coercion rule of the engine; integer/bool leaves pass through)."""
+    dt = jnp.dtype(dtype)
+    return jax.tree_util.tree_map(
+        lambda leaf: (leaf.astype(dt)
+                      if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf),
+        tree)
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+
+class CapacityEngine:
+    """The single entry point to the GNEP capacity-allocation stack.
+
+    One engine = one :class:`SolverConfig` (solver knobs, kernel, mesh) +
+    one :class:`Policies` bundle (flush cadence, compaction, rounding,
+    cross-check).  Engines are cheap, stateless handles — all compiled
+    programs live in module-level caches keyed by the config values, so
+    constructing many engines costs nothing; all *mutable* state (warm
+    starts, pending events) lives in the :class:`WindowSession` /
+    ``AdmissionWindow`` a session wraps.
+
+    Parameters
+    ----------
+    config : SolverConfig, optional
+        Solver knobs + kernel + placement (defaults: the paper's).
+    policies : Policies, optional
+        Operational policies (defaults: round, no cross-check, flush every
+        8 events, never auto-compact).
+    """
+
+    def __init__(self, config: Optional[SolverConfig] = None,
+                 policies: Optional[Policies] = None):
+        self.config = config if config is not None else SolverConfig()
+        self.policies = policies if policies is not None else Policies()
+
+    # ------------------------------------------------------------- one-shot
+    def solve(self, problem, *, method: str = "distributed",
+              check_feasible: bool = True
+              ) -> Union[SolveReport, BatchSolveReport]:
+        """Solve one instance or one batch of independent instances.
+
+        Parameters
+        ----------
+        problem : Scenario, Sequence[Scenario], ScenarioBatch or AdmissionWindow
+            A single :class:`Scenario` runs the single-instance pipeline
+            (any ``method``); everything else is coerced by
+            :func:`_coerce` and runs the batched engine (B lanes as one
+            XLA program, sharded over ``config.mesh`` when set).
+        method : str, optional
+            ``"distributed"`` (Algorithm 4.1, default), ``"centralized"``
+            (exact P3 water-filling) or ``"distributed-python"`` (the
+            paper-faithful serial loop) — the latter two for single
+            instances only.
+        check_feasible : bool, optional
+            Batched path: with True (default) an :class:`InfeasibleError`
+            names every infeasible lane; False returns per-lane
+            ``feasible`` flags instead (what-if sweeps legitimately probe
+            infeasible capacity points).  The single-instance path always
+            raises, as the legacy facade did.
+
+        Returns
+        -------
+        SolveReport or BatchSolveReport
+            Fractional (and, per the rounding policy, integer) solutions
+            plus iteration counts; batched reports carry a leading B dim
+            on every leaf and ``instance(b)`` trims one lane.
+
+        Raises
+        ------
+        InfeasibleError
+            If ``sum(r_low) > R`` or some deadline is unattainable
+            (E_i >= 0) — per ``check_feasible`` on the batched path.
+        ValueError
+            For an unknown or unsupported ``method``.
+        """
+        if isinstance(problem, Scenario):
+            return self._solve_single(problem, method)
+        if method != "distributed":
+            raise ValueError("batched solves support method='distributed' "
+                             f"only, got {method!r}")
+        return self._solve_batch(_coerce(problem, dtype=self.config.dtype),
+                                 check_feasible)
+
+    def _solve_single(self, scn: Scenario, method: str) -> SolveReport:
+        cfg = self.config
+        if cfg.dtype is not None:
+            scn = _cast_floats(scn, cfg.dtype)
+        t0 = time.perf_counter()
+        if method == "centralized":
+            sol = solve_centralized(scn)
+        elif method == "distributed":
+            sol = game.solve_distributed(scn, eps_bar=cfg.eps_bar,
+                                         lam=cfg.lam,
+                                         max_iters=cfg.max_iters)
+        elif method == "distributed-python":
+            sol, _, _ = game.solve_distributed_python(
+                scn, eps_bar=cfg.eps_bar, lam=cfg.lam,
+                max_iters=cfg.max_iters)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+
+        if not bool(sol.feasible):
+            raise InfeasibleError(
+                "instance infeasible: "
+                f"sum(r_low)={float(jnp.sum(scn.r_low)):.1f} "
+                f"> R={float(scn.R):.1f} or some E_i >= 0")
+
+        integer_sol = (round_solution(scn, sol.r, sol.sM, sol.sR, sol.psi)
+                       if self.policies.rounding.enabled else None)
+        return SolveReport(method=method, fractional=sol, integer=integer_sol,
+                           iters=int(sol.iters), config=cfg,
+                           elapsed_s=time.perf_counter() - t0)
+
+    def _solve_batch(self, batch: ScenarioBatch,
+                     check_feasible: bool) -> BatchSolveReport:
+        cfg = self.config
+        t0 = time.perf_counter()
+        sol = game.solve_distributed_batch(batch, eps_bar=cfg.eps_bar,
+                                           lam=cfg.lam,
+                                           max_iters=cfg.max_iters,
+                                           sweep_fn=cfg.sweep_fn,
+                                           mesh=cfg.mesh)
+        if check_feasible and not bool(jnp.all(sol.feasible)):
+            bad = [int(b) for b in jnp.nonzero(~sol.feasible)[0]]
+            raise InfeasibleError(f"instances {bad} infeasible: "
+                                  "sum(r_low) > R or some E_i >= 0")
+
+        integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR,
+                                            sol.psi)
+                       if self.policies.rounding.enabled else None)
+        return BatchSolveReport(method="distributed", fractional=sol,
+                                integer=integer_sol, iters=sol.iters,
+                                config=cfg,
+                                elapsed_s=time.perf_counter() - t0,
+                                mask=batch.mask, n_classes=batch.n_classes,
+                                feasible=sol.feasible)
+
+    # ------------------------------------------------------------ sessions
+    def open_window(self, lanes, *, n_max: Optional[int] = None,
+                    growth_factor: float = 2.0) -> "WindowSession":
+        """Open the runtime loop: a live window driven by this engine.
+
+        Parameters
+        ----------
+        lanes : AdmissionWindow, Scenario, Sequence[Scenario] or ScenarioBatch
+            An existing live window is adopted as-is (its warm-start state,
+            occupancy and dirty flags are preserved — this is how the
+            legacy streaming facades delegate); anything else is coerced by
+            :func:`_coerce` into the initial lane set of a fresh
+            :class:`~repro.core.streaming.AdmissionWindow`.
+        n_max : int, optional
+            Initial padded width of a fresh window (headroom avoids early
+            growth repads); ignored when adopting an existing window.
+        growth_factor : float, optional
+            Fresh-window growth multiplier when a lane's row fills
+            (ignored when adopting an existing window).
+
+        Returns
+        -------
+        WindowSession
+            The session; all solver/policy behavior comes from this
+            engine's ``config`` and ``policies``.
+        """
+        if isinstance(lanes, AdmissionWindow):
+            return WindowSession(self, lanes)
+        batch = _coerce(lanes, dtype=self.config.dtype)
+        scns = [batch.instance(b) for b in range(batch.batch_size)]
+        window = AdmissionWindow(scns, n_max=n_max or batch.n_max,
+                                 growth_factor=growth_factor)
+        return WindowSession(self, window)
+
+    # ----------------------------------------------------------- internals
+    def _solve_window(self, window: AdmissionWindow) -> WindowSolveReport:
+        """Warm-started incremental re-solve of a live window (the streaming
+        mechanism: only dirty lanes iterate, clean lanes freeze at their
+        stored equilibrium; numerically equivalent to a cold re-solve)."""
+        cfg, pol = self.config, self.policies
+        t0 = time.perf_counter()
+        batch = window.batch
+        init = window.warm_start()
+        resolved = np.asarray(init.active).copy()
+
+        sol = game.solve_distributed_batch(batch, eps_bar=cfg.eps_bar,
+                                           lam=cfg.lam,
+                                           max_iters=cfg.max_iters,
+                                           sweep_fn=cfg.sweep_fn, init=init,
+                                           mesh=cfg.mesh)
+        window.commit(sol.r, sol.aux, sol.iters)
+
+        gap = None
+        if pol.cross_check.enabled:
+            # The exact (P3) optimum of a lane only changes when its
+            # scenario does, so recompute just the stale lanes and serve
+            # the rest from the window's memo.  Per-lane single-instance
+            # solves keep the shapes (n_max,) regardless of how many lanes
+            # are stale — one compiled program per window width, never a
+            # retrace per stale count the way a ragged sub-batch gather
+            # would.
+            stale = np.flatnonzero(window.baseline_stale)
+            for b in stale:
+                lane = jax.tree_util.tree_map(lambda l: l[b], batch.scenarios)
+                window.baseline_totals[b] = float(
+                    solve_centralized(lane, mask=batch.mask[b]).total)
+            window.baseline_stale[stale] = False
+            cent_total = jnp.asarray(window.baseline_totals, sol.total.dtype)
+            scale = jnp.maximum(jnp.abs(cent_total), 1.0)
+            gap = (sol.total - cent_total) / scale
+            undercut = ((sol.total < cent_total - pol.cross_check.atol)
+                        & sol.feasible)
+            if bool(jnp.any(undercut)):
+                bad = [int(b) for b in jnp.nonzero(undercut)[0]]
+                raise RuntimeError(
+                    f"lanes {bad}: GNEP total beats the exact (P3) optimum "
+                    "— solver inconsistency (check mask/padding invariants)")
+
+        integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR,
+                                            sol.psi)
+                       if pol.rounding.enabled else None)
+        return WindowSolveReport(method="streaming", fractional=sol,
+                                 integer=integer_sol, iters=sol.iters,
+                                 config=cfg,
+                                 elapsed_s=time.perf_counter() - t0,
+                                 mask=batch.mask, n_classes=batch.n_classes,
+                                 feasible=sol.feasible, resolved=resolved,
+                                 centralized_gap=gap)
+
+
+class WindowSession:
+    """The paper's runtime loop as a session: events in, equilibria out.
+
+    Wraps a live :class:`~repro.core.streaming.AdmissionWindow` and owns
+    everything the legacy facades made the caller thread by hand: the
+    event buffer and its :class:`~repro.core.streaming.FlushPolicy` (incl.
+    deadline-aware immediate flushes), the warm-start state carried between
+    re-solves, mesh placement, compaction policy, rounding and the
+    centralized cross-check.  Per-lane ``feasible`` flags report infeasible
+    transients without raising (arrival bursts legitimately overload a
+    window until load is shed).
+
+    Obtain sessions from :meth:`CapacityEngine.open_window`.
+
+    Parameters
+    ----------
+    engine : CapacityEngine
+        Supplies ``config`` (solver knobs, kernel, mesh) and ``policies``.
+    window : AdmissionWindow
+        The live window; mutated by ``apply``/``flush``/lane operations.
+    """
+
+    def __init__(self, engine: CapacityEngine, window: AdmissionWindow):
+        self.engine = engine
+        self.window = window
+        self._pending: List[StreamEvent] = []
+        self.flushes = 0
+        self.events_folded = 0
+        self.last_slots: List[Optional[int]] = []
+
+    # ------------------------------------------------------------- queries
+    @property
+    def pending(self):
+        """Buffered, not-yet-applied events (application order)."""
+        return tuple(self._pending)
+
+    @property
+    def dirty_lanes(self) -> Set[int]:
+        """Lanes the next flush will re-solve: window-dirty | buffered."""
+        return (set(int(b) for b in np.flatnonzero(self.window.dirty))
+                | {ev.lane for ev in self._pending})
+
+    # --------------------------------------------------------------- verbs
+    def solve(self) -> WindowSolveReport:
+        """Warm-started incremental re-solve of the window's current state.
+
+        Only lanes dirtied since the last equilibrium iterate Algorithm 4.1
+        (restarting from the paper's cold init so they reproduce the cold
+        trajectory exactly); clean lanes are frozen at zero solver cost.
+        Buffered events are NOT applied — use :meth:`flush` for that.
+
+        Returns
+        -------
+        WindowSolveReport
+            Batch result over all lanes plus ``resolved`` /
+            ``centralized_gap`` bookkeeping.
+        """
+        return self.engine._solve_window(self.window)
+
+    def apply(self, *events: StreamEvent) -> Optional[WindowSolveReport]:
+        """Buffer events; flush automatically when the policy demands it.
+
+        Each event is checked against the engine's flush policy: an
+        SLA-critical event (per ``FlushPolicy.deadline``) or a fired
+        count / dirty-fraction trigger causes an immediate :meth:`flush`
+        — bulk events keep coalescing until then.
+
+        Parameters
+        ----------
+        *events : StreamEvent
+            ClassArrival / ClassDeparture / SLAEdit / CapacityChange, in
+            application order (validated atomically at flush).
+
+        Returns
+        -------
+        WindowSolveReport or None
+            The report of the LAST policy-triggered flush, or None when
+            everything is still buffered.
+        """
+        policy = self.engine.policies.flush
+        report = None
+        for ev in events:
+            self._pending.append(ev)
+            if self._policy_fires(policy, ev):
+                report = self.flush()
+        return report
+
+    def _policy_fires(self, policy: FlushPolicy, ev: StreamEvent) -> bool:
+        """One buffered event's flush decision (dirty-lane accounting is
+        skipped unless the policy actually has a dirty-fraction trigger —
+        it costs a host scan per event on the dispatch-bound path)."""
+        if policy.is_critical(ev, self.window):
+            return True
+        n_dirty = (len(self.dirty_lanes)
+                   if policy.max_dirty_fraction is not None else 0)
+        return policy.should_flush(n_events=len(self._pending),
+                                   n_dirty=n_dirty,
+                                   batch_size=self.window.batch_size)
+
+    def drain(self) -> List[Optional[int]]:
+        """Fold every buffered event into the window WITHOUT re-solving.
+
+        One coalesced ``AdmissionWindow.apply_epoch`` (one scatter per
+        Scenario field however many events are pending); the window is
+        left dirty for the next :meth:`solve` / :meth:`flush`.  Drivers
+        that need arrival slot grants before deciding further events (the
+        fleet layer does) call this directly.
+
+        Returns
+        -------
+        list of (int or None)
+            Per-event slot grants (arrivals) in buffer order — also kept
+            on ``last_slots``; empty when nothing was pending.
+        """
+        if not self._pending:
+            return []
+        if len(self._pending) == 1:
+            # single-event fast path: skip the epoch simulation entirely
+            # (apply_epoch is proven bit-equal to sequential apply, so this
+            # changes dispatch cost only — per-event streaming is
+            # dispatch-bound on CPU)
+            slots = [self.window.apply(self._pending[0])]
+        else:
+            slots = self.window.apply_epoch(self._pending)
+        self.events_folded += len(self._pending)
+        self._pending = []
+        self.last_slots = slots
+        return slots
+
+    def flush(self) -> WindowSolveReport:
+        """Apply buffered events, run policy compaction, re-solve once.
+
+        The coalesced cadence step: ONE window update folds the whole
+        buffer, the compaction policy may re-pack a sparse window (the
+        report's ``slot_map`` records the re-layout), and ONE warm-started
+        re-solve re-equilibrates the union of dirtied lanes.  An empty
+        flush on a clean window is legal and nearly free (every lane
+        freezes).
+
+        Returns
+        -------
+        WindowSolveReport
+            Numerically equivalent to having re-solved after every single
+            event (the last per-event solve of the epoch; proven in
+            ``tests/test_coalescing.py``).
+        """
+        self.drain()
+        report_map = None
+        comp = self.engine.policies.compaction
+        if (comp.occupancy is not None
+                and self.window.occupancy < comp.occupancy):
+            counts = self.window.n_classes
+            widest = max(int(counts.max()), 1)
+            target = max(int(np.ceil(comp.headroom * widest)), widest)
+            report_map = self.window.compact(n_max=target)
+        report = self.engine._solve_window(self.window)
+        report.slot_map = report_map
+        self.flushes += 1
+        return report
+
+    def stream(self, events: Iterable[StreamEvent]
+               ) -> Iterator[WindowSolveReport]:
+        """Replay an event stream in policy-coalesced re-solve epochs.
+
+        The generator form of :meth:`apply`: events accumulate until the
+        flush policy triggers (count, dirty fraction, or an SLA-critical
+        event), then one coalesced flush yields its report.  A trailing
+        partial epoch is flushed after the stream ends, so consuming the
+        generator always leaves the window clean and solved.
+
+        Parameters
+        ----------
+        events : iterable of StreamEvent
+            The event stream, in application order.  May be a lazy
+            iterator — epochs form as events arrive.
+
+        Yields
+        ------
+        WindowSolveReport
+            One per flush, in stream order.
+        """
+        for ev in events:
+            report = self.apply(ev)
+            if report is not None:
+                yield report
+        if self._pending:
+            yield self.flush()
+
+    # ----------------------------------------------------- window geometry
+    def add_lane(self, scn: Optional[Scenario] = None, *,
+                 R: Optional[float] = None,
+                 rho_bar: Optional[float] = None) -> int:
+        """Append one lane (a new cluster / fleet joining the window).
+
+        Buffered events are drained first (lane geometry changes only at
+        flush boundaries); the new lane starts dirty/never-solved, so the
+        next solve iterates exactly it.
+
+        Parameters
+        ----------
+        scn : Scenario, optional
+            Initial classes of the new lane; ``None`` admits an empty lane.
+        R : float, optional
+            Lane capacity, required (with ``rho_bar``) when ``scn`` is None.
+        rho_bar : float, optional
+            Lane unit chip cost, required (with ``R``) when ``scn`` is None.
+
+        Returns
+        -------
+        int
+            The new lane's index.
+        """
+        self.drain()
+        return self.window.add_lane(scn, R=R, rho_bar=rho_bar)
+
+    def remove_lane(self, lane: int) -> None:
+        """Drop ``lane`` and shrink B by one (buffered events drain first).
+
+        Parameters
+        ----------
+        lane : int
+            Lane to remove; higher lanes shift down by one and clean lanes
+            stay frozen across the shrink.
+        """
+        self.drain()
+        self.window.remove_lane(lane)
+
+    def compact(self, *, n_max: Optional[int] = None) -> np.ndarray:
+        """Re-pack the window now (buffered events drain first).
+
+        Parameters
+        ----------
+        n_max : int, optional
+            Target padded width (default: minimal); see
+            ``AdmissionWindow.compact``.
+
+        Returns
+        -------
+        np.ndarray
+            (B, old_n_max) old-slot -> new-slot map (-1 where empty).
+        """
+        self.drain()
+        return self.window.compact(n_max=n_max)
+
+
+# --------------------------------------------------------------------------
+# Legacy plumbing (no DeprecationWarning: mechanism, not facade)
+# --------------------------------------------------------------------------
+
+
+def _legacy_solve_window(window: AdmissionWindow, *, eps_bar: float = 0.03,
+                         lam: float = 0.05, max_iters: int = 200,
+                         integer: bool = True, sweep_fn=None, mesh=None,
+                         cross_check: bool = False,
+                         cross_check_atol: float = 1e-6) -> WindowSolveReport:
+    """kwargs -> (config, policies) adapter used by the deprecated facades
+    and ``EventEpoch.flush`` so in-repo mechanism never routes through a
+    warning-emitting shim."""
+    eng = CapacityEngine(
+        SolverConfig(eps_bar=eps_bar, lam=lam, max_iters=max_iters,
+                     sweep_fn=sweep_fn, mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer),
+                 cross_check=CrossCheckPolicy(cross_check, cross_check_atol)))
+    return eng._solve_window(window)

@@ -37,11 +37,14 @@ engine (``game.solve_distributed_batch``) into that runtime system:
   re-packs sparse long-lived windows, remapping the stored equilibrium so
   frozen lanes stay frozen across the re-layout.
 
-The user-facing facades are :func:`repro.core.allocator.solve_streaming`
-(warm solve + Algorithm 4.2 rounding + optional centralized cross-check) and
-:func:`repro.core.allocator.solve_coalesced` (epoch-coalesced event stream);
-:func:`sample_event_trace` generates random-but-replayable event traces for
-tests and ``benchmarks/streaming_perf.py``.
+The user-facing layer is :class:`repro.core.engine.CapacityEngine` /
+:class:`repro.core.engine.WindowSession` (``open_window`` -> ``apply`` /
+``flush`` / ``stream``: warm solve + Algorithm 4.2 rounding + optional
+centralized cross-check, flush cadence and compaction as policies); the
+deprecated ``repro.core.allocator.solve_streaming`` / ``solve_coalesced``
+shims delegate there.  :func:`sample_event_trace` generates
+random-but-replayable event traces for tests and
+``benchmarks/streaming_perf.py``.
 """
 from __future__ import annotations
 
@@ -819,13 +822,19 @@ def grown_n_max(n_max: int, growth_factor: float) -> int:
 
 @dataclass(frozen=True)
 class FlushPolicy:
-    """When should an :class:`EventEpoch` stop accumulating and re-solve?
+    """When should a buffered event epoch stop accumulating and re-solve?
 
     The re-solve cadence is the operator's real control knob (see
     ``docs/OPERATIONS.md``): coalescing K events per solve amortizes the
     per-solve dispatch cost ~K-fold at the price of K events of equilibrium
-    staleness.  Triggers compose with OR; a policy with both triggers None
-    never auto-flushes (purely manual ``EventEpoch.flush`` calls).
+    staleness.  Count/fraction triggers compose with OR; a policy with both
+    None never auto-flushes (purely manual ``flush`` calls).  On top of
+    the bulk triggers, the *deadline-aware* triggers (see
+    :meth:`deadline`) force an immediate flush for SLA-critical events —
+    an :class:`~repro.core.types.SLAEdit` tightening a deadline, or an
+    arrival whose deadline is already nearly exhausted — so the game
+    re-equilibrates before a critical class waits out a whole epoch, while
+    bulk events keep coalescing.
 
     Attributes
     ----------
@@ -837,9 +846,92 @@ class FlushPolicy:
         buffered lanes, over B) reaches this value.  Past ~0.5 the
         frozen-lane saving of the warm start is mostly gone, so waiting
         longer buys staleness without saving work.
+    deadline_slack_s : float, optional
+        SLA-criticality threshold on ``E = C - D`` (< 0 when the deadline
+        is attainable): an arrival or deadline edit landing at
+        ``E >= -deadline_slack_s`` — within ``deadline_slack_s`` seconds
+        of an unattainable deadline — flushes immediately.  ``None``
+        (default) disables the trigger.
+    flush_on_sla_tightening : bool
+        Flush immediately on any :class:`~repro.core.types.SLAEdit` that
+        *tightens* a class's deadline (raises its ``E`` toward 0), however
+        much slack remains — the renegotiation the paper's runtime loop
+        reacts to fastest.
     """
     max_events: Optional[int] = 8
     max_dirty_fraction: Optional[float] = None
+    deadline_slack_s: Optional[float] = None
+    flush_on_sla_tightening: bool = False
+
+    @classmethod
+    def deadline(cls, slack_s: float, *, max_events: Optional[int] = 64,
+                 max_dirty_fraction: Optional[float] = None,
+                 tightening: bool = True) -> "FlushPolicy":
+        """Deadline-aware policy: SLA-critical events flush immediately.
+
+        ``Policies(flush=FlushPolicy.deadline(30.0))`` gives the paper's
+        runtime loop a two-speed cadence: bulk churn (arrivals with ample
+        slack, departures, capacity steps) coalesces up to ``max_events``
+        per re-solve, while a deadline-critical event — a class arriving
+        within ``slack_s`` seconds of infeasibility, or an SLA edit
+        tightening a deadline — re-equilibrates the game at once.
+
+        Parameters
+        ----------
+        slack_s : float
+            Criticality threshold [s] on ``E = C - D``: events with
+            ``E >= -slack_s`` are critical.
+        max_events : int, optional
+            Bulk coalescing bound (default 64 — deliberately loose; the
+            deadline triggers carry the latency guarantee).
+        max_dirty_fraction : float, optional
+            Optional bulk dirty-fraction trigger, as on the default policy.
+        tightening : bool, optional
+            Also flush on every deadline-tightening SLA edit (default
+            True).
+
+        Returns
+        -------
+        FlushPolicy
+            The configured policy.
+        """
+        return cls(max_events=max_events,
+                   max_dirty_fraction=max_dirty_fraction,
+                   deadline_slack_s=float(slack_s),
+                   flush_on_sla_tightening=tightening)
+
+    def is_critical(self, event: StreamEvent,
+                    window: "AdmissionWindow") -> bool:
+        """Does ``event`` demand an immediate flush (deadline triggers)?
+
+        Parameters
+        ----------
+        event : StreamEvent
+            The event being buffered.
+        window : AdmissionWindow
+            The live window — consulted for the edited class's current
+            ``E`` so *tightening* is judged against the last applied state
+            (an edit to a class that itself arrived earlier in the same
+            epoch is judged by the slack threshold only).
+
+        Returns
+        -------
+        bool
+            True when a deadline trigger fires; always False for policies
+            without deadline triggers configured.
+        """
+        slack = self.deadline_slack_s
+        if isinstance(event, ClassArrival):
+            return (slack is not None
+                    and float(event.params.get("E", -np.inf)) >= -slack)
+        if isinstance(event, SLAEdit) and "E" in event.updates:
+            new_E = float(event.updates["E"])
+            if slack is not None and new_E >= -slack:
+                return True
+            if self.flush_on_sla_tightening:
+                old = window._raw.get((event.lane, event.slot))
+                return old is not None and new_E > float(old["E"])
+        return False
 
     def should_flush(self, *, n_events: int, n_dirty: int,
                      batch_size: int) -> bool:
@@ -935,13 +1027,16 @@ class EventEpoch:
         Returns
         -------
         bool
-            True when the flush policy's triggers fire — the caller
-            decides to :meth:`flush` (``allocator.solve_coalesced`` does).
+            True when the flush policy's triggers fire — including an
+            SLA-critical event under a deadline-aware policy — and the
+            caller should :meth:`flush` (``WindowSession.stream`` does).
         """
         self._events.append(event)
-        return self.policy.should_flush(
-            n_events=len(self._events), n_dirty=len(self.dirty_lanes),
-            batch_size=self.window.batch_size)
+        return (self.policy.is_critical(event, self.window)
+                or self.policy.should_flush(
+                    n_events=len(self._events),
+                    n_dirty=len(self.dirty_lanes),
+                    batch_size=self.window.batch_size))
 
     def flush(self, **solve_kwargs):
         """Apply the buffered events and re-solve the window once.
@@ -949,20 +1044,21 @@ class EventEpoch:
         Parameters
         ----------
         **solve_kwargs
-            Forwarded to :func:`repro.core.allocator.solve_streaming`
-            (``mesh=``, ``integer=``, solver knobs, ...).
+            Legacy solver kwargs (``mesh=``, ``integer=``, solver knobs,
+            ...) mapped onto a config/policy pair by
+            ``engine._legacy_solve_window``.
 
         Returns
         -------
-        repro.core.allocator.StreamingResult
+        repro.core.engine.WindowSolveReport
             The coalesced re-solve (an empty flush with a clean window is
             legal and nearly free: every lane freezes).
         """
-        from repro.core.allocator import solve_streaming
+        from repro.core.engine import _legacy_solve_window
         self.last_slots = self.window.apply_epoch(self._events)
         self.events_folded += len(self._events)
         self._events = []
-        res = solve_streaming(self.window, **solve_kwargs)
+        res = _legacy_solve_window(self.window, **solve_kwargs)
         self.flushes += 1
         return res
 

@@ -26,6 +26,8 @@ def make_sweep_fn(force_pallas=False):
     # repeated solves on the compiled program instead of retracing.
     def fn(inc, spare, p_sorted):
         return sweep(inc, spare, p_sorted, force_pallas=force_pallas)
+    # distinct per config: SolverConfig.fingerprint() records this name
+    fn.__name__ = f"gnep_sweep(force_pallas={force_pallas})"
     return fn
 
 
@@ -48,4 +50,6 @@ def make_batched_sweep_fn(force_pallas=False):
     # one function object or the whole batched solver recompiles.
     def fn(inc, spare, p_sorted):
         return sweep_batched(inc, spare, p_sorted, force_pallas=force_pallas)
+    # distinct per config: SolverConfig.fingerprint() records this name
+    fn.__name__ = f"gnep_sweep_batched(force_pallas={force_pallas})"
     return fn

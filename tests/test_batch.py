@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (sample_scenario, solve_batch, solve_distributed,
+from repro.core import (CapacityEngine, Policies, RoundingPolicy,
+                        SolverConfig, sample_scenario, solve_distributed,
                         solve_distributed_batch, stack_scenarios)
 from repro.core.game import _rm_candidates, _rm_pick, rm_solve
 from repro.core.types import pad_scenario
@@ -16,6 +17,15 @@ from repro.kernels.gnep_sweep.ref import reference_batched
 
 # 10 instances, ragged class counts (several n_i < n_max = 31)
 RAGGED_NS = [5, 17, 17, 9, 31, 3, 17, 12, 26, 7]
+
+
+def solve_batch(batch, *, mesh=None, integer=True, check_feasible=True):
+    """Engine-path stand-in for the retired allocator.solve_batch facade
+    (the shim itself is covered by tests/test_engine.py)."""
+    return CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer))).solve(
+            batch, check_feasible=check_feasible)
 
 
 def make_batch(ns=RAGGED_NS, cf=0.95, seed0=0):

@@ -73,6 +73,26 @@ def test_gate_fails_engine_path_mismatch(tmp_path, monkeypatch):
     assert run_gate(again, base, fresh, monkeypatch) == 0
 
 
+def test_gate_fails_solver_config_mismatch(tmp_path, monkeypatch):
+    """The SolverConfig fingerprint is config: engine-path numbers must
+    never be compared against records measured under a different solver
+    config — or against pre-redesign records that carry no fingerprint."""
+    fp = "eps_bar=0.03|lam=0.05|max_iters=200|dtype=native|sweep=reference" \
+         "|mesh=none"
+    base = record(speedup=10.0)
+    fresh = record(speedup=10.0)
+    fresh["solver_config"] = fp                 # baseline pre-dates the field
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+    base["solver_config"] = fp.replace("0.03", "0.05")   # different knobs
+    other = tmp_path / "different-knobs"
+    other.mkdir()
+    assert run_gate(other, base, fresh, monkeypatch) == 1
+    base["solver_config"] = fp
+    both = tmp_path / "matching-config"
+    both.mkdir()
+    assert run_gate(both, base, fresh, monkeypatch) == 0
+
+
 def test_gate_fails_missing_section_or_file(tmp_path, monkeypatch):
     base = record(speedup=10.0)
     fresh = record(speedup=10.0)
@@ -108,6 +128,7 @@ def test_committed_baselines_parse():
     for f in files:
         rec = json.loads(f.read_text())
         assert rec["device_count"] == 8 and rec["smoke"] is True
+        assert "solver_config" in rec           # engine-era provenance
         gated = [m for sec in rec["results"].values()
                  for m in sec if m in check_bench.GATED]
         assert gated, f"{f.name} has no gated metrics"

@@ -5,24 +5,46 @@ Core guarantees under test:
 * ``AdmissionWindow.apply_epoch`` is bit-identical to applying the same
   events one by one with ``apply`` (slot grants, mask, every Scenario leaf,
   raw-parameter book-keeping), and is atomic under invalid events;
-* a coalesced replay (``allocator.solve_coalesced``) lands on the per-event
+* a coalesced replay (``WindowSession.stream``) lands on the per-event
   equilibria at every flush boundary — including across window growth, lane
   add/remove, compaction and under a device mesh (<= 1e-6, matching the
   PR 2 convention; checked against a cold ``solve_distributed_batch`` of
   the same window, the ground truth both paths must agree with);
 * ``compact()`` remaps stored equilibria and warm starts so clean lanes
   stay *frozen* (zero iterations) through the re-layout;
-* ``FlushPolicy`` triggers on event count and dirty-lane fraction.
+* ``FlushPolicy`` triggers on event count, dirty-lane fraction, and —
+  deadline-aware (``FlushPolicy.deadline``) — on SLA-critical events.
 """
 import jax
 import numpy as np
 import pytest
 
-from repro.core import (AdmissionWindow, ClassArrival, ClassDeparture,
-                        EventEpoch, FlushPolicy, SLAEdit, lane_mesh, replay,
-                        sample_class_params, sample_event_trace,
-                        sample_scenario, solve_coalesced,
-                        solve_distributed_batch, solve_streaming)
+from repro.core import (AdmissionWindow, CapacityEngine, ClassArrival,
+                        ClassDeparture, CrossCheckPolicy, EventEpoch,
+                        FlushPolicy, Policies, RoundingPolicy, SLAEdit,
+                        SolverConfig, lane_mesh, replay, sample_class_params,
+                        sample_event_trace, sample_scenario,
+                        solve_distributed_batch)
+
+
+def solve_streaming(window, *, integer=True, mesh=None, cross_check=False):
+    """Engine-path stand-in for the retired allocator.solve_streaming facade
+    (shims themselves are covered by tests/test_engine.py)."""
+    return CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer),
+                 cross_check=CrossCheckPolicy(cross_check))
+    ).open_window(window).solve()
+
+
+def solve_coalesced(window, events, *, policy=None, integer=True, mesh=None):
+    """Engine-path stand-in for the retired allocator.solve_coalesced
+    facade: a ``WindowSession.stream`` generator."""
+    eng = CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(flush=policy if policy is not None else FlushPolicy(),
+                 rounding=RoundingPolicy(integer)))
+    return eng.open_window(window).stream(events)
 
 D = jax.device_count()
 needs_devices = pytest.mark.skipif(
@@ -164,6 +186,93 @@ def test_dirty_fraction_policy_flushes_early():
     assert epoch.add(ClassDeparture(lane=0, slot=0)) is False   # 1/4 dirty
     assert epoch.add(ClassDeparture(lane=0, slot=1)) is False   # still 1/4
     assert epoch.add(ClassDeparture(lane=3, slot=0)) is True    # 2/4 dirty
+
+
+# --------------------------------------------------------------------------
+# Deadline-aware FlushPolicy (SLA-critical events jump the coalescing queue)
+# --------------------------------------------------------------------------
+
+def hot_params(seed, E=-150.0):
+    p = sample_class_params(jax.random.PRNGKey(seed))
+    p["E"] = E
+    return p
+
+
+def test_deadline_policy_criticality_rules():
+    window = make_window()
+    pol = FlushPolicy.deadline(300.0, max_events=16)
+    assert pol.deadline_slack_s == 300.0 and pol.flush_on_sla_tightening
+    assert pol.max_events == 16
+    # arrivals: critical iff the deadline is nearly exhausted
+    assert pol.is_critical(
+        ClassArrival(lane=0, params=hot_params(0)), window)
+    assert not pol.is_critical(
+        ClassArrival(lane=0, params=hot_params(1, E=-2000.0)), window)
+    # SLA edits: tightening (E toward 0) is critical, relaxing is not,
+    # non-deadline edits never are
+    slot = window.occupied(1)[0]
+    old_E = window._raw[(1, slot)]["E"]
+    assert pol.is_critical(
+        SLAEdit(lane=1, slot=slot, updates={"E": old_E + 50.0}), window)
+    assert not pol.is_critical(
+        SLAEdit(lane=1, slot=slot, updates={"E": old_E - 50.0}), window)
+    assert not pol.is_critical(
+        SLAEdit(lane=1, slot=slot, updates={"m": 12345.0}), window)
+    # bulk kinds are never critical; plain policies have no deadline trigger
+    assert not pol.is_critical(ClassDeparture(lane=1, slot=slot), window)
+    assert not FlushPolicy().is_critical(
+        ClassArrival(lane=0, params=hot_params(2)), window)
+    # tightening=False keeps only the slack trigger
+    lax = FlushPolicy.deadline(300.0, tightening=False)
+    assert not lax.is_critical(
+        SLAEdit(lane=1, slot=slot, updates={"E": old_E + 50.0}), window)
+    assert lax.is_critical(
+        SLAEdit(lane=1, slot=slot, updates={"E": -100.0}), window)
+    # EventEpoch.add reports the critical flush demand
+    epoch = EventEpoch(window, policy=pol)
+    assert epoch.add(ClassArrival(lane=0, params=hot_params(3))) is True
+
+
+def test_deadline_policy_session_flushes_critical_immediately():
+    """Bulk events coalesce under the loose count bound; an SLA-critical
+    event forces the flush at once, folding the buffered bulk events in."""
+    eng = CapacityEngine(policies=Policies(
+        flush=FlushPolicy.deadline(300.0, max_events=64),
+        rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window())
+    sess.solve()
+    assert sess.apply(ClassArrival(
+        lane=0, params=hot_params(10, E=-2000.0))) is None   # bulk: buffers
+    assert sess.apply(ClassDeparture(
+        lane=2, slot=sess.window.occupied(2)[0])) is None
+    rep = sess.apply(ClassArrival(lane=1, params=hot_params(11)))
+    assert rep is not None and not sess.pending
+    np.testing.assert_array_equal(np.flatnonzero(rep.resolved), [0, 1, 2])
+    assert_equiv_cold(sess.window, rep)
+
+
+def test_solve_coalesced_deadline_policy_flush_boundaries():
+    """A critical event mid-trace splits the epochs early; every flush still
+    equals the cold solve of the window at that boundary."""
+    window = make_window(n_max=9)
+    solve_streaming(window, integer=False)
+    slot = window.occupied(0)[0]
+    tighten = SLAEdit(lane=0, slot=slot,
+                      updates={"E": window._raw[(0, slot)]["E"] + 25.0})
+    events = [
+        ClassArrival(lane=2, params=hot_params(20, E=-1500.0)),
+        ClassArrival(lane=3, params=hot_params(21, E=-1800.0)),
+        tighten,                                 # critical -> flush of 3
+        ClassArrival(lane=1, params=hot_params(22, E=-1600.0)),
+    ]
+    reports = list(solve_coalesced(
+        window, events, policy=FlushPolicy.deadline(300.0, max_events=10),
+        integer=False))
+    assert len(reports) == 2                     # critical flush + trailing
+    np.testing.assert_array_equal(np.flatnonzero(reports[0].resolved),
+                                  [0, 2, 3])
+    np.testing.assert_array_equal(np.flatnonzero(reports[1].resolved), [1])
+    assert_equiv_cold(window, reports[-1])
 
 
 # --------------------------------------------------------------------------

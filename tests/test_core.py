@@ -41,8 +41,8 @@ except ModuleNotFoundError:
             return wrapper
         return deco
 
-from repro.core import (InfeasibleError, deadline_lhs, sample_scenario, solve,
-                        solve_centralized, solve_distributed,
+from repro.core import (CapacityEngine, InfeasibleError, deadline_lhs,
+                        sample_scenario, solve_centralized, solve_distributed,
                         solve_distributed_python)
 from repro.core.centralized import kkt_residual, objective_of_r
 from repro.core.game import rm_solve
@@ -148,7 +148,7 @@ def test_deadline_monotone():
 def test_infeasible_raises():
     scn = scn_of(1, 17, cf=0.5)   # below sum(r_low) ~ 0.8 * sum(r_up)
     with pytest.raises(InfeasibleError):
-        solve(scn, "centralized")
+        CapacityEngine().solve(scn, method="centralized")
 
 
 # --------------------------------------------------------------------------
@@ -280,7 +280,7 @@ def test_integer_close_to_fractional():
     gaps = {}
     for n in (64, 512):
         scn = scn_of(4, n, 0.95)
-        res = solve(scn, "centralized")
+        res = CapacityEngine().solve(scn, method="centralized")
         frac, integ = float(res.fractional.total), float(res.integer.total)
         gaps[n] = abs(integ - frac) / abs(frac)
     assert gaps[64] < 0.15

@@ -1,0 +1,398 @@
+"""Engine redesign tests: legacy-shim bit-equivalence, input coercion, the
+config fingerprint and the WindowSession verb set.
+
+Every historical ``allocator.solve_*`` call-site pattern (method variants,
+``Sequence[Scenario]`` vs ``ScenarioBatch``, ``mesh=``, ``sweep_fn=``, warm
+starts, ``cross_check=``, coalesced replays) is asserted BIT-EQUAL against
+the corresponding ``CapacityEngine`` call, and every shim must emit the
+``repro.core.allocator`` DeprecationWarning that pytest.ini promotes to an
+error for any other in-repo caller.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionWindow, BatchSolveReport, CapacityEngine,
+                        ClassArrival, ClassDeparture, CompactionPolicy,
+                        CrossCheckPolicy,
+                        FlushPolicy, InfeasibleError, Policies,
+                        RoundingPolicy, Scenario, ScenarioBatch, SolveReport,
+                        SolverConfig, WindowSolveReport, lane_mesh,
+                        sample_class_params, sample_event_trace,
+                        sample_scenario, stack_scenarios)
+from repro.core import allocator
+from repro.core.engine import _coerce
+from repro.kernels.gnep_sweep.ref import reference_batched
+
+D = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    D < 2, reason="needs >= 2 devices (conftest forces 8 on CPU)")
+
+SHIM_WARNING = pytest.warns(DeprecationWarning,
+                            match=r"^repro\.core\.allocator\.")
+
+
+def scenarios(ns=(5, 8, 3, 6), cf=1.1, seed0=0):
+    return [sample_scenario(jax.random.PRNGKey(seed0 + i), n,
+                            capacity_factor=cf)
+            for i, n in enumerate(ns)]
+
+
+def make_window(ns=(5, 8, 3, 6), cf=1.2, n_max=None, seed0=0):
+    return AdmissionWindow(scenarios(ns, cf, seed0), n_max=n_max)
+
+
+def assert_reports_bitequal(a, b):
+    """Every numeric leaf of two reports is bit-identical."""
+    for part in ("fractional", "integer"):
+        pa, pb = getattr(a, part), getattr(b, part)
+        assert (pa is None) == (pb is None)
+        if pa is not None:
+            ja, jb = jax.tree_util.tree_flatten(pa)[0], \
+                jax.tree_util.tree_flatten(pb)[0]
+            for la, lb in zip(ja, jb):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(a.iters), np.asarray(b.iters))
+    for field in ("feasible", "resolved", "centralized_gap"):
+        fa, fb = getattr(a, field, None), getattr(b, field, None)
+        assert (fa is None) == (fb is None)
+        if fa is not None:
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# --------------------------------------------------------------------------
+# Legacy shims: bit-equal to the engine, and they warn
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["distributed", "centralized",
+                                    "distributed-python"])
+def test_shim_solve_bitequal(method):
+    scn = scenarios(ns=(9,), cf=0.95)[0]
+    eng = CapacityEngine(SolverConfig(eps_bar=0.05, max_iters=100))
+    want = eng.solve(scn, method=method)
+    with SHIM_WARNING:
+        got = allocator.solve(scn, method, eps_bar=0.05, max_iters=100)
+    assert_reports_bitequal(got, want)
+    assert got.method == want.method == method
+
+
+def test_shim_solve_infeasible_and_no_rounding():
+    bad = scenarios(ns=(8,), cf=0.5)[0]
+    with SHIM_WARNING, pytest.raises(InfeasibleError):
+        allocator.solve(bad, "centralized")
+    good = scenarios(ns=(7,), cf=0.95)[0]
+    want = CapacityEngine(
+        policies=Policies(rounding=RoundingPolicy(False))).solve(good)
+    with SHIM_WARNING:
+        got = allocator.solve(good, integer=False)
+    assert got.integer is None and want.integer is None
+    assert_reports_bitequal(got, want)
+
+
+@pytest.mark.parametrize("as_list", [True, False])
+def test_shim_solve_batch_bitequal(as_list):
+    scns = scenarios(ns=(5, 17, 9, 12))
+    batch = scns if as_list else stack_scenarios(scns)
+    want = CapacityEngine().solve(batch)
+    with SHIM_WARNING:
+        got = allocator.solve_batch(batch)
+    assert_reports_bitequal(got, want)
+    np.testing.assert_array_equal(np.asarray(got.mask), np.asarray(want.mask))
+
+
+def test_shim_solve_batch_check_feasible_and_knobs():
+    good, bad = scenarios(ns=(8, 8), cf=0.95)[0], \
+        scenarios(ns=(8,), cf=0.5, seed0=1)[0]
+    with SHIM_WARNING, pytest.raises(InfeasibleError, match=r"\[1\]"):
+        allocator.solve_batch([good, bad])
+    eng = CapacityEngine(SolverConfig(eps_bar=0.06, lam=0.04, max_iters=50),
+                         Policies(rounding=RoundingPolicy(False)))
+    want = eng.solve([good, bad], check_feasible=False)
+    with SHIM_WARNING:
+        got = allocator.solve_batch([good, bad], eps_bar=0.06, lam=0.04,
+                                    max_iters=50, integer=False,
+                                    check_feasible=False)
+    assert_reports_bitequal(got, want)
+    assert not bool(got.feasible[1])
+
+
+def test_shim_solve_batch_sweep_fn_bitequal():
+    def sweep(inc, spare, p_sorted):
+        return reference_batched(inc, spare, p_sorted)
+
+    scns = scenarios(ns=(5, 9, 7))
+    want = CapacityEngine(SolverConfig(sweep_fn=sweep)).solve(scns)
+    with SHIM_WARNING:
+        got = allocator.solve_batch(scns, sweep_fn=sweep)
+    assert_reports_bitequal(got, want)
+
+
+@needs_devices
+def test_shim_solve_batch_mesh_bitequal():
+    mesh = lane_mesh()
+    scns = scenarios(ns=(5, 17, 9, 12, 3))     # not divisible by the devices
+    want = CapacityEngine(SolverConfig(mesh=mesh)).solve(scns)
+    with SHIM_WARNING:
+        got = allocator.solve_batch(scns, mesh=mesh)
+    assert_reports_bitequal(got, want)
+
+
+@needs_devices
+def test_shim_solve_streaming_bitequal_warm_cross_check_mesh():
+    """The full streaming pattern: cold solve, events, warm re-solve with
+    cross_check and a mesh — shim and session bit-equal at every step."""
+    mesh = lane_mesh()
+    w_shim, w_eng = make_window(), make_window()
+    eng = CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(rounding=RoundingPolicy(False),
+                 cross_check=CrossCheckPolicy(True)))
+    sess = eng.open_window(w_eng)
+    with SHIM_WARNING:
+        got = allocator.solve_streaming(w_shim, integer=False, mesh=mesh,
+                                        cross_check=True)
+    assert_reports_bitequal(got, sess.solve())
+
+    params = sample_class_params(jax.random.PRNGKey(3))
+    w_shim.arrive(1, **params)
+    w_eng.arrive(1, **params)
+    with SHIM_WARNING:
+        got = allocator.solve_streaming(w_shim, integer=False, mesh=mesh,
+                                        cross_check=True)
+    want = sess.solve()
+    assert_reports_bitequal(got, want)
+    np.testing.assert_array_equal(got.resolved,
+                                  [False, True, False, False])
+
+
+def test_shim_solve_coalesced_bitequal():
+    w_shim, w_eng = make_window(n_max=9), make_window(n_max=9)
+    trace = sample_event_trace(11, w_shim, 14)
+    eng = CapacityEngine(
+        policies=Policies(flush=FlushPolicy(max_events=5),
+                          rounding=RoundingPolicy(False)))
+    want_reports = list(eng.open_window(w_eng).stream(trace))
+    with SHIM_WARNING:
+        got_gen = allocator.solve_coalesced(
+            w_shim, trace, policy=FlushPolicy(max_events=5), integer=False)
+        got_reports = list(got_gen)
+    assert len(got_reports) == len(want_reports) == 3   # 5 + 5 + trailing 4
+    for got, want in zip(got_reports, want_reports):
+        assert_reports_bitequal(got, want)
+
+
+def test_legacy_result_types_are_report_aliases():
+    assert allocator.AllocationResult is SolveReport
+    assert allocator.BatchAllocationResult is BatchSolveReport
+    assert allocator.StreamingResult is WindowSolveReport
+
+
+# --------------------------------------------------------------------------
+# Input coercion (_coerce): one helper, every entry point
+# --------------------------------------------------------------------------
+
+def test_engine_solve_accepts_all_input_forms():
+    scns = scenarios(ns=(4, 6, 3))
+    eng = CapacityEngine()
+    from_list = eng.solve(scns)
+    from_batch = eng.solve(stack_scenarios(scns))
+    assert_reports_bitequal(from_list, from_batch)
+    from_window = eng.solve(AdmissionWindow(scns))
+    assert_reports_bitequal(from_list, from_window)
+    single = eng.solve(scns[0])                  # single-instance pipeline
+    assert isinstance(single, SolveReport)
+    assert not isinstance(single, BatchSolveReport)
+    np.testing.assert_allclose(np.asarray(single.fractional.r),
+                               np.asarray(from_list.instance(0).fractional.r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_coerce_rejects_garbage_and_mixed_sequences():
+    eng = CapacityEngine()
+    with pytest.raises(TypeError, match="cannot coerce"):
+        eng.solve(42)
+    with pytest.raises(TypeError, match="Scenario instances only"):
+        eng.solve([scenarios(ns=(4,))[0], "nope"])
+    with pytest.raises(TypeError, match="cannot coerce"):
+        _coerce("a string is not a batch")
+
+
+def test_open_window_accepts_all_lane_forms():
+    """The legacy drift — streaming paths rejecting Sequence[Scenario] — is
+    gone: list, ScenarioBatch and AdmissionWindow all open sessions, and
+    the solves agree bit-exactly."""
+    scns = scenarios(ns=(4, 6, 3))
+    eng = CapacityEngine(policies=Policies(rounding=RoundingPolicy(False)))
+    res_list = eng.open_window(scns, n_max=8).solve()
+    res_batch = eng.open_window(stack_scenarios(scns, n_max=8)).solve()
+    res_window = eng.open_window(AdmissionWindow(scns, n_max=8)).solve()
+    assert_reports_bitequal(res_list, res_batch)
+    assert_reports_bitequal(res_list, res_window)
+
+
+def test_config_dtype_coerces_leaves():
+    scns = scenarios(ns=(4, 5))
+    eng = CapacityEngine(SolverConfig(dtype=jnp.float32),
+                         Policies(rounding=RoundingPolicy(False)))
+    res = eng.solve(scns)
+    assert res.fractional.r.dtype == jnp.float32
+    single = eng.solve(scns[0])
+    assert single.fractional.r.dtype == jnp.float32
+
+
+def test_sweep_fn_reaches_streaming_path():
+    """Regression for the kwargs drift: a configured sweep kernel must be
+    traced into the warm streaming solve, not silently dropped."""
+    calls = {"n": 0}
+
+    def counting_sweep(inc, spare, p_sorted):
+        calls["n"] += 1
+        return reference_batched(inc, spare, p_sorted)
+
+    eng = CapacityEngine(SolverConfig(sweep_fn=counting_sweep),
+                         Policies(rounding=RoundingPolicy(False)))
+    sess = eng.open_window(scenarios(ns=(4, 6)))
+    res = sess.solve()
+    assert calls["n"] >= 1                       # traced into the program
+    ref = CapacityEngine(
+        policies=Policies(rounding=RoundingPolicy(False))).open_window(
+            scenarios(ns=(4, 6))).solve()
+    np.testing.assert_allclose(np.asarray(res.fractional.r),
+                               np.asarray(ref.fractional.r),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# SolverConfig: hashable, fingerprinted
+# --------------------------------------------------------------------------
+
+def test_solver_config_fingerprint_stable_and_distinct():
+    a, b = SolverConfig(), SolverConfig()
+    assert a == b and hash(a) == hash(b)
+    assert a.fingerprint() == b.fingerprint()
+    assert "eps_bar=0.03" in a.fingerprint()
+    assert SolverConfig(eps_bar=0.05).fingerprint() != a.fingerprint()
+    assert SolverConfig(dtype=jnp.float32).fingerprint() != a.fingerprint()
+
+    def my_sweep(inc, spare, p):                # named kernels fingerprint
+        return reference_batched(inc, spare, p)
+
+    assert "sweep=my_sweep" in SolverConfig(sweep_fn=my_sweep).fingerprint()
+
+
+@needs_devices
+def test_solver_config_fingerprint_names_mesh():
+    fp = SolverConfig(mesh=lane_mesh(2)).fingerprint()
+    assert "mesh=2:lanes" in fp
+
+
+# --------------------------------------------------------------------------
+# Reports
+# --------------------------------------------------------------------------
+
+def test_report_carries_config_timing_convergence():
+    scns = scenarios(ns=(5, 7))
+    cfg = SolverConfig(max_iters=100)
+    res = CapacityEngine(cfg).solve(scns)
+    assert res.config is cfg
+    assert res.elapsed_s >= 0.0
+    assert np.asarray(res.converged).all()       # well under the cap
+    inst = res.instance(1)
+    assert inst.config is cfg and inst.iters == int(res.iters[1])
+    # a capped solve reports non-convergence
+    capped = CapacityEngine(SolverConfig(max_iters=1),
+                            Policies(rounding=RoundingPolicy(False))
+                            ).solve(scns, check_feasible=False)
+    assert not np.asarray(capped.converged).any()
+
+
+# --------------------------------------------------------------------------
+# WindowSession verbs
+# --------------------------------------------------------------------------
+
+def test_session_apply_auto_flushes_on_count():
+    eng = CapacityEngine(
+        policies=Policies(flush=FlushPolicy(max_events=2),
+                          rounding=RoundingPolicy(False)))
+    sess = eng.open_window(scenarios())
+    sess.solve()
+    ev = lambda i: ClassArrival(
+        lane=i % 2, params=sample_class_params(jax.random.PRNGKey(i)))
+    assert sess.apply(ev(0)) is None and len(sess.pending) == 1
+    rep = sess.apply(ev(1))                      # count trigger fires
+    assert isinstance(rep, WindowSolveReport) and not sess.pending
+    assert sess.flushes == 1 and sess.events_folded == 2
+    assert sorted(np.flatnonzero(rep.resolved)) == [0, 1]
+    # one apply call carrying enough events for two flushes returns the last
+    rep2 = sess.apply(ev(2), ev(3), ev(4), ev(5))
+    assert sess.flushes == 3 and len(sess.pending) == 0
+    assert isinstance(rep2, WindowSolveReport)
+
+
+def test_session_stream_equals_manual_replay():
+    w_a, w_b = make_window(n_max=9), make_window(n_max=9)
+    trace = sample_event_trace(21, w_a, 12)
+    pol = Policies(flush=FlushPolicy(max_events=4),
+                   rounding=RoundingPolicy(False))
+    reports = list(CapacityEngine(policies=pol).open_window(w_a)
+                   .stream(trace))
+    assert len(reports) == 3
+    sess_b = CapacityEngine(policies=pol).open_window(w_b)
+    manual = []
+    for ev in trace:
+        rep = sess_b.apply(ev)
+        if rep is not None:
+            manual.append(rep)
+    if sess_b.pending:
+        manual.append(sess_b.flush())
+    assert len(manual) == len(reports)
+    for got, want in zip(manual, reports):
+        assert_reports_bitequal(got, want)
+
+
+def test_session_compaction_policy_repacks_and_reports_slot_map():
+    """Churn below the occupancy threshold auto-compacts at the flush
+    boundary; the report's slot_map records the re-layout and clean lanes
+    stay frozen (bit-equal equilibria through the permutation)."""
+    eng = CapacityEngine(policies=Policies(
+        flush=FlushPolicy(max_events=None),      # manual flushes
+        compaction=CompactionPolicy(occupancy=0.5),
+        rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(6, 7, 5, 6), n_max=12))
+    pre = sess.solve()
+    window = sess.window
+    pre_occ = [window.occupied(b) for b in range(4)]
+    for b in range(4):                           # depart all but 2 per lane
+        for slot in window.occupied(b)[2:]:
+            sess.apply(ClassDeparture(lane=b, slot=slot))
+    rep = sess.flush()
+    assert rep.slot_map is not None and window.n_max == 2
+    for b in range(4):
+        kept = [s for s in pre_occ[b] if rep.slot_map[b, s] >= 0]
+        np.testing.assert_array_equal(
+            np.asarray(rep.fractional.r[b]),
+            np.asarray(pre.fractional.r[b])[kept])
+    # next flush without churn: no compaction, no slot map
+    assert sess.flush().slot_map is None
+
+
+def test_session_geometry_verbs_drain_first():
+    eng = CapacityEngine(
+        policies=Policies(flush=FlushPolicy(max_events=None),
+                          rounding=RoundingPolicy(False)))
+    sess = eng.open_window(scenarios(ns=(4, 5)))
+    sess.solve()
+    sess.apply(ClassArrival(
+        lane=0, params=sample_class_params(jax.random.PRNGKey(1))))
+    b = sess.add_lane(R=300.0, rho_bar=2.0)      # drains the pending arrival
+    assert not sess.pending and sess.last_slots == [4]
+    assert b == 2 and sess.window.batch_size == 3
+    res = sess.flush()
+    np.testing.assert_array_equal(res.resolved, [True, False, True])
+    sess.remove_lane(b)
+    assert sess.window.batch_size == 2
+    slot_map = sess.compact()
+    assert slot_map.shape[0] == 2

@@ -12,12 +12,27 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (AdmissionWindow, lane_mesh, pad_batch_lanes,
-                        pad_warm_start, padded_lane_count,
+from repro.core import (AdmissionWindow, CapacityEngine, Policies,
+                        RoundingPolicy, SolverConfig, lane_mesh,
+                        pad_batch_lanes, pad_warm_start, padded_lane_count,
                         sample_class_params, sample_event_trace,
-                        sample_scenario, solve_batch, solve_distributed_batch,
-                        solve_streaming, stack_scenarios)
+                        sample_scenario, solve_distributed_batch,
+                        stack_scenarios)
 from repro.core.game import cold_start
+
+
+def solve_batch(batch, *, mesh=None):
+    """Engine-path stand-in for the retired allocator.solve_batch facade."""
+    return CapacityEngine(SolverConfig(mesh=mesh)).solve(batch)
+
+
+def solve_streaming(window, *, integer=True, mesh=None):
+    """Engine-path stand-in for the retired allocator.solve_streaming
+    facade (shims themselves are covered by tests/test_engine.py)."""
+    return CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer))
+    ).open_window(window).solve()
 
 D = jax.device_count()
 needs_devices = pytest.mark.skipif(
@@ -144,7 +159,8 @@ def test_sharded_divisible_lane_count():
 
 @needs_devices
 def test_solve_batch_facade_with_mesh():
-    """allocator.solve_batch(mesh=...): identical integer allocations."""
+    """Engine batch solve with SolverConfig(mesh=...): identical integer
+    allocations to the unsharded engine path."""
     scns, batch = make_batch(ns=[5, 17, 9, 12, 3])
     ref = solve_batch(batch)
     res = solve_batch(batch, mesh=lane_mesh())

@@ -11,11 +11,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (AdmissionWindow, CapacityChange, ClassArrival,
-                        ClassDeparture, SLAEdit, sample_class_params,
-                        sample_event_trace, sample_scenario,
-                        solve_centralized, solve_centralized_batch,
-                        solve_distributed_batch, solve_streaming, replay)
+from repro.core import (AdmissionWindow, CapacityChange, CapacityEngine,
+                        ClassArrival, ClassDeparture, CrossCheckPolicy,
+                        Policies, RoundingPolicy, SLAEdit, SolverConfig,
+                        sample_class_params, sample_event_trace,
+                        sample_scenario, solve_centralized,
+                        solve_centralized_batch, solve_distributed_batch,
+                        replay)
+
+
+def solve_streaming(window, *, integer=True, mesh=None, cross_check=False):
+    """Engine-path stand-in for the retired allocator.solve_streaming facade
+    (the shim itself is covered by tests/test_engine.py)."""
+    return CapacityEngine(
+        SolverConfig(mesh=mesh),
+        Policies(rounding=RoundingPolicy(integer),
+                 cross_check=CrossCheckPolicy(cross_check))
+    ).open_window(window).solve()
 
 
 def make_window(ns=(5, 8, 3, 6), cf=1.2, n_max=None, seed0=0):
