@@ -1,0 +1,156 @@
+"""Admission daemon (allocd) latency + sustained throughput benchmark.
+
+Drives the asyncio :class:`repro.serving.allocd.AllocDaemon` — many tenant
+``WindowSession``s over one shared ``CapacityEngine`` — under the two load
+regimes the Hadoop utilization literature reports:
+
+* **poisson** — open-loop Poisson arrivals at ``--rate`` events/s: the
+  steady diurnal-baseline regime.  Admission latency (scheduled arrival
+  time to covering-flush completion, so queueing delay is included) is
+  the headline metric.
+* **flash** — the same baseline with the middle 40% of events arriving
+  8x faster: the flash-crowd spike.  p99 admission latency under the
+  burst and the post-burst drain throughput are what the daemon's
+  deadline-aware, slack-ordered flush scheduling is for.
+
+Per arrival process the record carries ``admission_p50_ms`` /
+``admission_p99_ms`` (gated as *latency*: fresh must not exceed the
+baseline by more than the latency band) and ``events_per_sec`` (gated as
+throughput).  Every section carries an ``arrival`` tag in its config keys
+so Poisson and flash-crowd records are never silently compared.
+
+Before the timed run, every tenant's trace is replayed through an offline
+``WindowSession.stream`` — this both warms the jitted solver programs
+(the timed daemon run measures dispatch, not compile) and provides the
+bit-equality conformance oracle: the daemon's flush-boundary equilibria
+must match the offline replay exactly, or the run aborts.
+
+    PYTHONPATH=src python -m benchmarks.allocd_perf            # full
+    PYTHONPATH=src python -m benchmarks.allocd_perf --smoke    # CI
+"""
+import argparse
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
+                        Policies, RoundingPolicy, SolverConfig,
+                        sample_event_trace, sample_scenario)
+from repro.serving.allocd import (AllocDaemon, drive_open_loop,
+                                  flash_crowd_times, interleave_traces,
+                                  poisson_times)
+
+
+def make_engine(flush_k: int) -> CapacityEngine:
+    return CapacityEngine(
+        SolverConfig(),
+        Policies(flush=FlushPolicy(max_events=flush_k),
+                 rounding=RoundingPolicy(enabled=False)))
+
+
+def make_window(tenant: int, lanes: int, n: int, seed: int
+                ) -> AdmissionWindow:
+    key = jax.random.PRNGKey(seed)
+    scns = [sample_scenario(jax.random.fold_in(key, tenant * 97 + lane),
+                            n, capacity_factor=1.3)
+            for lane in range(lanes)]
+    return AdmissionWindow(scns, n_max=2 * n)
+
+
+def assert_conformant(name, got, want):
+    assert len(got) == len(want), \
+        f"{name}: {len(got)} daemon flushes vs {len(want)} offline"
+    for i, (a, b) in enumerate(zip(got, want)):
+        la = jax.tree_util.tree_flatten(a.fractional)[0]
+        lb = jax.tree_util.tree_flatten(b.fractional)[0]
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"{name}: flush {i} != offline replay")
+
+
+async def _drive(engine, traces, windows, times, queue_limit):
+    daemon = AllocDaemon(engine, queue_limit=queue_limit)
+    for name, window in windows.items():
+        daemon.add_tenant(name, window)
+    schedule = interleave_traces(traces, times)
+    await daemon.start()
+    await drive_open_loop(daemon, schedule)
+    await daemon.shutdown(drain=True)
+    return daemon
+
+
+def run_arrival(arrival: str, *, tenants: int, lanes: int, n: int,
+                n_events: int, rate: float, flush_k: int, seed: int,
+                queue_limit: int) -> dict:
+    engine = make_engine(flush_k)
+    traces = {f"tenant-{t}": sample_event_trace(
+        seed + 7919 * t, make_window(t, lanes, n, seed), n_events)
+        for t in range(tenants)}
+
+    # offline replays: compile warmup + the conformance oracle
+    offline = {}
+    for t in range(tenants):
+        name = f"tenant-{t}"
+        sess = engine.open_window(make_window(t, lanes, n, seed))
+        offline[name] = list(sess.stream(traces[name]))
+
+    total = tenants * n_events
+    times = (poisson_times(seed, total, rate) if arrival == "poisson"
+             else flash_crowd_times(seed, total, rate))
+    windows = {f"tenant-{t}": make_window(t, lanes, n, seed)
+               for t in range(tenants)}
+    daemon = asyncio.run(
+        _drive(engine, traces, windows, times, queue_limit))
+    assert daemon.rejected == 0, "sizing error: benchmark load was shed"
+    for name in traces:
+        assert_conformant(name, daemon.reports(name), offline[name])
+
+    rep = daemon.report()
+    return {"arrival": arrival, "tenants": tenants, "B": lanes, "n": n,
+            "n_events": n_events, "rate": rate, "flush_k": flush_k,
+            "queue_limit": queue_limit,
+            "events_per_sec": rep["events_per_sec"],
+            "admission_p50_ms": rep["admission_p50_ms"],
+            "admission_p99_ms": rep["admission_p99_ms"],
+            "flushes": rep["flushes"], "elapsed_s": rep["elapsed_s"]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = dict(tenants=3, lanes=4, n=4, n_events=18, rate=400.0,
+                   flush_k=4, seed=args.seed, queue_limit=4096)
+    else:
+        cfg = dict(tenants=8, lanes=8, n=8, n_events=48, rate=400.0,
+                   flush_k=8, seed=args.seed, queue_limit=4096)
+
+    results = {}
+    for arrival in ("poisson", "flash"):
+        t0 = time.perf_counter()
+        res = run_arrival(arrival, **cfg)
+        res["wall_s"] = time.perf_counter() - t0
+        results[arrival] = res
+        print(f"{arrival:8s} {res['tenants']}x{res['n_events']}ev "
+              f"B={res['B']} n={res['n']}: "
+              f"{res['events_per_sec']:8.1f} ev/s  "
+              f"p50 {res['admission_p50_ms']:7.1f} ms  "
+              f"p99 {res['admission_p99_ms']:7.1f} ms  "
+              f"({res['flushes']:.0f} flushes, conformant)")
+
+    if args.json:
+        write_bench_json(args.json, "allocd", results, smoke=args.smoke,
+                         solver_config=SolverConfig().fingerprint())
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,12 @@ fails when a gated metric drops below its tolerance band:
   ``fresh >= baseline * (1 - RATIO_TOL)``;
 * **throughput metrics** (``scenarios_per_sec``, ``events_per_sec``) vary
   wildly across machines, so they only catch order-of-magnitude
-  regressions — gated at ``fresh >= baseline * (1 - ABS_TOL)``.
+  regressions — gated at ``fresh >= baseline * (1 - ABS_TOL)``;
+* **latency metrics** (``admission_p50_ms``, ``admission_p99_ms`` from
+  ``BENCH_allocd.json``) gate in the OPPOSITE direction — lower is
+  better, so the bound is a ceiling: ``fresh <= baseline * (1 +
+  LAT_TOL)``, loose enough for CI-box jitter but failing on
+  order-of-magnitude admission-latency blowups.
 
 Config keys (B, n, devices, ...) of every gated section must match the
 baseline exactly — otherwise the comparison is meaningless and the gate
@@ -45,12 +50,18 @@ GATED = {
     "scaling": "ratio",
     "scenarios_per_sec": "throughput",
     "events_per_sec": "throughput",
+    "admission_p50_ms": "latency",
+    "admission_p99_ms": "latency",
 }
 #: config keys that must match between baseline and fresh for a section
 #: ("path" tags which engine path a section measured — per-event vs
-#: coalesced-epochs vs shard-coalesced events/sec are not comparable)
+#: coalesced-epochs vs shard-coalesced events/sec are not comparable;
+#: "arrival" tags the allocd arrival process — Poisson vs flash-crowd
+#: latency records are never comparable, nor are runs at different
+#: tenant counts, rates or queue bounds)
 CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
-               "ragged", "path")
+               "ragged", "path", "arrival", "tenants", "rate", "flush_k",
+               "queue_limit")
 
 
 def load(path: Path) -> dict:
@@ -73,15 +84,23 @@ def compare_section(name, base: dict, fresh: dict, tols: dict) -> list:
             errors.append(f"{name}.{metric}: missing from fresh results")
             continue
         tol = tols[klass]
-        floor = base[metric] * (1.0 - tol)
-        status = "ok" if fresh[metric] >= floor else "FAIL"
+        if klass == "latency":                   # lower is better: ceiling
+            bound = base[metric] * (1.0 + tol)
+            ok = fresh[metric] <= bound
+            kind = "ceil"
+        else:                                    # higher is better: floor
+            bound = base[metric] * (1.0 - tol)
+            ok = fresh[metric] >= bound
+            kind = "floor"
+        status = "ok" if ok else "FAIL"
         print(f"  {name}.{metric:<20} baseline={base[metric]:>10.2f} "
-              f"fresh={fresh[metric]:>10.2f} floor={floor:>10.2f} "
+              f"fresh={fresh[metric]:>10.2f} {kind}={bound:>10.2f} "
               f"[{klass}] {status}")
-        if status == "FAIL":
+        if not ok:
+            sign = ">" if klass == "latency" else "<"
             errors.append(
-                f"{name}.{metric}: {fresh[metric]:.2f} < floor "
-                f"{floor:.2f} (baseline {base[metric]:.2f}, -{tol:.0%})")
+                f"{name}.{metric}: {fresh[metric]:.2f} {sign} {kind} "
+                f"{bound:.2f} (baseline {base[metric]:.2f}, tol {tol:.0%})")
     return errors
 
 
@@ -100,8 +119,15 @@ def main() -> int:
                                                  0.8)),
                     help="allowed drop for absolute throughput "
                          "(looser still: machines differ)")
+    ap.add_argument("--latency-tol", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_LAT_TOL",
+                                                 4.0)),
+                    help="allowed INCREASE for latency percentiles "
+                         "(ceiling = baseline * (1 + tol); admission "
+                         "latency is wall-clock and CI boxes jitter)")
     args = ap.parse_args()
-    tols = {"ratio": args.ratio_tol, "throughput": args.throughput_tol}
+    tols = {"ratio": args.ratio_tol, "throughput": args.throughput_tol,
+            "latency": args.latency_tol}
 
     baselines = sorted(Path(args.baseline_dir).glob("BENCH_*.json"))
     if not baselines:

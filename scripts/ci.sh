@@ -48,5 +48,10 @@ echo "== streaming admission engine smoke (warm + coalesced + sharded) =="
 python -m benchmarks.streaming_perf --coalesce --shard --smoke \
     --json "${BENCH_DIR}/BENCH_streaming.json"
 
+echo "== admission daemon smoke (open-loop Poisson + flash-crowd) =="
+# the benchmark re-asserts daemon/offline trace conformance before timing
+python -m benchmarks.allocd_perf --smoke \
+    --json "${BENCH_DIR}/BENCH_allocd.json"
+
 echo "== benchmark regression gate (vs benchmarks/baselines/) =="
 python scripts/check_bench.py --fresh-dir "${BENCH_DIR}"

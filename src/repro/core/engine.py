@@ -38,9 +38,9 @@ another ``solve_*`` variant.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import (Any, Callable, Iterable, Iterator, List, Optional,
-                    Sequence, Set, Union)
+                    Sequence, Set, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +51,8 @@ from repro.core.centralized import solve_centralized
 from repro.core.rounding import (IntegerSolution, round_solution,
                                  round_solution_batch)
 from repro.core.streaming import AdmissionWindow, FlushPolicy
-from repro.core.types import (Scenario, ScenarioBatch, Solution, StreamEvent,
-                              stack_scenarios)
+from repro.core.types import (ClassArrival, Scenario, ScenarioBatch, SLAEdit,
+                              Solution, StreamEvent, stack_scenarios)
 
 
 class InfeasibleError(RuntimeError):
@@ -684,6 +684,7 @@ class WindowSession:
         self.flushes = 0
         self.events_folded = 0
         self.last_slots: List[Optional[int]] = []
+        self._last_report: Optional[WindowSolveReport] = None
 
     # ------------------------------------------------------------- queries
     @property
@@ -754,6 +755,64 @@ class WindowSession:
                                    n_dirty=n_dirty,
                                    batch_size=self.window.batch_size)
 
+    def offer(self, event: StreamEvent) -> bool:
+        """Buffer one event WITHOUT flushing; report whether a flush is due.
+
+        The external-scheduler hook: :meth:`apply` decides *and executes*
+        flushes inline, which is right for a single session but wrong for a
+        daemon multiplexing many sessions — there the flush *order* across
+        sessions is a scheduling decision (``repro.serving.allocd`` flushes
+        the session with the tightest SLA slack first).  ``offer`` runs
+        exactly the flush-policy check :meth:`apply` runs (so flush
+        *boundaries* stay bit-identical to an inline replay) but leaves the
+        flush to the caller.  Once ``offer`` returns True, do not offer the
+        session further events until :meth:`flush` has run — interleaving
+        would move the boundary and break replay conformance.
+
+        Parameters
+        ----------
+        event : StreamEvent
+            The event to buffer (validated atomically at flush).
+
+        Returns
+        -------
+        bool
+            True when the engine's flush policy demands a flush now —
+            including SLA-critical events under a deadline-aware policy.
+        """
+        self._pending.append(event)
+        return self._policy_fires(self.engine.policies.flush, event)
+
+    def pending_slack(self) -> float:
+        """Tightest SLA slack [s] carried by the buffered events.
+
+        The cross-session scheduling key of ``repro.serving.allocd``: among
+        sessions due to flush, the one whose tightest deadline expires
+        soonest flushes first.  Slack of one event is ``-E`` (``E = C - D``
+        is negative while the deadline is attainable) taken from a
+        :class:`~repro.core.types.ClassArrival`'s params or an
+        :class:`~repro.core.types.SLAEdit`'s updates; events that carry no
+        deadline (departures, capacity changes, E-less edits) contribute
+        nothing.
+
+        Returns
+        -------
+        float
+            ``min(-E)`` over deadline-carrying buffered events, ``inf``
+            when there are none (flush-order ties break by fairness, not
+            urgency).
+        """
+        slack = np.inf
+        for ev in self._pending:
+            E = None
+            if isinstance(ev, ClassArrival):
+                E = ev.params.get("E")
+            elif isinstance(ev, SLAEdit):
+                E = ev.updates.get("E")
+            if E is not None:
+                slack = min(slack, -float(E))
+        return slack
+
     def drain(self) -> List[Optional[int]]:
         """Fold every buffered event into the window WITHOUT re-solving.
 
@@ -784,6 +843,26 @@ class WindowSession:
         self.last_slots = slots
         return slots
 
+    def discard_pending(self) -> Tuple[StreamEvent, ...]:
+        """Drop every buffered event without folding it into the window.
+
+        The abort hook for external schedulers: an aborting daemon (or a
+        driver whose epoch failed ``apply_epoch`` validation) must leave
+        the session at its last *flushed* state — partially-buffered
+        epochs are discarded rather than half-applied, so the session's
+        flush-boundary history stays a prefix of the full-trace replay.
+        The window itself is untouched (state, dirty flags, counters).
+
+        Returns
+        -------
+        tuple of StreamEvent
+            The dropped events, in the order they were buffered (callers
+            may re-queue, log or fail them).
+        """
+        dropped = tuple(self._pending)
+        self._pending = []
+        return dropped
+
     def flush(self) -> WindowSolveReport:
         """Apply buffered events, run policy compaction, re-solve once.
 
@@ -791,8 +870,11 @@ class WindowSession:
         buffer, the compaction policy may re-pack a sparse window (the
         report's ``slot_map`` records the re-layout), and ONE warm-started
         re-solve re-equilibrates the union of dirtied lanes.  An empty
-        flush on a clean window is legal and nearly free (every lane
-        freezes).
+        flush on a clean, already-solved, geometry-unchanged window is a
+        true no-op: it echoes the previous flush's report (``slot_map``
+        cleared — no compaction happened NOW) without any solve dispatch;
+        the daemon's drain path hits this on every idle session, and
+        ``flushes`` / ``events_folded`` do not advance.
 
         Returns
         -------
@@ -801,6 +883,14 @@ class WindowSession:
             event (the last per-event solve of the epoch; proven in
             ``tests/test_coalescing.py``).
         """
+        if (not self._pending and self._last_report is not None
+                and self.window.state is not None
+                and not self.window.dirty.any()
+                and np.array_equal(np.asarray(self._last_report.mask),
+                                   self.window._mask)):
+            # slot_map describes the PREVIOUS flush's compaction — this
+            # no-op flush performed none, so the echo must not carry it
+            return replace(self._last_report, slot_map=None)
         self.drain()
         report_map = None
         comp = self.engine.policies.compaction
@@ -813,6 +903,7 @@ class WindowSession:
         report = self.engine._solve_window(self.window)
         report.slot_map = report_map
         self.flushes += 1
+        self._last_report = report
         return report
 
     def stream(self, events: Iterable[StreamEvent]

@@ -249,8 +249,12 @@ class AdmissionWindow:
     @property
     def batch(self) -> ScenarioBatch:
         """The current window as a solver-ready :class:`ScenarioBatch`."""
+        # NB: the mask must be snapshotted — jnp.asarray zero-copies an
+        # aligned numpy buffer on CPU, which would hand the solver (and
+        # every report holding this batch) a live view of ``_mask`` that
+        # later in-place event applications silently rewrite.
         return ScenarioBatch(scenarios=self._scn,
-                             mask=jnp.asarray(self._mask),
+                             mask=jnp.asarray(self._mask.copy()),
                              n_classes=jnp.asarray(self.n_classes))
 
     @property
@@ -793,8 +797,10 @@ class AdmissionWindow:
     def _refresh_rho_hat(self, lane: int) -> None:
         # rho_hat = max_i rho_up over ADMITTED classes (paper (P5e) interval
         # end); an empty lane degenerates to the single candidate rho_bar.
+        # copy: ``_mask[lane][None]`` is a numpy view and jnp.asarray may
+        # zero-copy it — the jitted refresh must read a snapshot
         self._scn = _refresh_hats(self._scn, jnp.asarray([lane]),
-                                  jnp.asarray(self._mask[lane][None]))
+                                  jnp.asarray(self._mask[lane][None].copy()))
 
 
 def grown_n_max(n_max: int, growth_factor: float) -> int:

@@ -1,3 +1,17 @@
+from repro.serving.allocd import (AdmissionTicket, AllocDaemon,
+                                  drive_open_loop, flash_crowd_times,
+                                  interleave_traces, poisson_times,
+                                  rejection_penalty)
 from repro.serving.engine import generate, pad_attn_cache
 
-__all__ = ["generate", "pad_attn_cache"]
+__all__ = [
+    "AdmissionTicket",
+    "AllocDaemon",
+    "drive_open_loop",
+    "flash_crowd_times",
+    "generate",
+    "interleave_traces",
+    "pad_attn_cache",
+    "poisson_times",
+    "rejection_penalty",
+]

@@ -1,0 +1,43 @@
+"""Shared hypothesis import shim: real property-based testing when the
+package is installed (CI installs it), a LOUD per-test skip when not.
+
+The PR 1 fallback silently ran each ``@given`` test on one deterministic
+midpoint example, which let the suite stay green while property coverage
+quietly degraded to a point check.  Now every ``@given`` test skips with
+an explicit reason when hypothesis is absent, so the hole shows up in the
+pytest summary instead of hiding inside a pass count.
+
+Usage (replaces ``from hypothesis import given, settings, strategies``):
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _St:
+        """Stand-in strategy namespace: any strategy constructor returns an
+        inert placeholder — the ``given`` fallback never draws from it."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _St()
+
+    def settings(*_a, **_kw):
+        return lambda f: f
+
+    def given(*_a, **_kw):
+        def deco(f):
+            def wrapper():   # zero-arg: params must not look like fixtures
+                pytest.skip("hypothesis not installed: property-based "
+                            f"search for {f.__name__} skipped")
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

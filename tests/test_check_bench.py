@@ -73,6 +73,34 @@ def test_gate_fails_engine_path_mismatch(tmp_path, monkeypatch):
     assert run_gate(again, base, fresh, monkeypatch) == 0
 
 
+def test_gate_latency_ceiling_passes_within_band(tmp_path, monkeypatch):
+    """Latency metrics gate in the opposite direction: lower is better,
+    so a drop is always fine and a rise passes only inside the ceiling."""
+    base = record(admission_p50_ms=10.0, admission_p99_ms=40.0)
+    fresh = record(admission_p50_ms=2.0, admission_p99_ms=120.0)  # p99 3x: ok
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 0
+
+
+def test_gate_fails_latency_blowup(tmp_path, monkeypatch):
+    base = record(admission_p50_ms=10.0)
+    fresh = record(admission_p50_ms=80.0)       # 8x > the 5x ceiling
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+
+
+def test_gate_fails_arrival_process_mismatch(tmp_path, monkeypatch):
+    """The `arrival` tag is config: Poisson and flash-crowd admission
+    latencies measure different load shapes and are never comparable."""
+    base = record(admission_p99_ms=40.0)
+    fresh = record(admission_p99_ms=40.0)
+    base["results"]["batch"]["arrival"] = "poisson"
+    fresh["results"]["batch"]["arrival"] = "flash"
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+    fresh["results"]["batch"]["arrival"] = "poisson"
+    again = tmp_path / "matching-arrival"
+    again.mkdir()
+    assert run_gate(again, base, fresh, monkeypatch) == 0
+
+
 def test_gate_fails_solver_config_mismatch(tmp_path, monkeypatch):
     """The SolverConfig fingerprint is config: engine-path numbers must
     never be compared against records measured under a different solver

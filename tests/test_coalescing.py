@@ -19,6 +19,7 @@ import jax
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import (AdmissionWindow, CapacityEngine, ClassArrival,
                         ClassDeparture, CrossCheckPolicy, EventEpoch,
                         FlushPolicy, Policies, RoundingPolicy, SLAEdit,
@@ -141,6 +142,53 @@ def test_apply_epoch_is_atomic():
     np.testing.assert_array_equal(np.asarray(w._scn.A), before_A)
     assert not w.dirty.any()
     assert w.apply_epoch([]) == []
+
+
+# --------------------------------------------------------------------------
+# apply_epoch invariants as PROPERTIES (hypothesis; loud skip without it)
+# --------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=15, derandomize=True)
+@given(seed=st.integers(0, 10_000), n_events=st.integers(1, 40),
+       p_depart=st.floats(0.0, 0.6), n_max=st.sampled_from([9, 12, 16]))
+def test_property_apply_epoch_matches_sequential(seed, n_events, p_depart,
+                                                 n_max):
+    """For ANY seeded trace (length, churn mixture, headroom — including
+    traces that force growth and in-epoch slot recycling), one coalesced
+    apply_epoch is bit-identical to event-by-event apply."""
+    w_seq = make_window(n_max=n_max, seed0=seed % 7)
+    w_co = make_window(n_max=n_max, seed0=seed % 7)
+    trace = sample_event_trace(seed, w_seq, n_events, p_depart=p_depart)
+    seq_slots = [w_seq.apply(ev) for ev in trace]
+    co_slots = w_co.apply_epoch(trace)
+    assert seq_slots == co_slots
+    assert_windows_identical(w_seq, w_co)
+
+
+@settings(deadline=None, max_examples=15, derandomize=True)
+@given(seed=st.integers(0, 10_000), n_good=st.integers(0, 12),
+       bad_kind=st.sampled_from(["empty-slot", "bad-field", "missing",
+                                 "bad-lane"]))
+def test_property_apply_epoch_atomic_under_any_prefix(seed, n_good,
+                                                      bad_kind):
+    """An invalid event after ANY valid prefix aborts the whole epoch
+    with ZERO mutation — mask, scenario leaves, raw registry, dirt."""
+    w = make_window(ns=(3, 4), n_max=8)
+    good = sample_event_trace(seed, w, n_good, p_depart=0.0, p_edit=0.0,
+                              p_capacity=0.0) if n_good else []
+    bad = {"empty-slot": ClassDeparture(lane=0, slot=7),
+           "bad-field": SLAEdit(lane=0, slot=0, updates={"nope": 1.0}),
+           "missing": ClassArrival(lane=0, params={"A": 1.0}),
+           "bad-lane": ClassDeparture(lane=99, slot=0)}[bad_kind]
+    before_mask = w._mask.copy()
+    before_raw = dict(w._raw)
+    before_A = np.asarray(w._scn.A).copy()
+    with pytest.raises((IndexError, ValueError)):
+        w.apply_epoch([*good, bad])
+    np.testing.assert_array_equal(w._mask, before_mask)
+    np.testing.assert_array_equal(np.asarray(w._scn.A), before_A)
+    assert w._raw == before_raw
+    assert not w.dirty.any()
 
 
 # --------------------------------------------------------------------------

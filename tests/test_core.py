@@ -6,40 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ModuleNotFoundError:
-    # A bare `pytest.importorskip("hypothesis")` would skip this whole module
-    # and with it the non-property tests.  Instead, without hypothesis each
-    # @given test degrades to ONE deterministic example (strategy midpoints),
-    # so the suite collects and keeps real coverage; installing hypothesis
-    # restores full property-based search.
-    class _St:
-        @staticmethod
-        def integers(lo, hi):
-            return lo
-
-        @staticmethod
-        def floats(lo, hi):
-            return 0.5 * (lo + hi)
-
-        @staticmethod
-        def sampled_from(xs):
-            return xs[len(xs) // 2]
-
-    st = _St()
-
-    def settings(**_kw):
-        return lambda f: f
-
-    def given(**example):
-        def deco(f):
-            def wrapper():   # zero-arg: params must not look like fixtures
-                return f(**example)
-            wrapper.__name__ = f.__name__
-            wrapper.__doc__ = f.__doc__
-            return wrapper
-        return deco
+# Real property-based search when hypothesis is installed (CI does), a
+# loud per-test pytest.skip when not — never a silent one-example pass.
+from _hypothesis_compat import given, settings, st  # noqa: F401
 
 from repro.core import (CapacityEngine, InfeasibleError, deadline_lhs,
                         sample_scenario, solve_centralized, solve_distributed,

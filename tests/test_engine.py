@@ -396,3 +396,118 @@ def test_session_geometry_verbs_drain_first():
     assert sess.window.batch_size == 2
     slot_map = sess.compact()
     assert slot_map.shape[0] == 2
+
+
+# --------------------------------------------------------------------------
+# Policies corner cases (PR 6) + empty-drain/flush regressions
+# --------------------------------------------------------------------------
+
+def test_flush_policy_deadline_zero_slack():
+    """slack_s=0: only events AT or past infeasibility (E >= 0) are
+    critical; an attainable deadline by any margin keeps coalescing."""
+    pol = FlushPolicy.deadline(0.0, max_events=100)
+    w = make_window(ns=(3, 4), n_max=8)
+    params = sample_class_params(jax.random.PRNGKey(0))
+    attainable = ClassArrival(lane=0, params={**params, "E": -1e-9})
+    boundary = ClassArrival(lane=0, params={**params, "E": 0.0})
+    missed = ClassArrival(lane=0, params={**params, "E": 3.0})
+    assert not pol.is_critical(attainable, w)
+    assert pol.is_critical(boundary, w)
+    assert pol.is_critical(missed, w)
+
+
+def test_flush_policy_deadline_negative_slack():
+    """Negative slack: the criticality frontier moves PAST infeasibility —
+    only events already missing the deadline by |slack| trigger (the
+    operator's 'don't panic until it's truly lost' setting)."""
+    pol = FlushPolicy.deadline(-5.0, max_events=100)
+    w = make_window(ns=(3, 4), n_max=8)
+    params = sample_class_params(jax.random.PRNGKey(0))
+    infeasible_by_4 = ClassArrival(lane=0, params={**params, "E": 4.0})
+    infeasible_by_5 = ClassArrival(lane=0, params={**params, "E": 5.0})
+    assert not pol.is_critical(infeasible_by_4, w)
+    assert pol.is_critical(infeasible_by_5, w)
+    # and through the session: the sub-threshold event keeps buffering
+    eng = CapacityEngine(policies=Policies(
+        flush=pol, rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(3, 4), n_max=8))
+    assert sess.apply(infeasible_by_4) is None and len(sess.pending) == 1
+    assert sess.apply(infeasible_by_5) is not None and not sess.pending
+
+
+def test_compaction_policy_on_already_compact_window_is_identity():
+    """CompactionPolicy firing on a window already packed at its minimal
+    width must report an IDENTITY slot_map (occupied slots map to
+    themselves) and change nothing."""
+    # 2 classes per lane packed at slots [0, 1], n_max equal to the widest
+    # lane -> occupancy 2/3 < 0.9 fires the policy, but there is nothing
+    # to move and nothing to shrink
+    eng = CapacityEngine(policies=Policies(
+        flush=FlushPolicy(max_events=None),
+        compaction=CompactionPolicy(occupancy=0.9, headroom=1.0),
+        rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(2, 2, 3), n_max=3))
+    before_mask = sess.window._mask.copy()
+    rep = sess.flush()
+    assert rep.slot_map is not None              # the policy DID fire
+    # identity: every occupied slot keeps its index, every hole is -1,
+    # and the window's geometry/occupancy is untouched
+    for b in range(before_mask.shape[0]):
+        idx = np.flatnonzero(before_mask[b])
+        np.testing.assert_array_equal(rep.slot_map[b, idx], idx)
+        holes = np.flatnonzero(~before_mask[b])
+        np.testing.assert_array_equal(rep.slot_map[b, holes],
+                                      np.full(holes.size, -1))
+    np.testing.assert_array_equal(sess.window._mask, before_mask)
+    assert sess.window.n_max == 3
+
+
+def test_cross_check_policy_on_all_empty_window():
+    """CrossCheckPolicy on a window whose lanes are ALL empty: the exact
+    baseline degenerates to 0, the gap is exactly 0, nothing raises."""
+    eng = CapacityEngine(policies=Policies(
+        flush=FlushPolicy(max_events=None),
+        cross_check=CrossCheckPolicy(enabled=True),
+        rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(2, 3), n_max=4))
+    for b in range(2):
+        for slot in sess.window.occupied(b):
+            sess.apply(ClassDeparture(lane=b, slot=slot))
+    rep = sess.flush()
+    assert not sess.window._mask.any()
+    np.testing.assert_array_equal(np.asarray(rep.centralized_gap),
+                                  np.zeros(2))
+    np.testing.assert_array_equal(np.asarray(rep.fractional.total),
+                                  np.zeros(2))
+
+
+def test_empty_drain_returns_empty_without_solve():
+    """Satellite regression: drain with zero buffered events returns []
+    and performs no window work at all."""
+    eng = CapacityEngine(policies=Policies(rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(3, 4), n_max=8))
+    assert sess.drain() == []
+    assert sess.events_folded == 0 and sess.flushes == 0
+    assert sess.window.state is None             # nothing was solved
+
+
+def test_empty_flush_is_a_noop_echo():
+    """Satellite regression: flush on a clean, solved, geometry-unchanged
+    session echoes the last report (slot_map cleared) with NO solve
+    dispatch — counters do not advance."""
+    eng = CapacityEngine(policies=Policies(
+        flush=FlushPolicy(max_events=2), rounding=RoundingPolicy(False)))
+    sess = eng.open_window(make_window(ns=(3, 4), n_max=8))
+    first = sess.flush()                         # initial solve (dirty lanes)
+    assert sess.flushes == 1
+    again = sess.flush()                         # clean + solved: no-op
+    assert sess.flushes == 1 and sess.events_folded == 0
+    assert again.slot_map is None
+    assert again.fractional is first.fractional  # the SAME solution object
+    np.testing.assert_array_equal(np.asarray(again.mask),
+                                  np.asarray(first.mask))
+    # geometry changes invalidate the echo: a real solve runs again
+    sess.add_lane(R=300.0, rho_bar=2.0)
+    third = sess.flush()
+    assert sess.flushes == 2
+    assert np.asarray(third.mask).shape[0] == 3
