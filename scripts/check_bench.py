@@ -56,12 +56,14 @@ GATED = {
 #: config keys that must match between baseline and fresh for a section
 #: ("path" tags which engine path a section measured — per-event vs
 #: coalesced-epochs vs shard-coalesced events/sec are not comparable;
-#: "arrival" tags the allocd arrival process — Poisson vs flash-crowd
-#: latency records are never comparable, nor are runs at different
-#: tenant counts, rates or queue bounds)
+#: "residency" tags whether window state stayed device-resident across
+#: flushes — resident and host-round-trip records are different machines
+#: and must never be silently compared; "arrival" tags the allocd arrival
+#: process — Poisson vs flash-crowd latency records are never comparable,
+#: nor are runs at different tenant counts, rates or queue bounds)
 CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
-               "ragged", "path", "arrival", "tenants", "rate", "flush_k",
-               "queue_limit")
+               "ragged", "path", "residency", "arrival", "tenants", "rate",
+               "flush_k", "queue_limit")
 
 
 def load(path: Path) -> dict:

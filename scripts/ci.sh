@@ -44,7 +44,10 @@ python -m benchmarks.allocator_perf --batch --shard --smoke \
     --json "${BENCH_DIR}/BENCH_allocator.json"
 python -m benchmarks.allocator_perf --smoke
 
-echo "== streaming admission engine smoke (warm + coalesced + sharded) =="
+echo "== streaming admission engine smoke (warm + coalesced + sharded + resident) =="
+# --shard measures BOTH residency modes: the host-round-trip shard path and
+# the device-resident sessions (ISSUE 7); check_bench gates the resident
+# speedup via the shard_resident section's `residency`-tagged record
 python -m benchmarks.streaming_perf --coalesce --shard --smoke \
     --json "${BENCH_DIR}/BENCH_streaming.json"
 

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import game
+from repro.core import game, sharding
 from repro.core.centralized import solve_centralized
 from repro.core.rounding import (IntegerSolution, round_solution,
                                  round_solution_batch)
@@ -98,6 +98,17 @@ class SolverConfig:
         streaming solves shard their lanes across the mesh's devices,
         inert-lane padding handling ragged lane counts.  ``None`` keeps
         everything on one device.
+    residency : str
+        Where a :class:`WindowSession`'s state lives between flushes.
+        ``"round-trip"`` (default) re-places the window on the mesh every
+        solve — simple, but the per-flush host<->device resharding is why
+        sharded streaming historically scaled *worse* than unsharded.
+        ``"resident"`` (requires ``mesh``) keeps the window's scenario
+        leaves, occupancy-mask mirror and warm-start state lane-sharded on
+        the mesh across flushes (``AdmissionWindow.make_resident``), with
+        the warm-start buffers donated between consecutive solves —
+        bit-equal results (``tests/test_resident.py``), no per-flush
+        resharding.  One-shot ``solve`` calls are unaffected.
     """
     eps_bar: float = 0.03
     lam: float = 0.05
@@ -105,6 +116,7 @@ class SolverConfig:
     dtype: Optional[Any] = None
     sweep_fn: Optional[Callable] = None
     mesh: Optional[Any] = None
+    residency: str = "round-trip"
 
     def fingerprint(self) -> str:
         """Stable identity string for benchmark / baseline provenance.
@@ -119,7 +131,9 @@ class SolverConfig:
         str
             ``eps_bar=..|lam=..|max_iters=..|dtype=..|sweep=..|mesh=..``;
             the sweep kernel contributes its ``__name__``, the mesh its
-            shape and axis names.
+            shape and axis names.  A non-default ``residency`` appends
+            ``|residency=..`` (the default appends nothing, so fingerprints
+            recorded before the residency knob existed stay comparable).
         """
         dtype = ("native" if self.dtype is None
                  else jnp.dtype(self.dtype).name)
@@ -129,9 +143,11 @@ class SolverConfig:
         mesh = ("none" if self.mesh is None
                 else "x".join(map(str, self.mesh.devices.shape))
                 + ":" + ",".join(self.mesh.axis_names))
+        tail = ("" if self.residency == "round-trip"
+                else f"|residency={self.residency}")
         return (f"eps_bar={self.eps_bar}|lam={self.lam}"
                 f"|max_iters={self.max_iters}|dtype={dtype}"
-                f"|sweep={sweep}|mesh={mesh}")
+                f"|sweep={sweep}|mesh={mesh}{tail}")
 
 
 # --------------------------------------------------------------------------
@@ -462,6 +478,14 @@ class CapacityEngine:
                  policies: Optional[Policies] = None):
         self.config = config if config is not None else SolverConfig()
         self.policies = policies if policies is not None else Policies()
+        if self.config.residency not in ("round-trip", "resident"):
+            raise ValueError(
+                f"unknown residency {self.config.residency!r} — "
+                "expected 'round-trip' or 'resident'")
+        if self.config.residency == "resident" and self.config.mesh is None:
+            raise ValueError(
+                "residency='resident' needs a mesh= in the SolverConfig "
+                "(repro.core.sharding.lane_mesh)")
 
     # ------------------------------------------------------------- one-shot
     def solve(self, problem, *, method: str = "distributed",
@@ -603,8 +627,26 @@ class CapacityEngine:
     def _solve_window(self, window: AdmissionWindow) -> WindowSolveReport:
         """Warm-started incremental re-solve of a live window (the streaming
         mechanism: only dirty lanes iterate, clean lanes freeze at their
-        stored equilibrium; numerically equivalent to a cold re-solve)."""
-        cfg, pol = self.config, self.policies
+        stored equilibrium; numerically equivalent to a cold re-solve).
+        Dispatches on residency: a device-resident window (or a
+        ``residency='resident'`` config, which makes the window resident on
+        first use) takes the zero-resharding resident path."""
+        cfg = self.config
+        if not window.is_resident and cfg.residency == "resident":
+            window.make_resident(cfg.mesh)
+        if window.is_resident:
+            if cfg.mesh is not None and cfg.mesh != window.resident_mesh:
+                raise ValueError(
+                    "window is resident on a different mesh than the "
+                    "engine's config.mesh — release_resident or match them")
+            return self._solve_window_resident(window)
+        return self._solve_window_roundtrip(window)
+
+    def _solve_window_roundtrip(self,
+                                window: AdmissionWindow) -> WindowSolveReport:
+        """The classic flush: host-side warm start, per-solve mesh placement
+        (when ``config.mesh`` is set), host-trimmed result."""
+        cfg = self.config
         t0 = time.perf_counter()
         batch = window.batch
         init = window.warm_start()
@@ -616,7 +658,40 @@ class CapacityEngine:
                                            sweep_fn=cfg.sweep_fn, init=init,
                                            mesh=cfg.mesh)
         window.commit(sol.r, sol.aux, sol.iters)
+        return self._window_report(window, batch, sol, resolved, t0)
 
+    def _solve_window_resident(self,
+                               window: AdmissionWindow) -> WindowSolveReport:
+        """The resident flush: scenario leaves, mask mirror and warm-start
+        state already live lane-sharded on the window's mesh, the init is
+        built on-device and its buffers donated to the solve — zero
+        per-flush host->mesh resharding (the tentpole of the
+        device-resident session design; see docs/ARCHITECTURE.md)."""
+        cfg = self.config
+        t0 = time.perf_counter()
+        rbatch = window.resident_batch()
+        init, resolved = window.resident_warm_start(rbatch)
+        sol_p = sharding.solve_resident_batch(
+            rbatch, window.resident_mesh, eps_bar=cfg.eps_bar, lam=cfg.lam,
+            max_iters=cfg.max_iters, sweep_fn=cfg.sweep_fn, init=init)
+        del init                  # donated: unusable after the solve
+        window.commit(sol_p.r, sol_p.aux, sol_p.iters)
+        b = window.batch_size
+        sol = (sol_p if rbatch.batch_size == b
+               else jax.tree_util.tree_map(lambda leaf: leaf[:b], sol_p))
+        # the report's batch view is the logical host mirror — same mask
+        # snapshot recipe as the round-trip path, so reports from the two
+        # paths are structurally identical (tests/test_resident.py asserts
+        # bit-equality)
+        return self._window_report(window, window.batch, sol, resolved, t0)
+
+    def _window_report(self, window: AdmissionWindow, batch: ScenarioBatch,
+                       sol, resolved: np.ndarray,
+                       t0: float) -> WindowSolveReport:
+        """Shared tail of both flush paths: centralized cross-check,
+        Algorithm 4.2 rounding, report assembly — all over the LOGICAL
+        lane count."""
+        cfg, pol = self.config, self.policies
         gap = None
         if pol.cross_check.enabled:
             # The exact (P3) optimum of a lane only changes when its

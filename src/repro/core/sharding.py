@@ -50,7 +50,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import game
-from repro.core.types import (Scenario, ScenarioBatch, Solution,
+from repro.core.types import (Scenario, ScenarioBatch, Solution, WindowState,
                               neutral_class_values)
 
 #: Default name of the single mesh axis the lane dimension is sharded over.
@@ -251,6 +251,205 @@ def pad_warm_start(init: game.BatchWarmStart,
             axis=0),
         active=jnp.concatenate(
             [init.active, jnp.zeros((pad,), bool)], axis=0))
+
+
+def pad_window_state(state: WindowState, target_b: int) -> WindowState:
+    """Append *inert-lane* equilibrium rows so ``state`` covers ``target_b``
+    lanes.
+
+    The stored-state analog of :func:`pad_warm_start`: padded lanes get a
+    zero allocation, price pinned at the inert lane's ``rho_bar = 1``, zero
+    iteration counts and ``solved = True`` — so a resident warm start built
+    from the padded state freezes them (``active = False``) exactly like
+    :func:`pad_warm_start` does, and they never iterate.
+
+    Parameters
+    ----------
+    state : WindowState
+        Committed equilibrium over the real B lanes.
+    target_b : int
+        Lane count after padding; must be >= B.
+
+    Returns
+    -------
+    WindowState
+        ``state`` itself when already ``target_b`` lanes, else the padded
+        state.
+    """
+    b = state.solved.shape[0]
+    if target_b == b:
+        return state
+    if target_b < b:
+        raise ValueError(f"target_b={target_b} < batch_size={b}")
+    pad, n_max = target_b - b, state.r.shape[1]
+    dt = state.r.dtype
+    return WindowState(
+        r=jnp.concatenate([state.r, jnp.zeros((pad, n_max), dt)], axis=0),
+        rho=jnp.concatenate([state.rho, jnp.ones((pad,), dt)], axis=0),
+        lane_iters=jnp.concatenate(
+            [state.lane_iters, jnp.zeros((pad,), state.lane_iters.dtype)],
+            axis=0),
+        solved=jnp.concatenate([state.solved, jnp.ones((pad,), bool)],
+                               axis=0))
+
+
+@jax.jit
+def _resident_warm_builder(batch: ScenarioBatch, r, rho, lane_iters, solved,
+                           dirty) -> game.BatchWarmStart:
+    # Same frozen/dirty split as AdmissionWindow.warm_start, computed
+    # on-device over the PADDED resident leaves (sharding propagates, so the
+    # init comes out lane-sharded with zero host round-trips).  Every output
+    # leaf passes through an optimization_barrier: the donated-init contract
+    # of solve_resident_batch requires leaves that are fresh buffers, and
+    # the barrier breaks any jaxpr-level passthrough (e.g. same-dtype
+    # ``astype`` in cold_start returning its operand) that would otherwise
+    # alias an init leaf to live window state.
+    cold = game.cold_start(batch)
+    frozen = solved & jnp.logical_not(dirty)
+    init = game.BatchWarmStart(
+        r=jnp.where(frozen[:, None], r, cold.r),
+        bids=cold.bids,
+        rho=jnp.where(frozen, rho, cold.rho),
+        lane_iters=jnp.where(frozen, lane_iters, jnp.zeros_like(lane_iters)),
+        active=jnp.logical_not(frozen))
+    return jax.tree_util.tree_map(jax.lax.optimization_barrier, init)
+
+
+@jax.jit
+def _resident_cold_builder(batch: ScenarioBatch) -> game.BatchWarmStart:
+    # Barrier for the same donation-safety reason as _resident_warm_builder:
+    # cold_start's rho/bids are same-dtype casts of batch.rho_bar and would
+    # otherwise pass the batch leaf straight through to the donated init.
+    return jax.tree_util.tree_map(jax.lax.optimization_barrier,
+                                  game.cold_start(batch))
+
+
+def resident_warm_init(batch: ScenarioBatch, state: WindowState,
+                       dirty) -> game.BatchWarmStart:
+    """Build the donation-safe warm start for a mesh-resident window solve.
+
+    Frozen lanes (``state.solved`` and not ``dirty``) pass their stored
+    equilibrium through with ``active = False``; dirty or never-solved lanes
+    restart from the cold Algorithm 4.1 init — bit-identical to
+    ``AdmissionWindow.warm_start`` + :func:`pad_warm_start`, but computed in
+    one jitted program over the already-padded resident leaves, so nothing
+    round-trips through the host.  Every leaf of the result is a *fresh*
+    buffer (an ``optimization_barrier`` guards against jaxpr passthrough
+    aliasing), which is what lets :func:`solve_resident_batch` donate it.
+
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        The resident (lane-padded, mesh-placed) batch.
+    state : WindowState
+        Committed equilibrium over the same padded lane count
+        (:func:`pad_window_state`).
+    dirty : jnp.ndarray
+        (padded B,) bool — lanes whose scenario changed since ``state``
+        (padding rows False).
+
+    Returns
+    -------
+    game.BatchWarmStart
+        Lane-sharded init whose buffers are safe to donate.
+    """
+    return _resident_warm_builder(batch, state.r, state.rho,
+                                  state.lane_iters, state.solved, dirty)
+
+
+def resident_cold_init(batch: ScenarioBatch) -> game.BatchWarmStart:
+    """Donation-safe cold Algorithm 4.1 init for a mesh-resident batch.
+
+    Value-identical to ``game.cold_start`` (so a resident first solve
+    reproduces the round-trip cold trajectory exactly), with fresh buffers
+    per the same barrier argument as :func:`resident_warm_init`.
+
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        The resident (lane-padded, mesh-placed) batch.
+
+    Returns
+    -------
+    game.BatchWarmStart
+        Lane-sharded cold init whose buffers are safe to donate.
+    """
+    return _resident_cold_builder(batch)
+
+
+@lru_cache(maxsize=None)
+def _resident_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
+                     sweep_fn):
+    """Memoized donating variant of :func:`_sharded_solver`.
+
+    Identical program to the ``with_init=True`` sharded solver, but the
+    warm-start argument's buffers are DONATED (``donate_argnums``) — XLA
+    reuses them for the solution outputs, so steady-state resident
+    streaming allocates no fresh equilibrium buffers per flush (the
+    ``serving/engine.py`` decode-cache idiom applied to the GNEP loop).
+    """
+    (axis,) = mesh.axis_names
+    spec = PartitionSpec(axis)
+
+    def local_solve(batch: ScenarioBatch, init: game.BatchWarmStart):
+        return game._solve_batch_core(batch, eps_bar, lam, max_iters,
+                                      sweep_fn, init)
+
+    sharded = shard_map(local_solve, mesh=mesh, in_specs=(spec, spec),
+                        out_specs=spec, check_rep=False)
+    return jax.jit(sharded, donate_argnums=(1,))
+
+
+def solve_resident_batch(batch: ScenarioBatch, mesh: Mesh, *,
+                         eps_bar: float = 0.03, lam: float = 0.05,
+                         max_iters: int = 200, sweep_fn=None,
+                         init: game.BatchWarmStart) -> Solution:
+    """Algorithm 4.1 over an already mesh-resident, lane-padded batch.
+
+    The zero-copy flush path of device-resident window sessions: ``batch``
+    must already be lane-padded to the mesh multiple and placed with
+    :func:`lane_sharding` (a resident ``AdmissionWindow`` maintains exactly
+    that), and ``init`` must come from :func:`resident_warm_init` /
+    :func:`resident_cold_init` — its buffers are **donated** to the solve
+    and must not be read afterwards.  Unlike :func:`solve_sharded_batch`
+    nothing is padded, placed or trimmed here: the returned
+    :class:`Solution` keeps the PADDED lane count and stays resident on the
+    mesh, ready to be committed as the next warm-start state.
+
+    Parameters
+    ----------
+    batch : ScenarioBatch
+        Mesh-resident padded batch (lane count divisible by the device
+        count).
+    mesh : jax.sharding.Mesh
+        1-D lane mesh the batch lives on.
+    eps_bar : float, optional
+        Alg. 4.1 stopping tolerance (compiled into the program).
+    lam : float, optional
+        Bid-escalation step (compiled in).
+    max_iters : int, optional
+        Per-device iteration cap (compiled in).
+    sweep_fn : callable, optional
+        Batched RM sweep override; pass a memoized function object.
+    init : game.BatchWarmStart
+        Fresh-buffer warm start over the padded lanes; donated.
+
+    Returns
+    -------
+    Solution
+        Padded-lane-count solution, resident on ``mesh``.
+    """
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"lane sharding needs a 1-D mesh, got axes {mesh.axis_names}")
+    if batch.batch_size % mesh.devices.size:
+        raise ValueError(
+            f"resident batch has {batch.batch_size} lanes, not a multiple "
+            f"of the {mesh.devices.size}-device mesh — pad with "
+            "pad_batch_lanes/padded_lane_count first")
+    solver = _resident_solver(mesh, float(eps_bar), float(lam),
+                              int(max_iters), sweep_fn)
+    return solver(batch, init)
 
 
 @lru_cache(maxsize=None)

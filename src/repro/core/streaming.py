@@ -48,6 +48,7 @@ random-but-replayable event traces for tests and
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from dataclasses import dataclass
@@ -91,6 +92,43 @@ def _scatter_class_fields(scn: Scenario, li, si, vals) -> Scenario:
     """
     return scn.replace(**{f: getattr(scn, f).at[li, si].set(vals[f])
                           for f in _CLASS_FIELDS})
+
+
+@jax.jit
+def _epoch_commit(scn: Scenario, mask_dev, state_r, li, si, vals, occ,
+                  R_lanes, R_vals, hat_lanes, hat_rows):
+    """The WHOLE epoch commit as one jitted program: class-field scatter,
+    resident-mask-mirror scatter, vacated-slot warm-state zeroing, lane
+    capacity updates and the rho_hat refresh.
+
+    Any of the sub-updates may be absent (``None`` operands prune that
+    branch at trace time; each presence combination compiles once).  One
+    fused dispatch instead of up to five matters twice over: on CPU the
+    dispatch is the streaming bottleneck (PR 3 caveat), and on a
+    device-resident window every operand is lane-sharded, so each dispatch
+    costs a full multi-device execution round.  Value-identical to running
+    :func:`_scatter_class_fields` / :func:`_refresh_hats` and the mask/
+    state/R scatters back-to-back (same scatter order, disjoint or
+    idempotent writes).
+    """
+    if li is not None:
+        scn = scn.replace(**{f: getattr(scn, f).at[li, si].set(vals[f])
+                             for f in _CLASS_FIELDS})
+        if mask_dev is not None:
+            mask_dev = mask_dev.at[li, si].set(occ)
+        if state_r is not None:
+            # vacated slots restart from 0; occupied staged slots keep their
+            # stored allocation (their lane goes dirty and restarts cold
+            # anyway) — bit-equal to the old vacated-only scatter
+            state_r = state_r.at[li, si].set(
+                jnp.where(occ, state_r[li, si], jnp.zeros((), state_r.dtype)))
+    if R_lanes is not None:
+        scn = scn.replace(R=scn.R.at[R_lanes].set(R_vals))
+    if hat_lanes is not None:
+        hats = jnp.max(jnp.where(hat_rows, scn.rho_up[hat_lanes],
+                                 scn.rho_bar[hat_lanes][:, None]), axis=1)
+        scn = scn.replace(rho_hat=scn.rho_hat.at[hat_lanes].set(hats))
+    return scn, mask_dev, state_r
 
 
 @jax.jit
@@ -215,6 +253,19 @@ class AdmissionWindow:
         batch = stack_scenarios(scns, n_max=n_max)
         self._scn = batch.scenarios
         self._mask = np.asarray(batch.mask).copy()
+        # device-residency state (None = classic host-round-trip layout):
+        # when resident, _scn/_state leaves are lane-padded to the mesh
+        # multiple and placed with lane_sharding; _mask_dev mirrors _mask
+        # on the mesh so flushes never upload the occupancy mask.
+        self._resident_mesh = None
+        self._mask_dev = None
+        self._n_classes_dev = self._n_classes_host = None
+        # host cache of the per-lane unit chip cost: vacated-slot neutral
+        # values need rho_bar per event epoch, and reading it off a
+        # (possibly mesh-sharded) device array would synchronise every
+        # flush.  Only __init__/add_lane/remove_lane ever change it.
+        self._rho_bar_host = np.asarray(batch.scenarios.rho_bar,
+                                        float).copy()
         self.growth_factor = float(growth_factor)
         self.dirty = np.zeros(self.batch_size, bool)
         # per-lane memo of the exact centralized (P3) total, invalidated by
@@ -253,7 +304,13 @@ class AdmissionWindow:
         # aligned numpy buffer on CPU, which would hand the solver (and
         # every report holding this batch) a live view of ``_mask`` that
         # later in-place event applications silently rewrite.
-        return ScenarioBatch(scenarios=self._scn,
+        scn = self._scn
+        b = self.batch_size
+        if int(scn.A.shape[0]) > b:
+            # resident layout carries inert mesh-padding lanes; the host
+            # mirror materialized here is always the logical window
+            scn = jax.tree_util.tree_map(lambda leaf: leaf[:b], scn)
+        return ScenarioBatch(scenarios=scn,
                              mask=jnp.asarray(self._mask.copy()),
                              n_classes=jnp.asarray(self.n_classes))
 
@@ -276,6 +333,185 @@ class AdmissionWindow:
     def occupied(self, lane: int) -> List[int]:
         """Slot indices currently holding an admitted class in ``lane``."""
         return [int(i) for i in np.flatnonzero(self._mask[lane])]
+
+    # -------------------------------------------------------- device residency
+    @property
+    def is_resident(self) -> bool:
+        """Whether the window's device leaves live lane-sharded on a mesh."""
+        return self._resident_mesh is not None
+
+    @property
+    def resident_mesh(self):
+        """The 1-D lane mesh the window is resident on (None when not)."""
+        return self._resident_mesh
+
+    def make_resident(self, mesh) -> None:
+        """Place the window's device state lane-sharded on ``mesh``, to stay.
+
+        After this, the scenario leaves, the occupancy-mask mirror and the
+        stored equilibrium are lane-padded to the mesh's device multiple
+        (inert padding, exactly :func:`repro.core.sharding.pad_batch_lanes`)
+        and committed with ``lane_sharding`` — and every subsequent event
+        scatter writes *into* the resident arrays (XLA sharding propagation
+        keeps them lane-sharded), so flushes pay zero per-solve host->mesh
+        resharding.  Geometry changes (:meth:`add_lane`,
+        :meth:`remove_lane`, :meth:`compact`) drop to the logical host
+        layout internally and re-establish residency before returning;
+        :meth:`grow` re-places in-place.  The host occupancy mask and raw
+        parameter book-keeping stay authoritative on the host throughout.
+
+        Parameters
+        ----------
+        mesh : jax.sharding.Mesh
+            1-D lane mesh (``repro.core.sharding.lane_mesh``).  Re-calling
+            with a different mesh migrates the window.
+        """
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"lane residency needs a 1-D mesh, got axes {mesh.axis_names}")
+        if self._resident_mesh is not None and self._resident_mesh != mesh:
+            self._exit_residency()
+        self._resident_mesh = mesh
+        self._place_device_leaves()
+
+    def release_resident(self) -> None:
+        """Return to the classic host-round-trip layout.
+
+        Trims the mesh-padding lanes off every device leaf, gathers the
+        leaves back to the default device and drops the device mask mirror;
+        the window is afterwards indistinguishable from one that was never
+        resident (``tests/test_resident.py`` round-trips through this).
+        """
+        if self._resident_mesh is not None:
+            self._exit_residency()
+
+    def resident_batch(self) -> ScenarioBatch:
+        """The resident (lane-padded, mesh-placed) solver view of the window.
+
+        Unlike :attr:`batch` this materializes NO host mirror: scenarios and
+        mask are the live resident arrays (padded lane count), and only the
+        tiny (padded B,) class-count vector is uploaded per call.
+
+        Returns
+        -------
+        ScenarioBatch
+            Leaves carry the PADDED lane count; padding lanes are inert.
+        """
+        if self._resident_mesh is None:
+            raise RuntimeError(
+                "window is not device-resident — call make_resident(mesh)")
+        pad_b = int(self._mask_dev.shape[0])
+        counts = np.zeros(pad_b, np.int64)
+        counts[:self.batch_size] = self.n_classes
+        # the solver is mask-driven (game.py never reads n_classes), so the
+        # counts vector is report surface only — cache its device copy and
+        # re-upload only when occupancy actually changed
+        if (self._n_classes_dev is None
+                or not np.array_equal(counts, self._n_classes_host)):
+            self._n_classes_dev = jax.device_put(
+                jnp.asarray(counts),
+                sharding.lane_sharding(self._resident_mesh))
+            self._n_classes_host = counts
+        return ScenarioBatch(scenarios=self._scn, mask=self._mask_dev,
+                             n_classes=self._n_classes_dev)
+
+    def resident_warm_start(self, rbatch: ScenarioBatch):
+        """On-device incremental-re-solve init for the resident solve path.
+
+        The resident analog of :meth:`warm_start` + ``pad_warm_start``:
+        frozen/dirty splitting happens in one jitted program over the padded
+        resident leaves (``sharding.resident_warm_init``), and the returned
+        init's buffers are fresh — ``sharding.solve_resident_batch`` donates
+        them.  Only the (padded B,) dirty-flag vector is uploaded.
+
+        Parameters
+        ----------
+        rbatch : ScenarioBatch
+            The window's :meth:`resident_batch` (passed in so one flush
+            builds it exactly once).
+
+        Returns
+        -------
+        (game.BatchWarmStart, np.ndarray)
+            The donation-safe padded init, and the (B,) host ``resolved``
+            flags (lanes that will iterate — dirty or never-solved).
+        """
+        if self._resident_mesh is None:
+            raise RuntimeError(
+                "window is not device-resident — call make_resident(mesh)")
+        if self._state is None:
+            return (sharding.resident_cold_init(rbatch),
+                    np.ones(self.batch_size, bool))
+        pad_b = rbatch.batch_size
+        dirty_full = np.zeros(pad_b, bool)
+        dirty_full[:self.batch_size] = self.dirty
+        dirty_dev = jax.device_put(
+            jnp.asarray(dirty_full),
+            sharding.lane_sharding(self._resident_mesh))
+        init = sharding.resident_warm_init(rbatch, self._state, dirty_dev)
+        # active == dirty here: a never-solved lane is always dirty (the
+        # only path creating solved=False rows, add_lane, also dirties)
+        return init, self.dirty.copy()
+
+    def _place_device_leaves(self) -> None:
+        """(Re-)establish the resident placement: pad the lane axis to the
+        mesh multiple when needed, device_put every leaf with lane
+        sharding, rebuild the device mask mirror from the host mask."""
+        mesh = self._resident_mesh
+        B, n_max = self.batch_size, self.n_max
+        pad_b = sharding.padded_lane_count(B, mesh.devices.size)
+        sh = sharding.lane_sharding(mesh)
+        rows = int(self._scn.A.shape[0])
+        if rows == B and pad_b > B:
+            host = ScenarioBatch(scenarios=self._scn,
+                                 mask=jnp.asarray(self._mask.copy()),
+                                 n_classes=jnp.asarray(self.n_classes))
+            self._scn = sharding.pad_batch_lanes(host, pad_b).scenarios
+        elif rows not in (B, pad_b):
+            raise AssertionError(
+                f"resident lane-axis invariant broken: {rows} device rows, "
+                f"B={B}, padded={pad_b}")
+        self._scn = jax.tree_util.tree_map(
+            lambda leaf: jax.device_put(leaf, sh), self._scn)
+        full = np.zeros((pad_b, n_max), bool)
+        full[:B] = self._mask
+        self._mask_dev = jax.device_put(jnp.asarray(full), sh)
+        self._n_classes_dev = self._n_classes_host = None
+        if self._state is not None:
+            self._state = jax.tree_util.tree_map(
+                lambda leaf: jax.device_put(leaf, sh),
+                sharding.pad_window_state(self._state, pad_b))
+
+    def _exit_residency(self) -> None:
+        """Materialize the logical host layout: trim mesh-padding lanes,
+        gather leaves back to the default device, drop the mask mirror."""
+        b = self.batch_size
+
+        def trim(leaf):
+            leaf = leaf[:b] if int(leaf.shape[0]) > b else leaf
+            return jax.device_put(leaf)
+
+        self._scn = jax.tree_util.tree_map(trim, self._scn)
+        if self._state is not None:
+            self._state = jax.tree_util.tree_map(trim, self._state)
+        self._mask_dev = None
+        self._n_classes_dev = self._n_classes_host = None
+        self._resident_mesh = None
+
+    @contextlib.contextmanager
+    def _host_geometry(self):
+        """Run a lane-geometry mutation (add/remove/compact) in the logical
+        host layout, then re-establish residency — so the geometry code
+        never has to reason about mesh padding."""
+        mesh = self._resident_mesh
+        if mesh is None:
+            yield
+            return
+        self._exit_residency()
+        try:
+            yield
+        finally:
+            self.make_resident(mesh)
 
     # ------------------------------------------------------------------ events
     def apply(self, event: StreamEvent) -> Optional[int]:
@@ -310,11 +546,15 @@ class AdmissionWindow:
         :meth:`apply` (same slot assignments, same growth schedule, same
         written values — the per-slot constants come from the same
         :func:`derive` closed forms), but the device work is *coalesced*:
-        every touched slot is written with ONE scatter per Scenario field,
-        so an epoch of K events costs ~20 dispatches instead of ~20·K.
-        This is the dispatch amortization that makes coalesced re-solve
-        epochs (:class:`EventEpoch`, ``allocator.solve_coalesced``) pay off
-        on dispatch-bound backends.
+        the whole epoch commits in ONE fused dispatch
+        (:func:`_epoch_commit`: every class field, the resident mask
+        mirror, vacated warm-state slots, lane capacities and the rho_hat
+        refresh), so an epoch of K events costs one dispatch instead of
+        ~20·K.  This is the dispatch amortization that makes coalesced
+        re-solve epochs (:class:`EventEpoch`, ``allocator.solve_coalesced``)
+        pay off on dispatch-bound backends — and it is what keeps
+        device-resident windows cheap, where every dispatch is a full
+        multi-device execution round.
 
         The update is atomic: events are validated against a host-side
         simulation of the whole epoch first, so an invalid event (unknown
@@ -389,13 +629,14 @@ class AdmissionWindow:
             else:
                 raise TypeError(f"unknown event {ev!r}")
 
-        # ---- commit: grow once, then one scatter per field
+        # ---- commit: grow once, host bookkeeping, then ONE fused dispatch
         if n_max > self.n_max:
             self.grow(n_max)
         dt = self._scn.A.dtype
+        li = si = vals_dev = occ_dev = state_r = None
         if staged:
             keys = sorted(staged)
-            rho_bar_np = np.asarray(self._scn.rho_bar)
+            rho_bar_np = self._rho_bar_host
             neutral = neutral_class_values(0.0)
             vals = {f: np.full(len(keys), neutral[f], np.dtype(dt))
                     for f in _CLASS_FIELDS}
@@ -411,9 +652,10 @@ class AdmissionWindow:
             pidx = _pad_idx(list(range(len(keys))))   # shape-bucketed scatter
             li = jnp.asarray([keys[i][0] for i in pidx])
             si = jnp.asarray([keys[i][1] for i in pidx])
-            self._scn = _scatter_class_fields(
-                self._scn, li, si,
-                {f: jnp.asarray(vals[f][pidx], dt) for f in _CLASS_FIELDS})
+            vals_dev = {f: jnp.asarray(vals[f][pidx], dt)
+                        for f in _CLASS_FIELDS}
+            occ_dev = jnp.asarray(
+                np.asarray([staged[keys[i]] is not None for i in pidx]))
             for k in keys:
                 occupied = staged[k] is not None
                 self._mask[k] = occupied
@@ -422,21 +664,28 @@ class AdmissionWindow:
                 else:
                     self._raw.pop(k, None)
             if vacated and self._state is not None:
-                vk = _pad_idx(sorted(vacated))
-                self._state = self._state._replace(
-                    r=self._state.r.at[jnp.asarray([k[0] for k in vk]),
-                                       jnp.asarray([k[1] for k in vk])
-                                       ].set(0.0))
+                state_r = self._state.r
+        R_lanes = R_vals = None
         if new_R:
             lanes_R = _pad_idx(sorted(new_R))
-            self._scn = self._scn.replace(
-                R=self._scn.R.at[jnp.asarray(lanes_R)].set(
-                    jnp.asarray([new_R[l] for l in lanes_R], dt)))
+            R_lanes = jnp.asarray(lanes_R)
+            R_vals = jnp.asarray([new_R[l] for l in lanes_R], dt)
         class_lanes = sorted({k[0] for k in staged})
+        hat_lanes = hat_rows = None
         if class_lanes:
             padded_lanes = _pad_idx(class_lanes)
-            self._scn = _refresh_hats(self._scn, jnp.asarray(padded_lanes),
-                                      jnp.asarray(self._mask[padded_lanes]))
+            hat_lanes = jnp.asarray(padded_lanes)
+            hat_rows = jnp.asarray(self._mask[padded_lanes])
+        if staged or new_R:
+            scn, mask_dev, new_state_r = _epoch_commit(
+                self._scn, self._mask_dev if staged else None, state_r,
+                li, si, vals_dev, occ_dev, R_lanes, R_vals,
+                hat_lanes, hat_rows)
+            self._scn = scn
+            if staged and self._mask_dev is not None:
+                self._mask_dev = mask_dev
+            if new_state_r is not None:
+                self._state = self._state._replace(r=new_state_r)
         for lane in {*class_lanes, *new_R}:
             self._mark_dirty(lane)
         return granted
@@ -459,6 +708,12 @@ class AdmissionWindow:
             (repads every leaf) only when the lane's row is full.
         """
         self._check_lane(lane)
+        missing = set(RAW_CLASS_FIELDS) - set(params)
+        if missing:
+            # validate BEFORE any mutation: an aborted admission must leave
+            # both the host book-keeping and (for resident windows) the
+            # device buffers exactly at the last consistent state
+            raise ValueError(f"class params missing fields {sorted(missing)}")
         free = np.flatnonzero(~self._mask[lane])
         if free.size == 0:
             self.grow(grown_n_max(self.n_max, self.growth_factor))
@@ -466,7 +721,7 @@ class AdmissionWindow:
         slot = int(free[0])
         self._raw[(lane, slot)] = dict(params)
         self._write_class(lane, slot, dict(params))
-        self._mask[lane, slot] = True
+        self._set_mask(lane, slot, True)
         self._refresh_rho_hat(lane)
         self._mark_dirty(lane)
         return slot
@@ -475,11 +730,11 @@ class AdmissionWindow:
         """Remove the class at (lane, slot); the slot becomes recyclable."""
         self._check_slot(lane, slot)
         dt = self._scn.A.dtype
-        neutral = neutral_class_values(float(self._scn.rho_bar[lane]))
+        neutral = neutral_class_values(float(self._rho_bar_host[lane]))
         self._scn = _scatter_class_fields(
             self._scn, jnp.asarray([lane]), jnp.asarray([slot]),
             {f: jnp.asarray([neutral[f]], dt) for f in _CLASS_FIELDS})
-        self._mask[lane, slot] = False
+        self._set_mask(lane, slot, False)
         self._raw.pop((lane, slot), None)
         self._refresh_rho_hat(lane)
         if self._state is not None:
@@ -526,15 +781,20 @@ class AdmissionWindow:
         if new_n_max <= old:
             raise ValueError(f"new_n_max={new_n_max} must exceed {old}")
         B, pad = self.batch_size, new_n_max - old
+        # device leaves may carry mesh-padding lanes (resident layout);
+        # grow their actual row count, not the logical B (padding lanes'
+        # rho_bar is 1, so their rho_up fill stays the inert 1)
+        rows = int(self._scn.A.shape[0])
         dt = self._scn.A.dtype
         neutral = neutral_class_values(0.0)
         kw = {}
         for f in _CLASS_FIELDS:
             leaf = getattr(self._scn, f)
             if f == "rho_up":
-                fill = jnp.broadcast_to(self._scn.rho_bar[:, None], (B, pad))
+                fill = jnp.broadcast_to(self._scn.rho_bar[:, None],
+                                        (rows, pad))
             else:
-                fill = jnp.full((B, pad), neutral[f], dt)
+                fill = jnp.full((rows, pad), neutral[f], dt)
             kw[f] = jnp.concatenate([leaf, fill.astype(dt)], axis=1)
         self._scn = self._scn.replace(**kw)
         self._mask = np.concatenate(
@@ -542,7 +802,13 @@ class AdmissionWindow:
         if self._state is not None:
             st = self._state
             self._state = st._replace(
-                r=jnp.concatenate([st.r, jnp.zeros((B, pad), dt)], axis=1))
+                r=jnp.concatenate(
+                    [st.r, jnp.zeros((int(st.r.shape[0]), pad), dt)],
+                    axis=1))
+        if self._resident_mesh is not None:
+            # column concats may leave fresh leaves unplaced — re-commit
+            # everything (device_put is a no-op for already-placed leaves)
+            self._place_device_leaves()
 
     # ------------------------------------------------------- dynamic lanes
     def add_lane(self, scn: Optional[Scenario] = None, *,
@@ -581,43 +847,47 @@ class AdmissionWindow:
         """
         if scn is None and (R is None or rho_bar is None):
             raise ValueError("an empty lane needs explicit R= and rho_bar=")
-        if scn is not None and scn.n > self.n_max:
-            self.grow(int(scn.n))
-        b = self.batch_size
-        dt = self._scn.A.dtype
-        self._scn = sharding.pad_batch_lanes(self.batch, b + 1).scenarios
-        self._mask = np.concatenate(
-            [self._mask, np.zeros((1, self.n_max), bool)], axis=0)
-        if scn is not None:
-            row = pad_scenario(scn, self.n_max)
-            self._scn = self._scn.replace(
-                **{f.name: getattr(self._scn, f.name).at[b].set(
-                       jnp.asarray(getattr(row, f.name), dt))
-                   for f in dataclasses.fields(Scenario)})
-            self._mask[b, :scn.n] = True
-            cols = {f: np.asarray(getattr(scn, f)) for f in RAW_CLASS_FIELDS}
-            for i in range(scn.n):
-                self._raw[(b, i)] = {f: float(cols[f][i])
-                                     for f in RAW_CLASS_FIELDS}
-        else:
-            self._scn = self._scn.replace(
-                R=self._scn.R.at[b].set(float(R)),
-                rho_bar=self._scn.rho_bar.at[b].set(float(rho_bar)),
-                rho_hat=self._scn.rho_hat.at[b].set(float(rho_bar)),
-                rho_up=self._scn.rho_up.at[b].set(
-                    jnp.full((self.n_max,), float(rho_bar), dt)))
-        if self._state is not None:
-            st = self._state
-            self._state = st._replace(
-                r=jnp.concatenate([st.r, jnp.zeros((1, self.n_max), dt)],
-                                  axis=0),
-                rho=jnp.concatenate([st.rho, jnp.ones((1,), dt)]),
-                lane_iters=jnp.concatenate(
-                    [st.lane_iters, jnp.zeros((1,), jnp.int32)]),
-                solved=jnp.concatenate([st.solved, jnp.zeros((1,), bool)]))
-        self.dirty = np.append(self.dirty, True)
-        self.baseline_totals = np.append(self.baseline_totals, np.nan)
-        self.baseline_stale = np.append(self.baseline_stale, True)
+        with self._host_geometry():
+            if scn is not None and scn.n > self.n_max:
+                self.grow(int(scn.n))
+            b = self.batch_size
+            dt = self._scn.A.dtype
+            self._scn = sharding.pad_batch_lanes(self.batch, b + 1).scenarios
+            self._mask = np.concatenate(
+                [self._mask, np.zeros((1, self.n_max), bool)], axis=0)
+            if scn is not None:
+                row = pad_scenario(scn, self.n_max)
+                self._scn = self._scn.replace(
+                    **{f.name: getattr(self._scn, f.name).at[b].set(
+                           jnp.asarray(getattr(row, f.name), dt))
+                       for f in dataclasses.fields(Scenario)})
+                self._mask[b, :scn.n] = True
+                cols = {f: np.asarray(getattr(scn, f))
+                        for f in RAW_CLASS_FIELDS}
+                for i in range(scn.n):
+                    self._raw[(b, i)] = {f: float(cols[f][i])
+                                         for f in RAW_CLASS_FIELDS}
+            else:
+                self._scn = self._scn.replace(
+                    R=self._scn.R.at[b].set(float(R)),
+                    rho_bar=self._scn.rho_bar.at[b].set(float(rho_bar)),
+                    rho_hat=self._scn.rho_hat.at[b].set(float(rho_bar)),
+                    rho_up=self._scn.rho_up.at[b].set(
+                        jnp.full((self.n_max,), float(rho_bar), dt)))
+            if self._state is not None:
+                st = self._state
+                self._state = st._replace(
+                    r=jnp.concatenate([st.r, jnp.zeros((1, self.n_max), dt)],
+                                      axis=0),
+                    rho=jnp.concatenate([st.rho, jnp.ones((1,), dt)]),
+                    lane_iters=jnp.concatenate(
+                        [st.lane_iters, jnp.zeros((1,), jnp.int32)]),
+                    solved=jnp.concatenate([st.solved,
+                                            jnp.zeros((1,), bool)]))
+            self.dirty = np.append(self.dirty, True)
+            self.baseline_totals = np.append(self.baseline_totals, np.nan)
+            self.baseline_stale = np.append(self.baseline_stale, True)
+            self._rho_bar_host = np.asarray(self._scn.rho_bar, float).copy()
         return b
 
     def remove_lane(self, lane: int) -> None:
@@ -632,22 +902,25 @@ class AdmissionWindow:
         self._check_lane(lane)
         if self.batch_size == 1:
             raise ValueError("cannot remove the last lane")
-        self._scn = self._scn.replace(
-            **{f.name: jnp.delete(getattr(self._scn, f.name), lane, axis=0)
-               for f in dataclasses.fields(Scenario)})
-        self._mask = np.delete(self._mask, lane, axis=0)
-        self.dirty = np.delete(self.dirty, lane)
-        self.baseline_totals = np.delete(self.baseline_totals, lane)
-        self.baseline_stale = np.delete(self.baseline_stale, lane)
-        if self._state is not None:
-            st = self._state
-            self._state = st._replace(
-                r=jnp.delete(st.r, lane, axis=0),
-                rho=jnp.delete(st.rho, lane),
-                lane_iters=jnp.delete(st.lane_iters, lane),
-                solved=jnp.delete(st.solved, lane))
-        self._raw = {(b - (b > lane), s): raw
-                     for (b, s), raw in self._raw.items() if b != lane}
+        with self._host_geometry():
+            self._scn = self._scn.replace(
+                **{f.name: jnp.delete(getattr(self._scn, f.name), lane,
+                                      axis=0)
+                   for f in dataclasses.fields(Scenario)})
+            self._mask = np.delete(self._mask, lane, axis=0)
+            self.dirty = np.delete(self.dirty, lane)
+            self.baseline_totals = np.delete(self.baseline_totals, lane)
+            self.baseline_stale = np.delete(self.baseline_stale, lane)
+            if self._state is not None:
+                st = self._state
+                self._state = st._replace(
+                    r=jnp.delete(st.r, lane, axis=0),
+                    rho=jnp.delete(st.rho, lane),
+                    lane_iters=jnp.delete(st.lane_iters, lane),
+                    solved=jnp.delete(st.solved, lane))
+            self._raw = {(b - (b > lane), s): raw
+                         for (b, s), raw in self._raw.items() if b != lane}
+            self._rho_bar_host = np.delete(self._rho_bar_host, lane)
 
     def compact(self, *, n_max: Optional[int] = None) -> np.ndarray:
         """Re-pack every lane's admitted classes into a slot prefix.
@@ -701,28 +974,29 @@ class AdmissionWindow:
         new_mask = np.arange(target)[None, :] < counts[:, None]
         if target == old and np.array_equal(new_mask, self._mask):
             return slot_map                      # already packed at this width
-        dt = self._scn.A.dtype
-        srcj, nm = jnp.asarray(src), jnp.asarray(new_mask)
-        neutral = neutral_class_values(0.0)
-        kw = {}
-        for f in _CLASS_FIELDS:
-            gathered = jnp.take_along_axis(getattr(self._scn, f), srcj,
-                                           axis=1)
-            if f == "rho_up":
-                fill = jnp.broadcast_to(self._scn.rho_bar[:, None],
-                                        (B, target))
-            else:
-                fill = jnp.full((B, target), neutral[f], dt)
-            kw[f] = jnp.where(nm, gathered, fill).astype(dt)
-        self._scn = self._scn.replace(**kw)
-        self._mask = new_mask
-        self._raw = {(b, int(slot_map[b, s])): raw
-                     for (b, s), raw in self._raw.items()}
-        if self._state is not None:
-            st = self._state
-            self._state = st._replace(
-                r=jnp.where(nm, jnp.take_along_axis(st.r, srcj, axis=1),
-                            0.0).astype(dt))
+        with self._host_geometry():
+            dt = self._scn.A.dtype
+            srcj, nm = jnp.asarray(src), jnp.asarray(new_mask)
+            neutral = neutral_class_values(0.0)
+            kw = {}
+            for f in _CLASS_FIELDS:
+                gathered = jnp.take_along_axis(getattr(self._scn, f), srcj,
+                                               axis=1)
+                if f == "rho_up":
+                    fill = jnp.broadcast_to(self._scn.rho_bar[:, None],
+                                            (B, target))
+                else:
+                    fill = jnp.full((B, target), neutral[f], dt)
+                kw[f] = jnp.where(nm, gathered, fill).astype(dt)
+            self._scn = self._scn.replace(**kw)
+            self._mask = new_mask
+            self._raw = {(b, int(slot_map[b, s])): raw
+                         for (b, s), raw in self._raw.items()}
+            if self._state is not None:
+                st = self._state
+                self._state = st._replace(
+                    r=jnp.where(nm, jnp.take_along_axis(st.r, srcj, axis=1),
+                                0.0).astype(dt))
         return slot_map
 
     # ------------------------------------------------------------ solver state
@@ -738,6 +1012,10 @@ class AdmissionWindow:
             reproduce the cold trajectory exactly (see module docstring for
             why bids are never carried over).
         """
+        if self._resident_mesh is not None:
+            raise RuntimeError(
+                "resident windows build their init on-device — use "
+                "resident_warm_start (or release_resident first)")
         cold = game.cold_start(self.batch)
         if self._state is None:
             return cold
@@ -759,7 +1037,9 @@ class AdmissionWindow:
         Parameters
         ----------
         r : jnp.ndarray
-            (B, n_max) equilibrium allocation of the just-finished solve.
+            (B, n_max) equilibrium allocation of the just-finished solve
+            (a resident solve commits the PADDED lane count — the mesh
+            padding rows stay part of the stored state).
         rho : jnp.ndarray
             (B,) final RM prices (``Solution.aux``).
         lane_iters : jnp.ndarray
@@ -770,10 +1050,17 @@ class AdmissionWindow:
             r=jnp.asarray(r, dt),
             rho=jnp.asarray(rho, dt),
             lane_iters=jnp.asarray(lane_iters, jnp.int32),
-            solved=jnp.ones((self.batch_size,), bool))
+            solved=jnp.ones((int(np.shape(r)[0]),), bool))
         self.dirty[:] = False
 
     # -------------------------------------------------------------- internals
+    def _set_mask(self, lane: int, slot: int, occupied: bool) -> None:
+        """One slot's occupancy, kept in sync on the host mask and (when
+        resident) the device mirror — the single-event write path."""
+        self._mask[lane, slot] = occupied
+        if self._mask_dev is not None:
+            self._mask_dev = self._mask_dev.at[lane, slot].set(occupied)
+
     def _mark_dirty(self, lane: int) -> None:
         self.dirty[lane] = True
         self.baseline_stale[lane] = True

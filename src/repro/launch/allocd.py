@@ -15,12 +15,19 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import sys
+
+# --resident shards tenant state over a lane mesh; on a bare CPU the forced
+# host-device topology must be configured before jax initializes a backend
+if "--resident" in sys.argv or "--devices" in sys.argv:
+    from repro._env import force_host_devices
+    force_host_devices()
 
 import jax
 import numpy as np
 
 from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
-                        Policies, RoundingPolicy, SolverConfig,
+                        Policies, RoundingPolicy, SolverConfig, lane_mesh,
                         sample_event_trace, sample_scenario)
 from repro.serving.allocd import (AllocDaemon, drive_open_loop,
                                   flash_crowd_times, interleave_traces,
@@ -32,8 +39,12 @@ def make_engine(args):
                                   max_events=args.flush_every)
              if args.deadline_slack is not None
              else FlushPolicy(max_events=args.flush_every))
+    resident = getattr(args, "resident", False)
+    devices = getattr(args, "devices", None)
+    mesh = lane_mesh(devices) if (resident or devices) else None
     return CapacityEngine(
-        SolverConfig(),
+        SolverConfig(mesh=mesh,
+                     residency="resident" if resident else "round-trip"),
         Policies(flush=flush,
                  rounding=RoundingPolicy(enabled=args.round)))
 
@@ -97,6 +108,13 @@ def main(argv=None):
     ap.add_argument("--deadline-slack", type=float, default=None,
                     help="enable FlushPolicy.deadline with this slack [s]")
     ap.add_argument("--queue-limit", type=int, default=4096)
+    ap.add_argument("--resident", action="store_true",
+                    help="keep tenant window state device-resident on a "
+                         "lane mesh across flushes "
+                         "(SolverConfig(residency='resident'))")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="lane-mesh size for --resident / sharded solves "
+                         "(default: every addressable device)")
     ap.add_argument("--round", action="store_true",
                     help="run Algorithm 4.2 integerization at every flush")
     ap.add_argument("--seed", type=int, default=0)

@@ -200,6 +200,11 @@ class AllocDaemon:
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
         session = self.engine.open_window(lanes, n_max=n_max)
+        if self.engine.config.residency == "resident":
+            # opt in at registration, not first flush: placement cost lands
+            # here instead of inside the first admission's latency, and the
+            # tenant's state stays mesh-resident for the daemon's lifetime
+            session.window.make_resident(self.engine.config.mesh)
         self._tenants[name] = _Tenant(name, session)
         return session
 

@@ -73,6 +73,21 @@ def test_gate_fails_engine_path_mismatch(tmp_path, monkeypatch):
     assert run_gate(again, base, fresh, monkeypatch) == 0
 
 
+def test_gate_fails_residency_mismatch(tmp_path, monkeypatch):
+    """The `residency` tag is config: device-resident and host-round-trip
+    streaming measure different machines (ISSUE 7) — a resident record
+    must never be silently gated against a round-trip baseline."""
+    base = record(events_per_sec=300.0)
+    fresh = record(events_per_sec=300.0)
+    base["results"]["batch"]["residency"] = "round-trip"
+    fresh["results"]["batch"]["residency"] = "resident"
+    assert run_gate(tmp_path, base, fresh, monkeypatch) == 1
+    fresh["results"]["batch"]["residency"] = "round-trip"
+    again = tmp_path / "matching-residency"
+    again.mkdir()
+    assert run_gate(again, base, fresh, monkeypatch) == 0
+
+
 def test_gate_latency_ceiling_passes_within_band(tmp_path, monkeypatch):
     """Latency metrics gate in the opposite direction: lower is better,
     so a drop is always fine and a rise passes only inside the ceiling."""

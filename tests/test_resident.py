@@ -1,0 +1,338 @@
+"""Randomized trace-conformance harness for device-resident window sessions.
+
+The residency contract (``SolverConfig(residency="resident")``, ISSUE 7):
+a ``WindowSession`` whose state lives lane-sharded on the mesh across
+flushes — events scattered into resident arrays, warm-start buffers built
+on-device and donated to the solve — produces flush-boundary reports
+BIT-EQUAL to the classic host-round-trip path under random event traces,
+through growth past ``n_max``, mid-stream departures, compaction (slot_map
+permutation), lane add/remove crossing mesh-padding boundaries, and
+abort-then-reuse.  Property tests (hypothesis, loud skip when absent)
+check the resident scatter path against a host-side epoch simulation for
+arbitrary event prefixes, and that buffer donation never invalidates
+arrays inside already-returned ``WindowSolveReport``s (the PR 6 zero-copy
+aliasing bug class).
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (AdmissionWindow, CapacityEngine, ClassArrival,
+                        ClassDeparture, FlushPolicy, Policies,
+                        RoundingPolicy, SolverConfig, lane_mesh,
+                        sample_class_params, sample_event_trace,
+                        sample_scenario)
+
+D = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    D < 2, reason="needs >= 2 devices (conftest forces 8 on CPU)")
+
+B, N, N_MAX = 5, 4, 8          # one shared window shape: compile once
+MESH_D = min(4, D)             # small mesh keeps per-dispatch cost down
+
+
+def make_window(seed=0, *, lanes=B, n_max=N_MAX):
+    key = jax.random.PRNGKey(seed)
+    scns = [sample_scenario(jax.random.fold_in(key, lane), N,
+                            capacity_factor=1.3) for lane in range(lanes)]
+    return AdmissionWindow(scns, n_max=n_max)
+
+
+def make_session(residency, *, flush_k=1, seed=0, lanes=B, n_max=N_MAX,
+                 mesh=None):
+    eng = CapacityEngine(
+        SolverConfig(mesh=mesh or lane_mesh(MESH_D), residency=residency),
+        Policies(flush=FlushPolicy(max_events=flush_k),
+                 rounding=RoundingPolicy(False)))
+    return eng.open_window(make_window(seed, lanes=lanes, n_max=n_max))
+
+
+def session_pair(**kw):
+    """(resident, round-trip) sessions over identically seeded windows."""
+    return make_session("resident", **kw), make_session("round-trip", **kw)
+
+
+def assert_reports_bitequal(a, b):
+    la = jax.tree_util.tree_flatten(a.fractional)[0]
+    lb = jax.tree_util.tree_flatten(b.fractional)[0]
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(a.iters), np.asarray(b.iters))
+    np.testing.assert_array_equal(a.resolved, b.resolved)
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    np.testing.assert_array_equal(np.asarray(a.n_classes),
+                                  np.asarray(b.n_classes))
+
+
+def window_state_equal(w_res, w_ref):
+    """The resident window's LOGICAL state equals the host window's."""
+    np.testing.assert_array_equal(w_res._mask, w_ref._mask)
+    assert w_res._raw == w_ref._raw
+    a, b = w_res.batch, w_ref.batch
+    for x, y in zip(jax.tree_util.tree_flatten(a)[0],
+                    jax.tree_util.tree_flatten(b)[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# Randomized trace conformance: resident == round-trip, bit for bit
+# --------------------------------------------------------------------------
+
+@needs_devices
+@pytest.mark.parametrize("seed", [11, 23])
+def test_random_trace_bitequal(seed):
+    """Per-event flushes over a random trace (arrivals, departures, SLA
+    edits, capacity changes — arrivals drive growth past n_max)."""
+    s_res, s_rt = session_pair(seed=seed)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    assert s_res.window.is_resident and not s_rt.window.is_resident
+    trace = sample_event_trace(seed + 1, make_window(seed), 20)
+    for ev in trace:
+        s_res.window.apply(ev)
+        s_rt.window.apply(ev)
+        assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    assert s_res.window.is_resident        # residency survived the trace
+
+
+@needs_devices
+def test_coalesced_epochs_bitequal():
+    """The coalesced path (one fused epoch commit + one resident solve per
+    flush) lands on the same flush-boundary equilibria."""
+    s_res, s_rt = session_pair(flush_k=4, seed=3)
+    s_res.solve(), s_rt.solve()
+    trace = sample_event_trace(7, make_window(3), 24)
+    got = list(s_res.stream(trace))
+    want = list(s_rt.stream(trace))
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        assert_reports_bitequal(a, b)
+
+
+@needs_devices
+def test_growth_past_n_max():
+    """Arrivals overflowing a lane grow the padded width in place; the
+    resident leaves re-pad on the mesh without a host round-trip."""
+    s_res, s_rt = session_pair(seed=5, n_max=N)      # zero headroom
+    s_res.solve(), s_rt.solve()
+    for i in range(3):                               # forces two growths
+        params = dict(sample_class_params(jax.random.PRNGKey(100 + i)))
+        assert s_res.window.arrive(1, **params) == s_rt.window.arrive(
+            1, **params)
+        assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    assert s_res.window.n_max == s_rt.window.n_max > N
+    assert s_res.window.is_resident
+
+
+@needs_devices
+def test_departures_and_compaction_slot_map():
+    """Mid-stream departures fragment the window; compaction yields the
+    identical slot_map permutation on both paths and stays bit-equal
+    after (clean lanes frozen through the compaction)."""
+    s_res, s_rt = session_pair(seed=9)
+    s_res.solve(), s_rt.solve()
+    for lane, slot in [(0, 1), (2, 0), (2, 2), (4, 3)]:
+        s_res.window.depart(lane, slot)
+        s_rt.window.depart(lane, slot)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    m_res, m_rt = s_res.compact(), s_rt.compact()
+    np.testing.assert_array_equal(m_res, m_rt)
+    assert s_res.window.is_resident                  # re-established
+    assert s_res.window.n_max == s_rt.window.n_max < N_MAX
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    ev = ClassArrival(lane=2, params=dict(
+        sample_class_params(jax.random.PRNGKey(77))))
+    s_res.window.apply(ev), s_rt.window.apply(ev)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+
+
+@needs_devices
+def test_lane_count_crossing_mesh_padding():
+    """add_lane / remove_lane across the mesh-multiple boundary: the
+    padded lane count changes (5 -> pad 8, 9 -> pad 12 on a 4-device
+    mesh), residency is dropped and re-established internally, results
+    stay bit-equal throughout."""
+    s_res, s_rt = session_pair(seed=13)
+    s_res.solve(), s_rt.solve()
+    key = jax.random.PRNGKey(500)
+    for i in range(4):                               # B: 5 -> 9
+        scn = sample_scenario(jax.random.fold_in(key, i), N,
+                              capacity_factor=1.3)
+        assert (s_res.window.add_lane(scn)
+                == s_rt.window.add_lane(scn))
+        assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    assert s_res.window.batch_size == 9
+    for lane in (6, 0):                              # B: 9 -> 7
+        s_res.window.remove_lane(lane)
+        s_rt.window.remove_lane(lane)
+        assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    assert s_res.window.is_resident
+
+
+@needs_devices
+def test_release_resident_indistinguishable():
+    """release_resident returns the window to the classic layout: same
+    logical state, and a round-trip engine solves it bit-equal."""
+    s_res, s_rt = session_pair(seed=17)
+    s_res.solve(), s_rt.solve()
+    for ev in sample_event_trace(18, make_window(17), 6):
+        s_res.window.apply(ev), s_rt.window.apply(ev)
+    s_res.window.release_resident()
+    assert not s_res.window.is_resident
+    window_state_equal(s_res.window, s_rt.window)
+    eng_rt = CapacityEngine(
+        SolverConfig(mesh=lane_mesh(MESH_D)),
+        Policies(flush=FlushPolicy(max_events=1),
+                 rounding=RoundingPolicy(False)))
+    assert_reports_bitequal(eng_rt.open_window(s_res.window).solve(),
+                            s_rt.solve())
+
+
+# --------------------------------------------------------------------------
+# Abort-then-reuse: drain / discard_pending on a resident session
+# --------------------------------------------------------------------------
+
+@needs_devices
+def test_abort_discard_pending_then_reuse():
+    """discard_pending mid-epoch leaves the resident device buffers at the
+    last consistent state — the already-flushed prefix is preserved
+    on-device and the session keeps producing bit-equal reports."""
+    s_res, s_rt = session_pair(flush_k=3, seed=21)
+    s_res.solve(), s_rt.solve()
+    trace = sample_event_trace(22, make_window(21), 10)
+    for ev in trace[:6]:                             # two full flushes
+        s_res.apply(ev), s_rt.apply(ev)
+    s_res.apply(trace[6]), s_rt.apply(trace[6])      # one buffered event
+    dropped_res = s_res.discard_pending()
+    dropped_rt = s_rt.discard_pending()
+    assert dropped_res == dropped_rt == (trace[6],)
+    window_state_equal(s_res.window, s_rt.window)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+    for ev in trace[7:]:                             # session is reusable
+        a, b = s_res.apply(ev), s_rt.apply(ev)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert_reports_bitequal(a, b)
+
+
+@needs_devices
+def test_abort_invalid_event_keeps_residency_consistent():
+    """A rejected event (missing SLA fields / bad slot) must not mutate
+    either the host book-keeping or the resident device buffers."""
+    s_res, s_rt = session_pair(seed=25)
+    s_res.solve(), s_rt.solve()
+    for w in (s_res.window, s_rt.window):
+        with pytest.raises(ValueError):
+            w.arrive(0, A=1.0)                       # missing raw fields
+        with pytest.raises(IndexError):
+            w.apply_epoch([ClassDeparture(lane=0, slot=N_MAX - 1)])
+    window_state_equal(s_res.window, s_rt.window)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+
+
+@needs_devices
+def test_drain_folds_without_solving():
+    """drain() folds the buffered epoch into the resident arrays without a
+    re-solve; the following solve is bit-equal to the round-trip path."""
+    s_res, s_rt = session_pair(flush_k=100, seed=29)
+    s_res.solve(), s_rt.solve()
+    trace = sample_event_trace(30, make_window(29), 8)
+    for ev in trace:
+        assert s_res.apply(ev) is None and s_rt.apply(ev) is None
+    assert s_res.drain() == s_rt.drain()
+    window_state_equal(s_res.window, s_rt.window)
+    assert_reports_bitequal(s_res.solve(), s_rt.solve())
+
+
+# --------------------------------------------------------------------------
+# Engine plumbing and guard rails
+# --------------------------------------------------------------------------
+
+def test_residency_config_validation():
+    with pytest.raises(ValueError):
+        CapacityEngine(SolverConfig(residency="resident"))   # needs a mesh
+    with pytest.raises(ValueError):
+        CapacityEngine(SolverConfig(residency="wat"))
+    assert "residency" not in SolverConfig().fingerprint()
+    fp = SolverConfig(mesh=lane_mesh(1), residency="resident").fingerprint()
+    assert "residency=resident" in fp
+
+
+@needs_devices
+def test_host_warm_start_refused_while_resident():
+    """warm_start() is the host path; on a resident window it would build
+    an init at the wrong (unpadded) lane count — refuse loudly."""
+    s_res, _ = session_pair(seed=33)
+    s_res.solve()
+    with pytest.raises(RuntimeError):
+        s_res.window.warm_start()
+    s_res.window.release_resident()
+    assert s_res.window.warm_start() is not None
+
+
+def test_make_resident_rejects_2d_mesh():
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    w = make_window(37)
+    with pytest.raises(ValueError):
+        w.make_resident(Mesh(devs, ("a", "b")))
+
+
+# --------------------------------------------------------------------------
+# Property tests (hypothesis; loud skip when not installed)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(0, 12))
+def test_prop_resident_scatter_equals_host_epoch(seed, k):
+    """Arbitrary event prefixes, folded epoch-wise into a RESIDENT window,
+    leave device leaves (trimmed of mesh padding) bit-identical to a
+    plain host-layout window that applied the same epochs."""
+    if D < 2:
+        pytest.skip("needs >= 2 devices")
+    w_res, w_host = make_window(seed), make_window(seed)
+    w_res.make_resident(lane_mesh(MESH_D))
+    trace = sample_event_trace(seed + 1, make_window(seed), 12)[:k]
+    for i in range(0, len(trace), 3):
+        epoch = trace[i:i + 3]
+        assert w_res.apply_epoch(epoch) == w_host.apply_epoch(epoch)
+    window_state_equal(w_res, w_host)
+    # the device mask mirror agrees with the authoritative host mask
+    pad_b = int(w_res._mask_dev.shape[0])
+    full = np.zeros((pad_b, w_res.n_max), bool)
+    full[:w_res.batch_size] = w_res._mask
+    np.testing.assert_array_equal(np.asarray(w_res._mask_dev), full)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_prop_donation_never_corrupts_returned_reports(seed):
+    """Regression guard for the PR 6 zero-copy aliasing bug class: the
+    resident solve donates its warm-start init, and later flushes keep
+    donating — no buffer inside an already-returned WindowSolveReport may
+    ever be invalidated or change value."""
+    if D < 2:
+        pytest.skip("needs >= 2 devices")
+    s_res, _ = session_pair(seed=seed % 100)
+    reports, snapshots = [], []
+    trace = sample_event_trace(seed + 1, make_window(seed % 100), 8)
+    rep = s_res.solve()
+    reports.append(rep)
+    snapshots.append(jax.tree_util.tree_map(
+        lambda leaf: np.asarray(leaf).copy(), rep.fractional))
+    for ev in trace:
+        s_res.window.apply(ev)
+        rep = s_res.solve()
+        reports.append(rep)
+        snapshots.append(jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf).copy(), rep.fractional))
+    for rep, snap in zip(reports, snapshots):
+        got = jax.tree_util.tree_flatten(rep.fractional)[0]
+        want = jax.tree_util.tree_flatten(snap)[0]
+        for x, y in zip(got, want):      # a donated buffer would raise here
+            np.testing.assert_array_equal(np.asarray(x), y)
+
+
+if not HAVE_HYPOTHESIS:
+    pass  # @given shims the tests into loud skips (tests/_hypothesis_compat)
