@@ -1,23 +1,35 @@
 """Admission daemon (allocd) latency + sustained throughput benchmark.
 
 Drives the asyncio :class:`repro.serving.allocd.AllocDaemon` — many tenant
-``WindowSession``s over one shared ``CapacityEngine`` — under the two load
+``WindowSession``s over one shared ``CapacityEngine`` — under the load
 regimes the Hadoop utilization literature reports:
 
 * **poisson** — open-loop Poisson arrivals at ``--rate`` events/s: the
-  steady diurnal-baseline regime.  Admission latency (scheduled arrival
-  time to covering-flush completion, so queueing delay is included) is
-  the headline metric.
+  steady baseline regime.  Admission latency (scheduled arrival time to
+  covering-flush completion, so queueing delay is included) is the
+  headline metric.
 * **flash** — the same baseline with the middle 40% of events arriving
   8x faster: the flash-crowd spike.  p99 admission latency under the
   burst and the post-burst drain throughput are what the daemon's
   deadline-aware, slack-ordered flush scheduling is for.
+* **diurnal** — sinusoidal rate modulation between the baseline and a 4x
+  peak over two full cycles: the smooth day/night swing, where the flush
+  cadence has time to adapt.
 
-Per arrival process the record carries ``admission_p50_ms`` /
+``--wire`` additionally measures every profile over the daemon's socket
+transport (``repro.serving.server`` / ``client`` on a loopback
+connection): latency is then *end-to-end* — offer frame out to flush
+frame decoded — so framing, JSON codec and scheduling overhead are all
+on the clock.  Wire sections are named ``wire_<arrival>`` and tagged
+``transport: "wire"``; in-process sections carry ``transport:
+"inproc"``.  Both ``transport`` and ``arrival`` are config keys in
+``scripts/check_bench.py``, so socket and in-process records (or
+different arrival processes) are never silently compared.
+
+Per section the record carries ``admission_p50_ms`` /
 ``admission_p99_ms`` (gated as *latency*: fresh must not exceed the
 baseline by more than the latency band) and ``events_per_sec`` (gated as
-throughput).  Every section carries an ``arrival`` tag in its config keys
-so Poisson and flash-crowd records are never silently compared.
+throughput).
 
 Before the timed run, every tenant's trace is replayed through an offline
 ``WindowSession.stream`` — this both warms the jitted solver programs
@@ -39,9 +51,10 @@ from benchmarks.common import write_bench_json
 from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
                         Policies, RoundingPolicy, SolverConfig,
                         sample_event_trace, sample_scenario)
-from repro.serving.allocd import (AllocDaemon, drive_open_loop,
-                                  flash_crowd_times, interleave_traces,
-                                  poisson_times)
+from repro.serving.allocd import (ARRIVAL_PROFILES, AllocDaemon,
+                                  drive_open_loop, interleave_traces)
+from repro.serving.client import AllocClient
+from repro.serving.server import AllocServer
 
 
 def make_engine(flush_k: int) -> CapacityEngine:
@@ -51,13 +64,16 @@ def make_engine(flush_k: int) -> CapacityEngine:
                  rounding=RoundingPolicy(enabled=False)))
 
 
-def make_window(tenant: int, lanes: int, n: int, seed: int
-                ) -> AdmissionWindow:
+def make_lanes(tenant: int, lanes: int, n: int, seed: int) -> list:
     key = jax.random.PRNGKey(seed)
-    scns = [sample_scenario(jax.random.fold_in(key, tenant * 97 + lane),
+    return [sample_scenario(jax.random.fold_in(key, tenant * 97 + lane),
                             n, capacity_factor=1.3)
             for lane in range(lanes)]
-    return AdmissionWindow(scns, n_max=2 * n)
+
+
+def make_window(tenant: int, lanes: int, n: int, seed: int
+                ) -> AdmissionWindow:
+    return AdmissionWindow(make_lanes(tenant, lanes, n, seed), n_max=2 * n)
 
 
 def assert_conformant(name, got, want):
@@ -83,9 +99,42 @@ async def _drive(engine, traces, windows, times, queue_limit):
     return daemon
 
 
+async def _drive_wire(engine, traces, lanes_by_tenant, n_max, times,
+                      queue_limit):
+    daemon = AllocDaemon(engine, queue_limit=queue_limit)
+    server = AllocServer(daemon)
+    await server.start()
+    client = await AllocClient.connect(*server.address)
+    for name, scns in lanes_by_tenant.items():
+        await client.register_tenant(name, scns, n_max=n_max)
+    schedule = interleave_traces(traces, times)
+    t0 = time.perf_counter()
+    tickets = []
+    for t_off, tenant, event in schedule:
+        delay = (t0 + t_off) - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tickets.append(client.offer(tenant, event, t_submit=t0 + t_off))
+    await client.drain()
+    for tk in tickets:
+        assert await tk.result() is not None, "wire benchmark event lost"
+    reports = {name: list(client.reports(name)) for name in traces}
+    rejected = daemon.rejected
+    flushes = sum(daemon.tenant_stats(n)["flushes"] for n in traces)
+    await client.close()
+    await server.close()
+    lat = np.asarray([tk.t_done - tk.t_submit for tk in tickets])
+    elapsed = max(max(tk.t_done for tk in tickets) - t0, 1e-9)
+    return reports, rejected, {
+        "events_per_sec": float(len(tickets) / elapsed),
+        "admission_p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "admission_p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "flushes": float(flushes), "elapsed_s": float(elapsed)}
+
+
 def run_arrival(arrival: str, *, tenants: int, lanes: int, n: int,
                 n_events: int, rate: float, flush_k: int, seed: int,
-                queue_limit: int) -> dict:
+                queue_limit: int, transport: str = "inproc") -> dict:
     engine = make_engine(flush_k)
     traces = {f"tenant-{t}": sample_event_trace(
         seed + 7919 * t, make_window(t, lanes, n, seed), n_events)
@@ -99,18 +148,30 @@ def run_arrival(arrival: str, *, tenants: int, lanes: int, n: int,
         offline[name] = list(sess.stream(traces[name]))
 
     total = tenants * n_events
-    times = (poisson_times(seed, total, rate) if arrival == "poisson"
-             else flash_crowd_times(seed, total, rate))
-    windows = {f"tenant-{t}": make_window(t, lanes, n, seed)
-               for t in range(tenants)}
-    daemon = asyncio.run(
-        _drive(engine, traces, windows, times, queue_limit))
-    assert daemon.rejected == 0, "sizing error: benchmark load was shed"
-    for name in traces:
-        assert_conformant(name, daemon.reports(name), offline[name])
+    times = ARRIVAL_PROFILES[arrival](seed, total, rate)
+    if transport == "wire":
+        # end-to-end over a loopback socket: frames, codec and scheduling
+        # all inside the measured admission latency
+        lanes_by_tenant = {
+            f"tenant-{t}": make_lanes(t, lanes, n, seed)
+            for t in range(tenants)}
+        reports, rejected, rep = asyncio.run(_drive_wire(
+            engine, traces, lanes_by_tenant, 2 * n, times, queue_limit))
+        assert rejected == 0, "sizing error: benchmark load was shed"
+        for name in traces:
+            assert_conformant(name, reports[name], offline[name])
+    else:
+        windows = {f"tenant-{t}": make_window(t, lanes, n, seed)
+                   for t in range(tenants)}
+        daemon = asyncio.run(
+            _drive(engine, traces, windows, times, queue_limit))
+        assert daemon.rejected == 0, "sizing error: benchmark load was shed"
+        for name in traces:
+            assert_conformant(name, daemon.reports(name), offline[name])
+        rep = daemon.report()
 
-    rep = daemon.report()
-    return {"arrival": arrival, "tenants": tenants, "B": lanes, "n": n,
+    return {"arrival": arrival, "transport": transport, "tenants": tenants,
+            "B": lanes, "n": n,
             "n_events": n_events, "rate": rate, "flush_k": flush_k,
             "queue_limit": queue_limit,
             "events_per_sec": rep["events_per_sec"],
@@ -122,6 +183,9 @@ def run_arrival(arrival: str, *, tenants: int, lanes: int, n: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--wire", action="store_true",
+                    help="also run every arrival profile over the daemon's "
+                         "loopback socket transport (wire_* sections)")
     ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -133,13 +197,18 @@ def main(argv=None):
         cfg = dict(tenants=8, lanes=8, n=8, n_events=48, rate=400.0,
                    flush_k=8, seed=args.seed, queue_limit=4096)
 
+    runs = [("inproc", a) for a in ("poisson", "flash", "diurnal")]
+    if args.wire:
+        runs += [("wire", a) for a in ("poisson", "flash", "diurnal")]
+
     results = {}
-    for arrival in ("poisson", "flash"):
+    for transport, arrival in runs:
+        section = arrival if transport == "inproc" else f"wire_{arrival}"
         t0 = time.perf_counter()
-        res = run_arrival(arrival, **cfg)
+        res = run_arrival(arrival, transport=transport, **cfg)
         res["wall_s"] = time.perf_counter() - t0
-        results[arrival] = res
-        print(f"{arrival:8s} {res['tenants']}x{res['n_events']}ev "
+        results[section] = res
+        print(f"{section:13s} {res['tenants']}x{res['n_events']}ev "
               f"B={res['B']} n={res['n']}: "
               f"{res['events_per_sec']:8.1f} ev/s  "
               f"p50 {res['admission_p50_ms']:7.1f} ms  "

@@ -59,19 +59,44 @@ GATED = {
 #: "residency" tags whether window state stayed device-resident across
 #: flushes — resident and host-round-trip records are different machines
 #: and must never be silently compared; "arrival" tags the allocd arrival
-#: process — Poisson vs flash-crowd latency records are never comparable,
-#: nor are runs at different tenant counts, rates or queue bounds)
+#: process — Poisson vs flash-crowd vs diurnal latency records are never
+#: comparable, nor are runs at different tenant counts, rates or queue
+#: bounds; "transport" tags in-process vs wire-socket daemon records —
+#: end-to-end socket latency and in-process latency are different
+#: quantities and must never be silently compared)
 CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
-               "ragged", "path", "residency", "arrival", "tenants", "rate",
-               "flush_k", "queue_limit")
+               "ragged", "path", "residency", "arrival", "transport",
+               "tenants", "rate", "flush_k", "queue_limit")
+
+
+class TruncatedBenchError(Exception):
+    """A BENCH_*.json exists but is empty or cut off mid-write.
+
+    A smoke crashing after opening its output leaves exactly this; the
+    gate must fail loudly on it instead of crashing with a bare
+    JSONDecodeError (or, worse, skipping the file).
+    """
 
 
 def load(path: Path) -> dict:
-    with open(path) as f:
-        return json.load(f)
+    text = path.read_text()
+    if not text.strip():
+        raise TruncatedBenchError(f"{path.name}: empty file (benchmark "
+                                  "crashed before writing results?)")
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError as exc:
+        raise TruncatedBenchError(
+            f"{path.name}: truncated/corrupt JSON at char {exc.pos} of "
+            f"{len(text)} (benchmark crashed mid-write?)")
+    if not isinstance(data, dict) or "results" not in data:
+        raise TruncatedBenchError(
+            f"{path.name}: no 'results' section (partial write?)")
+    return data
 
 
-def compare_section(name, base: dict, fresh: dict, tols: dict) -> list:
+def compare_section(name, base: dict, fresh: dict, tols: dict,
+                    rows: list) -> list:
     errors = []
     for k in CONFIG_KEYS:
         if base.get(k) != fresh.get(k):
@@ -95,6 +120,9 @@ def compare_section(name, base: dict, fresh: dict, tols: dict) -> list:
             ok = fresh[metric] >= bound
             kind = "floor"
         status = "ok" if ok else "FAIL"
+        rows.append({"name": name, "metric": metric, "klass": klass,
+                     "base": base[metric], "fresh": fresh[metric],
+                     "bound": bound, "kind": kind, "ok": ok})
         print(f"  {name}.{metric:<20} baseline={base[metric]:>10.2f} "
               f"fresh={fresh[metric]:>10.2f} {kind}={bound:>10.2f} "
               f"[{klass}] {status}")
@@ -104,6 +132,38 @@ def compare_section(name, base: dict, fresh: dict, tols: dict) -> list:
                 f"{name}.{metric}: {fresh[metric]:.2f} {sign} {kind} "
                 f"{bound:.2f} (baseline {base[metric]:.2f}, tol {tol:.0%})")
     return errors
+
+
+def write_step_summary(rows: list, errors: list) -> None:
+    """Mirror the gate outcome into $GITHUB_STEP_SUMMARY (if set).
+
+    Perf drift becomes visible on the PR page itself — the
+    fresh-vs-baseline delta per gated metric plus the pass/fail verdict —
+    without downloading the bench artifacts.
+    """
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    verdict = ("✅ bench gate passed" if not errors
+               else f"❌ bench gate FAILED ({len(errors)} problem(s))")
+    lines = ["## Benchmark regression gate", "", verdict, ""]
+    if rows:
+        lines += ["| section.metric | class | baseline | fresh | Δ | "
+                  "bound | status |",
+                  "|---|---|---:|---:|---:|---:|---|"]
+        for r in rows:
+            delta = ((r["fresh"] - r["base"]) / r["base"] * 100.0
+                     if r["base"] else float("nan"))
+            lines.append(
+                f"| {r['name']}.{r['metric']} | {r['klass']} "
+                f"| {r['base']:.2f} | {r['fresh']:.2f} | {delta:+.1f}% "
+                f"| {r['kind']} {r['bound']:.2f} "
+                f"| {'ok' if r['ok'] else '**FAIL**'} |")
+        lines.append("")
+    if errors:
+        lines += ["```"] + [str(e) for e in errors] + ["```", ""]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -138,13 +198,18 @@ def main() -> int:
         return 1
 
     errors = []
+    rows = []
     for bpath in baselines:
         fpath = Path(args.fresh_dir) / bpath.name
         if not fpath.exists():
             errors.append(f"{bpath.name}: fresh file missing "
                           f"(benchmark not run?)")
             continue
-        base, fresh = load(bpath), load(fpath)
+        try:
+            base, fresh = load(bpath), load(fpath)
+        except TruncatedBenchError as exc:
+            errors.append(str(exc))
+            continue
         print(f"{bpath.name} (baseline sha {base.get('git_sha')}, "
               f"fresh sha {fresh.get('git_sha')}):")
         if base.get("device_count") != fresh.get("device_count"):
@@ -185,8 +250,9 @@ def main() -> int:
                               f"from fresh run")
                 continue
             errors += compare_section(f"{bpath.name}:{section}", bvals,
-                                      fvals, tols)
+                                      fvals, tols, rows)
 
+    write_step_summary(rows, errors)
     for e in errors:
         print(f"check_bench: {e}", file=sys.stderr)
     if errors:

@@ -28,16 +28,26 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-m "not slow")
 fi
 
+# Hosted CI sets BENCH_OUT to a workspace path so the fresh JSONs can be
+# uploaded as an artifact; locally they land in a throwaway tmpdir that is
+# removed on exit (success OR failure — only the dir we created ourselves;
+# a caller-provided BENCH_OUT is the caller's to clean up).  Created up
+# front so a crash mid-smoke still leaves the upload path (with whatever
+# partial JSONs were written) for the artifact step + check_bench to
+# report loudly on, instead of silently skipping the upload.
+if [[ -n "${BENCH_OUT:-}" ]]; then
+    BENCH_DIR="${BENCH_OUT}"
+else
+    BENCH_DIR="$(mktemp -d)"
+    trap 'rm -rf "${BENCH_DIR}"' EXIT
+fi
+mkdir -p "${BENCH_DIR}"
+
 echo "== docs check (links + core API docstrings) =="
 python scripts/check_docs.py
 
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
-
-# Hosted CI sets BENCH_OUT to a workspace path so the fresh JSONs can be
-# uploaded as an artifact; locally they land in a throwaway tmpdir.
-BENCH_DIR="${BENCH_OUT:-$(mktemp -d)}"
-mkdir -p "${BENCH_DIR}"
 
 echo "== allocator benchmark smoke (batched + sharded engine) =="
 python -m benchmarks.allocator_perf --batch --shard --smoke \
@@ -51,9 +61,11 @@ echo "== streaming admission engine smoke (warm + coalesced + sharded + resident
 python -m benchmarks.streaming_perf --coalesce --shard --smoke \
     --json "${BENCH_DIR}/BENCH_streaming.json"
 
-echo "== admission daemon smoke (open-loop Poisson + flash-crowd) =="
-# the benchmark re-asserts daemon/offline trace conformance before timing
-python -m benchmarks.allocd_perf --smoke \
+echo "== admission daemon smoke (poisson/flash/diurnal, in-process + wire) =="
+# the benchmark re-asserts daemon/offline trace conformance before timing;
+# --wire additionally runs every arrival profile over the loopback socket
+# transport (end-to-end admission latency, wire_* sections)
+python -m benchmarks.allocd_perf --smoke --wire \
     --json "${BENCH_DIR}/BENCH_allocd.json"
 
 echo "== benchmark regression gate (vs benchmarks/baselines/) =="

@@ -12,9 +12,9 @@ from repro.core.centralized import (kkt_residual, objective_of_r,
                                     solve_centralized, solve_centralized_batch)
 from repro.core.engine import (BatchSolveReport, CapacityEngine,
                                CompactionPolicy, CrossCheckPolicy,
-                               InfeasibleError, Policies, RoundingPolicy,
-                               SolveReport, SolverConfig, WindowSession,
-                               WindowSolveReport)
+                               InfeasibleError, Policies, QuotaExceededError,
+                               RoundingPolicy, SolveReport, SolverConfig,
+                               TenantQuota, WindowSession, WindowSolveReport)
 from repro.core.game import (BatchWarmStart, cm_best_response, cm_bid_update,
                              cold_start, distributed_walltime_estimate,
                              rm_solve, solve_distributed,
@@ -40,7 +40,8 @@ __all__ = [
     "BatchSolveReport", "BatchWarmStart", "CapacityChange", "CapacityEngine",
     "ClassArrival", "ClassDeparture", "CompactionPolicy", "CrossCheckPolicy",
     "EventEpoch", "FlushPolicy", "InfeasibleError", "IntegerSolution",
-    "Policies", "RAW_CLASS_FIELDS", "RoundingPolicy", "SLAEdit",
+    "Policies", "QuotaExceededError", "RAW_CLASS_FIELDS", "RoundingPolicy",
+    "SLAEdit", "TenantQuota",
     "Scenario", "ScenarioBatch", "Solution", "SolveReport", "SolverConfig",
     "StreamEvent", "StreamingResult", "WindowSession", "WindowSolveReport",
     "WindowState", "LANE_AXIS", "cm_best_response", "cm_bid_update",

@@ -59,6 +59,75 @@ class InfeasibleError(RuntimeError):
     """Deadlines/SLAs cannot be met with the available capacity."""
 
 
+class QuotaExceededError(RuntimeError):
+    """A session operation would exceed its :class:`TenantQuota`.
+
+    Raised by :meth:`WindowSession.offer` (event budget) and
+    :meth:`WindowSession.add_lane` (lane budget).  External schedulers like
+    ``repro.serving.allocd`` check the quota *before* handing an event to
+    the session (the rejection then carries the paper's rejection cost
+    instead of an exception), so in a correctly plumbed daemon this error
+    is the backstop, not the control path.
+    """
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant admission budget enforced by a :class:`WindowSession`.
+
+    The multi-tenant generalization of the daemon-wide queue bound: each
+    tenant gets its own event and lane budget so one tenant's burst can
+    never exhaust the shared daemon's headroom (the daemon-wide bound
+    remains as a backstop).  ``None`` fields are unlimited.
+
+    Attributes
+    ----------
+    max_queued : int, optional
+        Upper bound on this tenant's not-yet-flushed events — in daemon
+        terms the sum of its queued and already-buffered (in-epoch) events;
+        for a bare session, the buffered-event count :meth:`WindowSession.offer`
+        enforces.  Submissions beyond it are rejected and charged the
+        paper's rejection penalty (``m * H_up`` for a class arrival).
+    max_lanes : int, optional
+        Upper bound on the tenant's open window lanes:
+        :meth:`WindowSession.add_lane` refuses to grow past it, and a
+        daemon refuses to register a tenant whose initial window is
+        already wider.
+    """
+    max_queued: Optional[int] = None
+    max_lanes: Optional[int] = None
+
+    def admits_event(self, n_queued: int) -> bool:
+        """Whether one more event fits under ``max_queued``.
+
+        Parameters
+        ----------
+        n_queued : int
+            Events currently queued/buffered against this quota.
+
+        Returns
+        -------
+        bool
+            True when unlimited or ``n_queued < max_queued``.
+        """
+        return self.max_queued is None or n_queued < self.max_queued
+
+    def admits_lane(self, n_lanes: int) -> bool:
+        """Whether one more lane fits under ``max_lanes``.
+
+        Parameters
+        ----------
+        n_lanes : int
+            Lanes currently open against this quota.
+
+        Returns
+        -------
+        bool
+            True when unlimited or ``n_lanes < max_lanes``.
+        """
+        return self.max_lanes is None or n_lanes < self.max_lanes
+
+
 # --------------------------------------------------------------------------
 # Configuration: every solver knob in one frozen object
 # --------------------------------------------------------------------------
@@ -591,7 +660,8 @@ class CapacityEngine:
 
     # ------------------------------------------------------------ sessions
     def open_window(self, lanes, *, n_max: Optional[int] = None,
-                    growth_factor: float = 2.0) -> "WindowSession":
+                    growth_factor: float = 2.0,
+                    quota: Optional[TenantQuota] = None) -> "WindowSession":
         """Open the runtime loop: a live window driven by this engine.
 
         Parameters
@@ -608,6 +678,11 @@ class CapacityEngine:
         growth_factor : float, optional
             Fresh-window growth multiplier when a lane's row fills
             (ignored when adopting an existing window).
+        quota : TenantQuota, optional
+            Per-tenant budget the session enforces: ``offer`` refuses
+            events past ``max_queued`` and ``add_lane`` refuses lanes past
+            ``max_lanes`` (both with :class:`QuotaExceededError`).  The
+            initial lane count must already fit the lane budget.
 
         Returns
         -------
@@ -616,12 +691,12 @@ class CapacityEngine:
             engine's ``config`` and ``policies``.
         """
         if isinstance(lanes, AdmissionWindow):
-            return WindowSession(self, lanes)
+            return WindowSession(self, lanes, quota=quota)
         batch = _coerce(lanes, dtype=self.config.dtype)
         scns = [batch.instance(b) for b in range(batch.batch_size)]
         window = AdmissionWindow(scns, n_max=n_max or batch.n_max,
                                  growth_factor=growth_factor)
-        return WindowSession(self, window)
+        return WindowSession(self, window, quota=quota)
 
     # ----------------------------------------------------------- internals
     def _solve_window(self, window: AdmissionWindow) -> WindowSolveReport:
@@ -750,11 +825,21 @@ class WindowSession:
         Supplies ``config`` (solver knobs, kernel, mesh) and ``policies``.
     window : AdmissionWindow
         The live window; mutated by ``apply``/``flush``/lane operations.
+    quota : TenantQuota, optional
+        Per-tenant budget; ``offer`` and ``add_lane`` enforce it with
+        :class:`QuotaExceededError`.  ``None`` is unlimited.
     """
 
-    def __init__(self, engine: CapacityEngine, window: AdmissionWindow):
+    def __init__(self, engine: CapacityEngine, window: AdmissionWindow,
+                 quota: Optional[TenantQuota] = None):
+        if (quota is not None
+                and not quota.admits_lane(window.batch_size - 1)):
+            raise QuotaExceededError(
+                f"window opens with {window.batch_size} lanes, quota "
+                f"allows {quota.max_lanes}")
         self.engine = engine
         self.window = window
+        self.quota = quota
         self._pending: List[StreamEvent] = []
         self.flushes = 0
         self.events_folded = 0
@@ -854,7 +939,21 @@ class WindowSession:
         bool
             True when the engine's flush policy demands a flush now —
             including SLA-critical events under a deadline-aware policy.
+
+        Raises
+        ------
+        QuotaExceededError
+            When the session carries a :class:`TenantQuota` and the buffer
+            already holds ``max_queued`` events.  Schedulers that meter
+            their own queues against the quota (the admission daemon does)
+            never trip this; it is the backstop against unbounded buffer
+            growth under a flush policy that never fires.
         """
+        if (self.quota is not None
+                and not self.quota.admits_event(len(self._pending))):
+            raise QuotaExceededError(
+                f"session buffer holds {len(self._pending)} events, quota "
+                f"allows {self.quota.max_queued}")
         self._pending.append(event)
         return self._policy_fires(self.engine.policies.flush, event)
 
@@ -1032,7 +1131,18 @@ class WindowSession:
         -------
         int
             The new lane's index.
+
+        Raises
+        ------
+        QuotaExceededError
+            When the session's :class:`TenantQuota` caps ``max_lanes`` and
+            the window is already at it.
         """
+        if (self.quota is not None
+                and not self.quota.admits_lane(self.window.batch_size)):
+            raise QuotaExceededError(
+                f"window already holds {self.window.batch_size} lanes, "
+                f"quota allows {self.quota.max_lanes}")
         self.drain()
         return self.window.add_lane(scn, R=R, rho_bar=rho_bar)
 

@@ -4,12 +4,24 @@
         --classes 4 --events 24 --arrival poisson --rate 500 --conformance
 
 Builds one CapacityEngine, registers N tenant windows with the
-AllocDaemon, drives per-tenant random event traces open-loop on a Poisson
-or flash-crowd arrival schedule, and reports sustained events/sec plus
-p50/p99 admission latency — the allocd counterpart of
+AllocDaemon, drives per-tenant random event traces open-loop on a Poisson,
+flash-crowd, or diurnal arrival schedule, and reports sustained events/sec
+plus p50/p99 admission latency — the allocd counterpart of
 ``repro.launch.serve``.  ``--conformance`` replays every tenant's trace
 through an identically-initialised offline ``WindowSession.stream`` and
 asserts the daemon's flush-boundary equilibria are bit-equal.
+
+Server mode (the wire transport; see ``docs/OPERATIONS.md``):
+
+    PYTHONPATH=src python -m repro.launch.allocd --listen 127.0.0.1:8753
+
+serves the daemon over the length-prefixed JSON-frame protocol of
+``repro.serving.wire`` instead of driving synthetic local tenants —
+remote processes register tenants and submit events with
+``repro.serving.client.AllocClient`` (walkthrough:
+``examples/wire_client.py``).  ``--quota-events`` / ``--quota-lanes``
+set the default per-tenant admission budget applied to wire tenants
+that register without one.
 """
 from __future__ import annotations
 
@@ -29,9 +41,10 @@ import numpy as np
 from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
                         Policies, RoundingPolicy, SolverConfig, lane_mesh,
                         sample_event_trace, sample_scenario)
-from repro.serving.allocd import (AllocDaemon, drive_open_loop,
-                                  flash_crowd_times, interleave_traces,
-                                  poisson_times)
+from repro.core.engine import TenantQuota
+from repro.serving.allocd import (ARRIVAL_PROFILES, AllocDaemon,
+                                  drive_open_loop, interleave_traces)
+from repro.serving.server import AllocServer
 
 
 def make_engine(args):
@@ -83,9 +96,7 @@ async def run_daemon(engine, args, traces):
     for t in range(args.tenants):
         daemon.add_tenant(f"tenant-{t}", make_window(args, t))
     total = sum(len(tr) for tr in traces.values())
-    times = (poisson_times(args.seed, total, args.rate)
-             if args.arrival == "poisson"
-             else flash_crowd_times(args.seed, total, args.rate))
+    times = ARRIVAL_PROFILES[args.arrival](args.seed, total, args.rate)
     schedule = interleave_traces(traces, times)
     await daemon.start()
     tickets = await drive_open_loop(daemon, schedule)
@@ -93,14 +104,44 @@ async def run_daemon(engine, args, traces):
     return daemon, tickets
 
 
+async def run_server(engine, args):
+    daemon = AllocDaemon(engine, queue_limit=args.queue_limit)
+    quota = None
+    if args.quota_events is not None or args.quota_lanes is not None:
+        quota = TenantQuota(max_queued=args.quota_events,
+                            max_lanes=args.quota_lanes)
+    host, _, port = args.listen.rpartition(":")
+    server = AllocServer(daemon, host=host or "127.0.0.1", port=int(port),
+                         default_quota=quota)
+    await server.start()
+    print(f"[allocd] listening on {server.address[0]}:{server.address[1]} "
+          f"(queue_limit={args.queue_limit}, default quota="
+          f"{quota or 'none'})", flush=True)
+    try:
+        await server._server.serve_forever()
+    except asyncio.CancelledError:
+        pass
+    finally:
+        await server.close(drain=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--listen", type=str, default=None, metavar="HOST:PORT",
+                    help="serve the daemon over the wire protocol instead "
+                         "of driving local synthetic tenants")
+    ap.add_argument("--quota-events", type=int, default=None,
+                    help="default TenantQuota.max_queued for wire tenants "
+                         "registering without a quota")
+    ap.add_argument("--quota-lanes", type=int, default=None,
+                    help="default TenantQuota.max_lanes for wire tenants "
+                         "registering without a quota")
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--classes", type=int, default=5)
     ap.add_argument("--events", type=int, default=32,
                     help="events per tenant")
-    ap.add_argument("--arrival", choices=["poisson", "flash"],
+    ap.add_argument("--arrival", choices=sorted(ARRIVAL_PROFILES),
                     default="poisson")
     ap.add_argument("--rate", type=float, default=500.0,
                     help="open-loop arrival rate [events/s]")
@@ -121,6 +162,13 @@ def main(argv=None):
     ap.add_argument("--conformance", action="store_true",
                     help="assert bit-equality against offline replays")
     args = ap.parse_args(argv)
+
+    if args.listen is not None:
+        try:
+            asyncio.run(run_server(make_engine(args), args))
+        except KeyboardInterrupt:
+            pass
+        return None
 
     engine = make_engine(args)
     traces = make_traces(args)

@@ -1,12 +1,31 @@
-from repro.serving.allocd import (AdmissionTicket, AllocDaemon,
-                                  drive_open_loop, flash_crowd_times,
-                                  interleave_traces, poisson_times,
-                                  rejection_penalty)
+from repro.serving.allocd import (ARRIVAL_PROFILES, AdmissionTicket,
+                                  AllocDaemon, diurnal_times, drive_open_loop,
+                                  flash_crowd_times, interleave_traces,
+                                  poisson_times, rejection_penalty)
+from repro.serving.client import AllocClient, WireTicket
 from repro.serving.engine import generate, pad_attn_cache
+from repro.serving.server import AllocServer
+from repro.serving.wire import (MAX_FRAME_BYTES, PROTOCOL_VERSION,
+                                FrameTooLargeError, MalformedFrameError,
+                                ProtocolVersionError, RemoteError,
+                                WireError, WireFlushReport)
 
 __all__ = [
+    "ARRIVAL_PROFILES",
     "AdmissionTicket",
+    "AllocClient",
     "AllocDaemon",
+    "AllocServer",
+    "FrameTooLargeError",
+    "MAX_FRAME_BYTES",
+    "MalformedFrameError",
+    "PROTOCOL_VERSION",
+    "ProtocolVersionError",
+    "RemoteError",
+    "WireError",
+    "WireFlushReport",
+    "WireTicket",
+    "diurnal_times",
     "drive_open_loop",
     "flash_crowd_times",
     "generate",

@@ -43,11 +43,12 @@ import asyncio
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import CapacityEngine, WindowSession, WindowSolveReport
+from repro.core.engine import (CapacityEngine, TenantQuota, WindowSession,
+                               WindowSolveReport)
 from repro.core.types import ClassArrival, StreamEvent
 
 
@@ -130,6 +131,16 @@ class _Tenant:
     inflight: List[AdmissionTicket] = field(default_factory=list)
     due: bool = False
     reports: List[WindowSolveReport] = field(default_factory=list)
+    quota: Optional[TenantQuota] = None
+    on_flush: Optional[Callable] = None
+    submitted: int = 0
+    rejected: int = 0
+    rejection_cost: float = 0.0
+
+    @property
+    def queued(self) -> int:
+        """Not-yet-flushed events charged against this tenant's quota."""
+        return len(self.queue) + len(self.inflight)
 
 
 class AllocDaemon:
@@ -179,7 +190,9 @@ class AllocDaemon:
 
     # ------------------------------------------------------------ tenants
     def add_tenant(self, name: str, lanes, *,
-                   n_max: Optional[int] = None) -> WindowSession:
+                   n_max: Optional[int] = None,
+                   quota: Optional[TenantQuota] = None,
+                   on_flush: Optional[Callable] = None) -> WindowSession:
         """Register a tenant with its own WindowSession over the engine.
 
         Parameters
@@ -190,23 +203,65 @@ class AllocDaemon:
             Initial lane set, coerced by ``CapacityEngine.open_window``.
         n_max : int, optional
             Padded class capacity headroom for a fresh window.
+        quota : TenantQuota, optional
+            Per-tenant budget: submissions past ``max_queued`` not-yet-
+            flushed events are rejected with the paper's rejection penalty
+            (accounted per tenant, see :meth:`tenant_stats`), and the
+            initial window must fit ``max_lanes``.  The daemon-wide
+            ``queue_limit`` remains as a backstop across all tenants.
+        on_flush : callable, optional
+            ``on_flush(report_or_none, tickets)`` invoked after every flush
+            covering this tenant — ``None`` report on a failed (poisoned)
+            epoch.  The wire server uses it to push flush frames to socket
+            tenants; it runs inline in the scheduler, so keep it cheap.
 
         Returns
         -------
         WindowSession
             The tenant's session (exposed for inspection; drive it through
             the daemon, not directly, or conformance breaks).
+
+        Raises
+        ------
+        repro.core.engine.QuotaExceededError
+            When the initial lane set already exceeds ``quota.max_lanes``.
         """
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
-        session = self.engine.open_window(lanes, n_max=n_max)
+        session = self.engine.open_window(lanes, n_max=n_max, quota=quota)
         if self.engine.config.residency == "resident":
             # opt in at registration, not first flush: placement cost lands
             # here instead of inside the first admission's latency, and the
             # tenant's state stays mesh-resident for the daemon's lifetime
             session.window.make_resident(self.engine.config.mesh)
-        self._tenants[name] = _Tenant(name, session)
+        self._tenants[name] = _Tenant(name, session, quota=quota,
+                                      on_flush=on_flush)
         return session
+
+    def tenant_stats(self, name: str) -> Dict[str, float]:
+        """Per-tenant admission accounting (the quota observability hook).
+
+        Parameters
+        ----------
+        name : str
+            Tenant key.
+
+        Returns
+        -------
+        dict
+            ``submitted`` / ``rejected`` / ``rejection_cost`` for this
+            tenant alone, plus its live ``queued`` backlog, ``flushes``
+            and ``events_folded``.
+        """
+        t = self._tenants[name]
+        return {
+            "submitted": float(t.submitted),
+            "rejected": float(t.rejected),
+            "rejection_cost": float(t.rejection_cost),
+            "queued": float(t.queued),
+            "flushes": float(t.session.flushes),
+            "events_folded": float(t.session.events_folded),
+        }
 
     def reports(self, name: str) -> List[WindowSolveReport]:
         """Flush-boundary reports produced so far for tenant `name`.
@@ -256,9 +311,10 @@ class AllocDaemon:
         Returns
         -------
         AdmissionTicket
-            ``accepted=False`` (with ``penalty`` set) when the bounded
-            queue is full; otherwise the ticket resolves at the covering
-            flush.
+            ``accepted=False`` (with ``penalty`` set) when the tenant's
+            quota (``TenantQuota.max_queued``) or the daemon-wide backstop
+            (``queue_limit``) is exhausted; otherwise the ticket resolves
+            at the covering flush.
         """
         if self._closing:
             raise RuntimeError("daemon is shutting down")
@@ -266,15 +322,21 @@ class AllocDaemon:
         now = time.perf_counter()
         self._seq += 1
         self.submitted += 1
+        t.submitted += 1
         ticket = AdmissionTicket(
             tenant=tenant, event=event, seq=self._seq, accepted=True,
             t_submit=now if t_submit is None else t_submit)
-        if self.queue_limit is not None and self._queued >= self.queue_limit:
+        over_quota = (t.quota is not None
+                      and not t.quota.admits_event(t.queued))
+        if over_quota or (self.queue_limit is not None
+                          and self._queued >= self.queue_limit):
             ticket.accepted = False
             ticket.penalty = rejection_penalty(event)
             ticket.t_done = now
             self.rejected += 1
             self.rejection_cost += ticket.penalty
+            t.rejected += 1
+            t.rejection_cost += ticket.penalty
             return ticket
         ticket._fut = asyncio.get_running_loop().create_future()
         t.queue.append(ticket)
@@ -302,6 +364,69 @@ class AllocDaemon:
         self._wake.set()
         await self._task
         self._task = None
+
+    def request_flush(self, name: str) -> None:
+        """Force one tenant's buffered epoch to flush at the next round.
+
+        Marks the session due, so (by the due-sessions-receive-no-events
+        invariant) no further intake lands before the flush — the epoch
+        boundary moves *earlier*, exactly like an explicit
+        ``WindowSession.flush`` call at this point of the tenant's trace.
+        A no-op epoch (nothing pending) still produces a flush report
+        (the session echoes its current equilibrium), so a wire ``flush``
+        request is always answered by a flush frame.
+
+        Parameters
+        ----------
+        name : str
+            Tenant key.
+        """
+        t = self._tenants[name]
+        t.due = True
+        if self._wake is not None:
+            self._wake.set()
+
+    def detach_tenant(self, name: str) -> None:
+        """Drop a tenant's ``on_flush`` callback (e.g. its socket died).
+
+        The tenant stays registered and its reports remain inspectable;
+        only the push channel is severed.
+
+        Parameters
+        ----------
+        name : str
+            Tenant key.
+        """
+        self._tenants[name].on_flush = None
+
+    def drain_tenant(self, name: str) -> None:
+        """Deliver ONE tenant's backlog now and flush its trailing partial.
+
+        The single-tenant analog of a graceful shutdown, replaying exactly
+        the scheduler's intake semantics (never offer a due session, flush
+        between epochs) so the tenant's report list afterwards equals a
+        full offline ``session.stream`` replay of its accepted events.
+        The wire server calls this when a socket tenant disconnects
+        mid-epoch: the accepted prefix is folded and flushed rather than
+        left dangling, and later reconnects find a clean session.
+
+        Parameters
+        ----------
+        name : str
+            Tenant key; other tenants are untouched.
+        """
+        t = self._tenants[name]
+        while t.queue:
+            if t.due:
+                self._flush(t)
+            ticket = t.queue.popleft()
+            self._queued -= 1
+            t.inflight.append(ticket)
+            self.fold_log.append(name)
+            if t.session.offer(ticket.event):
+                t.due = True
+        if t.due or t.inflight or t.session.pending:
+            self._flush(t)
 
     # ---------------------------------------------------------- scheduler
     async def _run(self) -> None:
@@ -362,6 +487,8 @@ class AllocDaemon:
             for ticket in tickets:
                 ticket.cancelled = True
                 ticket._fail(exc)
+            if t.on_flush is not None:
+                t.on_flush(None, tickets)
             return
         now = time.perf_counter()
         self._t_last_flush = now
@@ -375,6 +502,8 @@ class AllocDaemon:
             ticket.t_done = now
             self.latencies_s.append(now - ticket.t_submit)
             ticket._resolve(report)
+        if t.on_flush is not None:
+            t.on_flush(report, tickets)
 
     def _final_flushes(self) -> None:
         """Graceful-drain tail: flush every trailing partial epoch."""
@@ -487,6 +616,53 @@ def flash_crowd_times(seed: int, n: int, rate: float, *,
     rates = np.full(n, rate, dtype=np.float64)
     rates[lo:hi] *= burst_factor
     return np.cumsum(rng.exponential(1.0, size=n) / rates)
+
+
+def diurnal_times(seed: int, n: int, rate: float, *,
+                  peak_factor: float = 4.0,
+                  cycles: float = 2.0) -> np.ndarray:
+    """Diurnal arrival schedule: sinusoidally modulated Poisson process.
+
+    The day/night utilization cycle of the Hadoop trace studies, compressed
+    into one run: the instantaneous rate swings between ``rate`` (the
+    trough) and ``peak_factor * rate`` (the peak) along ``cycles`` full
+    sine periods over the trace.  Unlike :func:`flash_crowd_times`'s one
+    hard step, the load ramps smoothly — the regime where a deadline-aware
+    flush scheduler has time to adapt its cadence.
+
+    Parameters
+    ----------
+    seed : int
+        RNG seed.
+    n : int
+        Number of arrivals.
+    rate : float
+        Trough arrival rate in events per second.
+    peak_factor : float, optional
+        Peak-to-trough rate ratio (>= 1).
+    cycles : float, optional
+        Number of full diurnal periods spanned by the trace.
+
+    Returns
+    -------
+    numpy.ndarray
+        Monotone arrival offsets [s] from the run start, shape ``(n,)``.
+    """
+    rng = np.random.default_rng(seed)
+    phase = np.linspace(0.0, 2.0 * np.pi * cycles, n, endpoint=False)
+    # rate(k) in [rate, peak_factor * rate], sinusoidal; thinning-free
+    # construction: scale each exponential gap by its local rate
+    rates = rate * (1.0 + (peak_factor - 1.0) * 0.5 * (1.0 - np.cos(phase)))
+    return np.cumsum(rng.exponential(1.0, size=n) / rates)
+
+
+ARRIVAL_PROFILES = {
+    "poisson": poisson_times,
+    "flash": flash_crowd_times,
+    "diurnal": diurnal_times,
+}
+"""Open-loop arrival schedule generators by profile name (the benchmark's
+``--arrival`` vocabulary: steady baseline, flash-crowd step, diurnal sine)."""
 
 
 async def drive_open_loop(daemon: AllocDaemon,

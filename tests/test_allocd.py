@@ -346,3 +346,119 @@ def test_critical_event_preempts_bulk_coalescing():
     daemon = asyncio.run(run())
     assert len(daemon.reports("t0")) == 1
     assert daemon._tenants["t0"].session.flushes == 1
+
+
+# --------------------------------------------------------------------------
+# Per-tenant quotas (PR 8) + arrival profiles
+# --------------------------------------------------------------------------
+
+def test_tenant_quota_engine_level_guards():
+    """QuotaExceededError from the session layer: window wider than
+    max_lanes at open, add_lane past the cap, and the offer backstop."""
+    from repro.core import QuotaExceededError, TenantQuota
+    engine = make_engine(flush_k=100)
+    with pytest.raises(QuotaExceededError):
+        engine.open_window(make_window(0), quota=TenantQuota(max_lanes=B - 1))
+
+    session = engine.open_window(make_window(0),
+                                 quota=TenantQuota(max_lanes=B))
+    with pytest.raises(QuotaExceededError):
+        session.add_lane(sample_scenario(jax.random.PRNGKey(9), N,
+                                         capacity_factor=1.3))
+
+    session = engine.open_window(make_window(1),
+                                 quota=TenantQuota(max_queued=2))
+    session.offer(arrival(0))
+    session.offer(arrival(1))
+    with pytest.raises(QuotaExceededError):
+        session.offer(arrival(2))
+    # the buffered epoch is still flushable after the refusal
+    report = session.flush()
+    assert report.fractional is not None
+
+
+def test_per_tenant_quota_rejections_and_stats():
+    """Quota exhaustion rejects with the paper penalty, is accounted per
+    tenant, leaves other tenants untouched, and the accepted subtrace
+    stays bit-equal to its offline replay."""
+    from repro.core import TenantQuota
+    engine = make_engine(flush_k=100)          # nothing flushes early
+    events = [arrival(i) for i in range(5)]
+
+    async def run():
+        daemon = AllocDaemon(engine, queue_limit=64)
+        daemon.add_tenant("capped", make_window(0),
+                          quota=TenantQuota(max_queued=2))
+        daemon.add_tenant("free", make_window(1))
+        await daemon.start()
+        capped = [daemon.submit("capped", ev) for ev in events]
+        free = [daemon.submit("free", ev) for ev in events]
+        await daemon.shutdown(drain=True)
+        return daemon, capped, free
+
+    daemon, capped, free = asyncio.run(run())
+    assert [tk.accepted for tk in capped] == [True, True] + [False] * 3
+    assert all(tk.accepted for tk in free)
+    for tk in capped[2:]:
+        assert tk.penalty == rejection_penalty(tk.event) > 0.0
+    stats = daemon.tenant_stats("capped")
+    assert stats["submitted"] == 5.0 and stats["rejected"] == 3.0
+    assert stats["rejection_cost"] == pytest.approx(
+        sum(tk.penalty for tk in capped[2:]))
+    assert daemon.tenant_stats("free")["rejected"] == 0.0
+    assert daemon.rejected == 3 and daemon.submitted == 10
+    assert_reports_bitequal(
+        daemon.reports("capped"),
+        list(make_engine(flush_k=100).open_window(make_window(0))
+             .stream(events[:2])))
+    assert_reports_bitequal(
+        daemon.reports("free"),
+        list(make_engine(flush_k=100).open_window(make_window(1))
+             .stream(events)))
+
+
+def test_drain_tenant_is_single_tenant_graceful_drain():
+    """drain_tenant folds ONE tenant's backlog and flushes its trailing
+    partial — report list equals the full offline replay — while the
+    other tenant's backlog is untouched until the daemon-wide drain."""
+    engine = make_engine(flush_k=3)
+    traces = {"a": [arrival(i) for i in range(5)],
+              "b": [arrival(10 + i) for i in range(4)]}
+
+    async def run():
+        daemon = AllocDaemon(engine)
+        daemon.add_tenant("a", make_window(0))
+        daemon.add_tenant("b", make_window(1))
+        await daemon.start()
+        for name, evs in traces.items():
+            for ev in evs:
+                daemon.submit(name, ev)
+        daemon.drain_tenant("a")
+        reports_a = list(daemon.reports("a"))
+        await daemon.shutdown(drain=True)
+        return daemon, reports_a
+
+    daemon, reports_a = asyncio.run(run())
+    want_a = list(make_engine(flush_k=3).open_window(make_window(0))
+                  .stream(traces["a"]))
+    assert_reports_bitequal(reports_a, want_a)      # complete at drain time
+    want_b = list(make_engine(flush_k=3).open_window(make_window(1))
+                  .stream(traces["b"]))
+    assert_reports_bitequal(daemon.reports("b"), want_b)
+
+
+def test_diurnal_times_profile():
+    """Sinusoidal modulation: monotone offsets, peak regions denser than
+    troughs by roughly the peak factor."""
+    from repro.serving.allocd import ARRIVAL_PROFILES, diurnal_times
+    n = 2000
+    times = diurnal_times(0, n, 10.0, peak_factor=4.0, cycles=2.0)
+    assert times.shape == (n,)
+    assert np.all(np.diff(times) > 0)
+    gaps = np.diff(times)
+    # cycles=2: troughs at k ~ 0 and n/2, peaks at k ~ n/4 and 3n/4
+    trough = np.mean(gaps[: n // 20])
+    peak = np.mean(gaps[n // 4 - n // 40: n // 4 + n // 40])
+    assert trough / peak > 2.0
+    assert set(ARRIVAL_PROFILES) == {"poisson", "flash", "diurnal"}
+    assert ARRIVAL_PROFILES["diurnal"] is diurnal_times

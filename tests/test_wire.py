@@ -1,0 +1,487 @@
+"""Wire-protocol tests: codec hygiene + socket-tenant conformance.
+
+Two layers, mirroring the module split:
+
+* ``repro.serving.wire`` codec tests run without sockets — framing
+  round-trips, strict size limits, malformed/truncated/partial frames,
+  version rejection, and bit-exact array / scenario / event / report
+  encodings.
+* ``AllocServer`` / ``AllocClient`` socket tests pin the tentpole
+  contract: a socket tenant's flush reports are BIT-EQUAL to an offline
+  ``WindowSession.stream`` replay of its accepted subtrace — under
+  randomized multi-tenant traces, mid-epoch disconnects, and per-tenant
+  quota exhaustion (rejections carrying the paper's ``m * H_up``
+  penalty).
+"""
+import asyncio
+import json
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionWindow, CapacityEngine, CapacityChange,
+                        ClassArrival, ClassDeparture, FlushPolicy, Policies,
+                        RoundingPolicy, SLAEdit, SolverConfig, TenantQuota,
+                        sample_class_params, sample_event_trace,
+                        sample_scenario)
+from repro.serving import wire
+from repro.serving.allocd import AllocDaemon, rejection_penalty
+from repro.serving.client import AllocClient
+from repro.serving.server import AllocServer
+
+B, N, N_MAX = 3, 4, 8          # one shared window shape: compile once
+
+
+def make_engine(flush_k=3):
+    return CapacityEngine(SolverConfig(),
+                          Policies(flush=FlushPolicy(max_events=flush_k),
+                                   rounding=RoundingPolicy(enabled=False)))
+
+
+def make_lanes(seed):
+    key = jax.random.PRNGKey(seed)
+    return [sample_scenario(jax.random.fold_in(key, lane), N,
+                            capacity_factor=1.3) for lane in range(B)]
+
+
+def make_trace(seed, lanes, n_events=10):
+    return sample_event_trace(seed, AdmissionWindow(lanes, n_max=N_MAX),
+                              n_events)
+
+
+def arrival(seed):
+    params = dict(sample_class_params(jax.random.PRNGKey(seed)))
+    return ClassArrival(lane=seed % B, params=params)
+
+
+def offline_replay(lanes, events, flush_k=3):
+    session = make_engine(flush_k).open_window(
+        AdmissionWindow(lanes, n_max=N_MAX))
+    return list(session.stream(events))
+
+
+def assert_reports_bitequal(got, want, *, prefix=False):
+    if prefix:
+        assert len(got) <= len(want)
+    else:
+        assert len(got) == len(want)
+    for a, b in zip(got, want):
+        la = jax.tree_util.tree_flatten(a.fractional)[0]
+        lb = jax.tree_util.tree_flatten(b.fractional)[0]
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(a.iters),
+                                      np.asarray(b.iters))
+        np.testing.assert_array_equal(np.asarray(a.mask),
+                                      np.asarray(b.mask))
+
+
+def feed_reader(data, *, chunk=None):
+    """A StreamReader pre-loaded with `data` (optionally drip-fed)."""
+    reader = asyncio.StreamReader()
+    if chunk is None:
+        reader.feed_data(data)
+    else:
+        for i in range(0, len(data), chunk):
+            reader.feed_data(data[i:i + chunk])
+    reader.feed_eof()
+    return reader
+
+
+# --------------------------------------------------------------------------
+# Frame codec (no sockets)
+# --------------------------------------------------------------------------
+
+def test_frame_roundtrip_and_partial_reads():
+    """A frame split into 1-byte chunks reassembles to the same message."""
+    msg = {"type": "offer", "tenant": "t0", "cseq": 7}
+    data = wire.encode_frame(msg)
+
+    async def run():
+        whole = await wire.read_frame(feed_reader(data))
+        dripped = await wire.read_frame(feed_reader(data, chunk=1))
+        return whole, dripped
+
+    whole, dripped = asyncio.run(run())
+    assert whole == dripped == {"v": wire.PROTOCOL_VERSION, **msg}
+
+
+def test_oversized_frames_rejected_both_directions():
+    """Size limit binds at write time and before buffering at read time."""
+    big = {"type": "offer", "blob": "x" * 4096}
+    with pytest.raises(wire.FrameTooLargeError):
+        wire.encode_frame(big, max_frame=1024)
+
+    # a hostile header declaring > max_frame is rejected without reading
+    # the (absent) payload
+    header = struct.pack(">I", wire.MAX_FRAME_BYTES + 1)
+
+    async def run():
+        with pytest.raises(wire.FrameTooLargeError):
+            await wire.read_frame(feed_reader(header))
+
+    asyncio.run(run())
+
+
+@pytest.mark.parametrize("payload", [
+    b"\x00\xff\xfenot json",                     # undecodable bytes
+    json.dumps([1, 2, 3]).encode(),              # JSON but not an object
+    json.dumps({"v": 1, "no_type": True}).encode(),   # object, no type
+    json.dumps({"v": 1, "type": 42}).encode(),   # non-string type
+])
+def test_malformed_frames_rejected(payload):
+    data = struct.pack(">I", len(payload)) + payload
+
+    async def run():
+        with pytest.raises(wire.MalformedFrameError):
+            await wire.read_frame(feed_reader(data))
+
+    asyncio.run(run())
+
+
+def test_zero_length_frame_rejected():
+    async def run():
+        with pytest.raises(wire.MalformedFrameError):
+            await wire.read_frame(feed_reader(struct.pack(">I", 0)))
+
+    asyncio.run(run())
+
+
+def test_unknown_version_rejected():
+    payload = json.dumps({"v": 99, "type": "offer"}).encode()
+    data = struct.pack(">I", len(payload)) + payload
+
+    async def run():
+        with pytest.raises(wire.ProtocolVersionError):
+            await wire.read_frame(feed_reader(data))
+
+    asyncio.run(run())
+
+
+def test_truncated_frame_raises_incomplete_read():
+    """Connection dying mid-frame surfaces as IncompleteReadError."""
+    data = wire.encode_frame({"type": "offer", "cseq": 1})
+
+    async def run():
+        with pytest.raises(asyncio.IncompleteReadError):
+            await wire.read_frame(feed_reader(data[:-3]))
+        # ... and mid-header too
+        with pytest.raises(asyncio.IncompleteReadError):
+            await wire.read_frame(feed_reader(data[:2]))
+
+    asyncio.run(run())
+
+
+# --------------------------------------------------------------------------
+# Value codecs: bit-exactness
+# --------------------------------------------------------------------------
+
+def test_array_codec_bitexact():
+    rng = np.random.default_rng(0)
+    for arr in [rng.standard_normal((3, 5)),
+                rng.integers(0, 9, size=(4,), dtype=np.int32),
+                np.float64(1 / 3),                     # 0-d
+                np.asarray(True)]:
+        out = wire.decode_array(wire.encode_array(arr))
+        assert out.dtype == np.asarray(arr).dtype
+        np.testing.assert_array_equal(out, np.asarray(arr))
+
+
+def test_array_codec_rejects_inconsistent_payload():
+    enc = wire.encode_array(np.arange(4.0))
+    enc["shape"] = [3]                                  # byte count mismatch
+    with pytest.raises(wire.MalformedFrameError):
+        wire.decode_array(enc)
+    with pytest.raises(wire.MalformedFrameError):
+        wire.decode_array({"dtype": "<f8", "shape": [1], "data": "!!!"})
+
+
+def test_scenario_roundtrip_bitexact():
+    """Raw fields + deterministic re-derivation == bit-identical scenario."""
+    for seed in range(3):
+        scn = make_lanes(seed)[0]
+        out = wire.decode_scenario(wire.encode_scenario(scn))
+        la = jax.tree_util.tree_flatten(scn)[0]
+        lb = jax.tree_util.tree_flatten(out)[0]
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_event_roundtrip_all_kinds():
+    ev = arrival(5)
+    out = wire.decode_event(wire.encode_event(ev))
+    assert out.lane == ev.lane and out.params == ev.params
+    for ev in [ClassDeparture(lane=1, slot=2),
+               SLAEdit(lane=0, slot=1, updates={"H_up": 3.5}),
+               CapacityChange(lane=2, R=17.0)]:
+        out = wire.decode_event(wire.encode_event(ev))
+        assert out == ev
+    with pytest.raises(wire.MalformedFrameError):
+        wire.decode_event({"kind": "warp", "lane": 0})
+
+
+def test_report_roundtrip_bitexact():
+    session = make_engine().open_window(
+        AdmissionWindow(make_lanes(0), n_max=N_MAX))
+    session.offer(arrival(1))
+    report = session.flush()
+    entries = [(1, 0)]
+    out = wire.decode_report("t0", 0, wire.encode_report(report), entries)
+    assert_reports_bitequal([out], [report])
+    assert out.tickets == entries and out.error is None
+
+
+# --------------------------------------------------------------------------
+# Socket conformance (the tentpole contract)
+# --------------------------------------------------------------------------
+
+async def start_server(flush_k=3, queue_limit=256, **kw):
+    server = AllocServer(AllocDaemon(make_engine(flush_k),
+                                     queue_limit=queue_limit), **kw)
+    await server.start()
+    return server
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_socket_tenants_conformant_randomized(seed):
+    """Multi-tenant random traces over the wire: client-side AND
+    daemon-side reports bit-equal the offline replay per tenant."""
+    names = [f"t{i}" for i in range(3)]
+    lanes = {nm: make_lanes(seed * 10 + i) for i, nm in enumerate(names)}
+    traces = {nm: make_trace(seed * 100 + i * 7, lanes[nm], 9)
+              for i, nm in enumerate(names)}
+
+    async def run():
+        server = await start_server()
+        client = await AllocClient.connect(*server.address)
+        for nm in names:
+            await client.register_tenant(nm, lanes[nm], n_max=N_MAX,
+                                         quota=TenantQuota(max_queued=64))
+        tickets = []
+        for k in range(max(len(t) for t in traces.values())):
+            for nm in names:                      # interleave across tenants
+                if k < len(traces[nm]):
+                    tickets.append(client.offer(nm, traces[nm][k]))
+            await asyncio.sleep(0)
+        for tk in tickets:
+            assert await tk.ack() is True
+        await client.drain()
+        for tk in tickets:
+            assert (await tk.result()) is not None
+        got = ({nm: list(client.reports(nm)) for nm in names},
+               {nm: list(server.daemon.reports(nm)) for nm in names})
+        await client.close()
+        await server.close()
+        return got
+
+    client_reports, daemon_reports = asyncio.run(run())
+    for nm in names:
+        want = offline_replay(lanes[nm], traces[nm])
+        assert_reports_bitequal(client_reports[nm], want)
+        assert_reports_bitequal(daemon_reports[nm], want)
+
+
+def test_disconnect_mid_epoch_accepted_prefix_conformant():
+    """A client dying mid-epoch leaves a drained, replay-equal tenant."""
+    lanes = make_lanes(3)
+    trace = make_trace(11, lanes, 8)
+    cut = 5                        # flush_k=3: disconnect mid second epoch
+
+    async def run():
+        server = await start_server()
+        client = await AllocClient.connect(*server.address)
+        await client.register_tenant("t0", lanes, n_max=N_MAX)
+        for ev in trace[:cut]:
+            tk = client.offer("t0", ev)
+            assert await tk.ack() is True
+        await client.close()       # abrupt: no drain frame
+        daemon = server.daemon
+        for _ in range(500):       # let the handler's disconnect path run
+            if daemon.reports("t0") and not daemon._tenants["t0"].queued:
+                break
+            await asyncio.sleep(0.01)
+        got = list(daemon.reports("t0"))
+        await server.close()
+        return got
+
+    got = asyncio.run(run())
+    want = offline_replay(lanes, trace[:cut])
+    assert_reports_bitequal(got, want)
+
+
+def test_quota_exhaustion_rejects_with_paper_penalty():
+    """Offers beyond TenantQuota.max_queued are rejected with m * H_up,
+    and the accepted subtrace stays bit-equal to its offline replay."""
+    lanes = make_lanes(4)
+    events = [arrival(i) for i in range(6)]
+    quota = TenantQuota(max_queued=2)
+
+    async def run():
+        server = await start_server(flush_k=100)   # nothing flushes early
+        client = await AllocClient.connect(*server.address)
+        await client.register_tenant("t0", lanes, n_max=N_MAX, quota=quota)
+        tickets = [client.offer("t0", ev) for ev in events]
+        acks = [await tk.ack() for tk in tickets]
+        await client.drain()
+        stats = server.daemon.tenant_stats("t0")
+        got = list(client.reports("t0"))
+        penalties = [tk.penalty for tk in tickets]
+        await client.close()
+        await server.close()
+        return acks, penalties, stats, got
+
+    acks, penalties, stats, got = asyncio.run(run())
+    # un-flushed backlog (queued + folded-but-unflushed) caps at 2, and
+    # flush_k=100 means nothing flushes before the drain: first 2 accepted
+    assert acks == [True, True] + [False] * 4
+    for ok, pen, ev in zip(acks, penalties, events):
+        assert pen == (0.0 if ok else rejection_penalty(ev))
+        if not ok:
+            assert pen == abs(ev.params["m"]) * abs(ev.params["H_up"]) > 0
+    assert stats["rejected"] == 4.0
+    assert stats["rejection_cost"] == pytest.approx(
+        sum(p for p in penalties if p))
+    want = offline_replay(lanes, events[:2], flush_k=100)
+    assert_reports_bitequal(got, want)
+
+
+def test_flush_request_forces_epoch_boundary():
+    """A wire flush == an explicit WindowSession.flush at that point."""
+    lanes = make_lanes(5)
+    evs = [arrival(7), arrival(8)]
+
+    async def run():
+        server = await start_server(flush_k=100)
+        client = await AllocClient.connect(*server.address)
+        await client.register_tenant("t0", lanes, n_max=N_MAX)
+        for ev in evs:
+            assert await client.offer("t0", ev).ack() is True
+        report = await client.flush("t0")
+        await client.close()
+        await server.close()
+        return report
+
+    got = asyncio.run(run())
+    offline = make_engine(flush_k=100).open_window(
+        AdmissionWindow(lanes, n_max=N_MAX))
+    for ev in evs:
+        offline.offer(ev)
+    want = offline.flush()
+    assert_reports_bitequal([got], [want])
+    assert [slot for _, slot in got.tickets] == list(offline.last_slots)
+
+
+# --------------------------------------------------------------------------
+# Server-side protocol rejection over real sockets
+# --------------------------------------------------------------------------
+
+async def raw_exchange(server, data):
+    """Write raw bytes to the server, return (frames, eof_seen)."""
+    reader, writer = await asyncio.open_connection(*server.address)
+    writer.write(data)
+    await writer.drain()
+    frames, eof = [], False
+    try:
+        while True:
+            frames.append(await wire.read_frame(reader))
+    except (asyncio.IncompleteReadError, ConnectionError):
+        eof = True
+    writer.close()
+    return frames, eof
+
+
+@pytest.mark.parametrize("raw, code", [
+    (struct.pack(">I", 2 * wire.MAX_FRAME_BYTES), "frame_too_large"),
+    (struct.pack(">I", 9) + b"\xffgarbage!", "malformed_frame"),
+    (lambda: (lambda p: struct.pack(">I", len(p)) + p)(
+        json.dumps({"v": 42, "type": "offer"}).encode()), "bad_version"),
+])
+def test_server_rejects_protocol_violations_and_closes(raw, code):
+    data = raw() if callable(raw) else raw
+
+    async def run():
+        server = await start_server()
+        frames, eof = await raw_exchange(server, data)
+        await server.close()
+        return frames, eof
+
+    frames, eof = asyncio.run(run())
+    assert eof, "server must close the connection after a framing violation"
+    assert len(frames) == 1
+    assert frames[0]["type"] == "error" and frames[0]["code"] == code
+
+
+def test_unknown_message_type_keeps_connection():
+    """Frame boundaries survive an unknown type: error reply, then the
+    connection still accepts a registration."""
+
+    async def run():
+        server = await start_server()
+        client = await AllocClient.connect(*server.address)
+        fut = client._expect("register_tenant")
+        client._send({"type": "sudo"})
+        client._send({"type": "register_tenant", "tenant": "t0",
+                      "lanes": [wire.encode_scenario(s)
+                                for s in make_lanes(0)],
+                      "n_max": N_MAX, "quota": None})
+        ack = await asyncio.wait_for(fut, 30)
+        tenants = server.daemon.tenants
+        await client.close()
+        await server.close()
+        return ack, tenants
+
+    ack, tenants = asyncio.run(run())
+    assert ack["type"] == "register_tenant" and ack["tenant"] == "t0"
+    assert "t0" in tenants
+
+
+def test_application_errors_keep_connection():
+    """Unknown-tenant offers and duplicate registrations answer with
+    error frames but do not kill the session."""
+
+    async def run():
+        server = await start_server()
+        client = await AllocClient.connect(*server.address)
+        lanes = make_lanes(1)
+        with pytest.raises(wire.RemoteError):
+            tk = client.offer("ghost", arrival(0))
+            await tk.ack()
+        await client.register_tenant("t0", lanes, n_max=N_MAX)
+        with pytest.raises(wire.RemoteError) as exc:
+            await client.register_tenant("t0", lanes, n_max=N_MAX)
+        tk = client.offer("t0", arrival(1))     # still usable
+        ok = await tk.ack()
+        await client.drain()
+        await client.close()
+        await server.close()
+        return ok, exc.value.code
+
+    ok, code = asyncio.run(run())
+    assert ok is True
+    assert code == "ValueError"
+
+
+def test_register_rejects_quota_violating_window():
+    """An initial window wider than quota.max_lanes is refused at
+    registration (engine-side QuotaExceededError surfaced as an error
+    frame), and the tenant is not created."""
+
+    async def run():
+        server = await start_server()
+        client = await AllocClient.connect(*server.address)
+        with pytest.raises(wire.RemoteError) as exc:
+            await client.register_tenant(
+                "t0", make_lanes(2), n_max=N_MAX,
+                quota=TenantQuota(max_lanes=B - 1))
+        tenants = server.daemon.tenants
+        await client.close()
+        await server.close()
+        return exc.value.code, tenants
+
+    code, tenants = asyncio.run(run())
+    assert code == "QuotaExceededError"
+    assert "t0" not in tenants
