@@ -14,6 +14,15 @@ scenarios/sec per device count.  Each device's shard exits as soon as its
 own lanes converge, so throughput scales with devices even before real
 parallel hardware enters.
 
+``--fused`` benchmarks the fused Alg. 4.1 iteration kernel
+(``repro.kernels.gnep_iter``) against the unfused dispatch chain at a
+pinned iteration count (``eps_bar=0`` + ``max_iters=steps`` forces every
+lane through exactly ``steps`` iterations, so the wall-clock ratio is a
+pure per-iteration cost ratio).  The gated ``speedup`` compares f64
+against f64 — same element width, pure fusion win; the f32 fast-path
+ratio is recorded ungated because CPU runners make it noise-dominated
+(see docs/OPERATIONS.md on dtype policies).
+
 ``--json PATH`` additionally writes the machine-readable record
 (``BENCH_allocator.json`` by convention) that ``scripts/check_bench.py``
 gates CI against.
@@ -31,6 +40,7 @@ if "--shard" in sys.argv:
     force_host_devices()
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timed, write_bench_json
@@ -93,6 +103,56 @@ def run_batch(batch_sizes=(16, 64, 256), n=17, ragged=False, iters=3):
     return last
 
 
+def run_fused(B=64, n=17, steps=48, iters=7):
+    """Fused vs unfused iteration throughput at a pinned iteration count.
+
+    ``eps_bar=0.0`` (never satisfiable) with ``max_iters=steps`` pins every
+    lane to exactly ``steps`` best-reply iterations, so the fused and
+    unfused programs do identical algorithmic work and their wall-clock
+    ratio isolates per-iteration cost (hoisted prep + one fused body vs the
+    re-derived dispatch chain).  Median of ``iters`` timed runs after a
+    compile warmup; the f32 row reuses the fused program on a down-cast
+    batch and is reported ungated.
+    """
+    import dataclasses  # local: only this mode rewrites batch leaf dtypes
+
+    from repro.kernels.gnep_iter.ops import make_fused_iter_fn
+
+    scns = make_scenarios(B, n, ragged=False)
+    batch = stack_scenarios(scns)
+    it_fn = make_fused_iter_fn()
+
+    def cast32(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(jnp.float32)
+        return x
+
+    batch32 = jax.tree_util.tree_map(cast32, batch)
+
+    def bench(b, iter_fn):
+        def once():
+            sol = solve_distributed_batch(b, eps_bar=0.0, lam=0.05,
+                                          max_iters=steps, iter_fn=iter_fn)
+            jax.block_until_ready(sol.r)
+        return timed(once, iters=iters)
+
+    t_unfused = bench(batch, None)
+    t_fused = bench(batch, it_fn)
+    t_fused32 = bench(batch32, it_fn)
+    ips = B * steps / t_fused
+    out = {"B": B, "n": n, "steps": steps,
+           "iter": it_fn.__name__, "dtype_policy": "f64-vs-f64",
+           "iterations_per_sec": ips,
+           "unfused_iterations_per_sec": B * steps / t_unfused,
+           "speedup": t_unfused / t_fused,
+           "f32_speedup": t_unfused / t_fused32}
+    row(f"alloc_fused_B{B}_n{n}_steps{steps}", t_fused,
+        f"unfused_s={t_unfused:.4f};fused_s={t_fused:.4f};"
+        f"fused32_s={t_fused32:.4f};ips={ips:.0f};"
+        f"speedup={out['speedup']:.2f}x;f32_speedup={out['f32_speedup']:.2f}x")
+    return out
+
+
 def run_shard(B=256, n=96, ragged=True, iters=3, device_counts=None):
     """Sharded engine across growing lane-mesh sizes, steady state: the
     batch is placed on the mesh ONCE (``shard_batch``, the fleet-sweep
@@ -139,6 +199,9 @@ def main(argv=None):
                     help="benchmark the batched multi-scenario engine")
     ap.add_argument("--shard", action="store_true",
                     help="benchmark the device-sharded engine (lane mesh)")
+    ap.add_argument("--fused", action="store_true",
+                    help="benchmark the fused Alg. 4.1 iteration kernel vs "
+                         "the unfused dispatch chain")
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=[16, 64, 256])
     ap.add_argument("--n", type=int, default=17, help="classes per scenario")
     ap.add_argument("--ragged", action="store_true",
@@ -169,7 +232,12 @@ def main(argv=None):
         bs = [16] if args.smoke else args.batch_sizes
         results["batch"] = run_batch(bs, n=args.n, ragged=args.ragged,
                                      iters=iters)
-    if not (args.batch or args.shard):
+    if args.fused:
+        # same sizes in smoke and full: the fixed-iteration methodology is
+        # already small (B*steps solves of n=17), and the gated ratio needs
+        # the ISSUE-9 reference point (B=64) verbatim
+        results["fused"] = run_fused(iters=7)
+    if not (args.batch or args.shard or args.fused):
         results["single"] = run([100] if args.smoke else tuple(args.sizes))
 
     if args.json:

@@ -2,7 +2,16 @@
 
 Prints one CSV row per (arch x shape) cell with the three terms, bottleneck,
 MODEL_FLOPS/HLO_FLOPs, and flags the hillclimb candidates (worst compute
-fraction / most collective-bound / technique-representative)."""
+fraction / most collective-bound / technique-representative).
+
+``--fused-iter`` (implied by ``--smoke``) adds one LIVE row for the fused
+Alg. 4.1 iteration kernel (``repro.kernels.gnep_iter``): the analytic
+flop/byte tally of the O(B x Nc x N) middle plus the measured iteration
+rate at a pinned iteration count, so the arithmetic-intensity picture that
+motivates the f32 dtype policy (halved bytes, identical flops) is a
+number in CI output rather than prose.  ``--smoke`` is what
+``scripts/ci.sh`` runs in the full tier."""
+import argparse
 import json
 from pathlib import Path
 
@@ -91,5 +100,72 @@ def run(mesh="single"):
     return recs
 
 
+def run_fused_iter(B=64, n=17, steps=12, iters=3):
+    """One live roofline row for the fused Alg. 4.1 iteration kernel.
+
+    Analytic tally of the fused middle per iteration (Nc = n + 2
+    candidates): ~6 flops per (candidate, class) cell (compare, two adds,
+    clip's two compares, multiply-accumulate) against the minimum unique
+    traffic — the three (B, N) class streams and the (B, Nc) candidate
+    row read once, the three (B, Nc) accumulators kept resident (that
+    residency is the kernel's VMEM-scratch point, so the model charges
+    them once, not per class column).  The measured side pins the
+    iteration count (``eps_bar=0`` + ``max_iters=steps``) and divides
+    wall-clock across the whole fused body, so the achieved flop rate is
+    a conservative lower bound for the middle alone.
+    """
+    import jax
+
+    from benchmarks.common import timed
+    from repro.core.game import solve_distributed_batch
+    from repro.core.profiles import sample_scenario
+    from repro.core.types import stack_scenarios
+    from repro.kernels.gnep_iter.ops import make_fused_iter_fn
+
+    batch = stack_scenarios(
+        [sample_scenario(jax.random.PRNGKey(i), n, capacity_factor=0.95)
+         for i in range(B)])
+    nc = n + 2
+    itemsize = jax.numpy.asarray(batch.scenarios.p).dtype.itemsize
+    flops = 6.0 * B * nc * n
+    bytes_ = float(itemsize) * B * (3 * n + 4 * nc)
+    intensity = flops / bytes_
+
+    it_fn = make_fused_iter_fn()
+
+    def once():
+        sol = solve_distributed_batch(batch, eps_bar=0.0, lam=0.05,
+                                      max_iters=steps, iter_fn=it_fn)
+        jax.block_until_ready(sol.r)
+
+    t = timed(once, iters=iters)
+    t_iter = t / steps
+    row(f"roofline_fused_iter_B{B}_n{n}", t_iter,
+        f"flops_per_iter={flops:.3g};min_bytes_per_iter={bytes_:.3g};"
+        f"intensity_flops_per_byte={intensity:.2f};"
+        f"iters_per_sec={B * steps / t:.0f};"
+        f"achieved_gflops={flops / t_iter / 1e9:.3f}")
+    return {"B": B, "n": n, "steps": steps, "flops_per_iter": flops,
+            "min_bytes_per_iter": bytes_, "intensity": intensity,
+            "iter_s": t_iter}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="single",
+                    help="which dry-run mesh's JSONs to assemble")
+    ap.add_argument("--fused-iter", action="store_true",
+                    help="measure the live fused Alg. 4.1 iteration row")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI smoke: assemble whatever dry-run rows "
+                         "exist and measure the fused-iteration row at a "
+                         "short pinned iteration count")
+    args = ap.parse_args(argv)
+    recs = run(args.mesh)
+    if args.smoke or args.fused_iter:
+        run_fused_iter(steps=12 if args.smoke else 48)
+    return recs
+
+
 if __name__ == "__main__":
-    run()
+    main()

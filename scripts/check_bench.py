@@ -50,6 +50,7 @@ GATED = {
     "scaling": "ratio",
     "scenarios_per_sec": "throughput",
     "events_per_sec": "throughput",
+    "iterations_per_sec": "throughput",
     "admission_p50_ms": "latency",
     "admission_p99_ms": "latency",
 }
@@ -63,10 +64,15 @@ GATED = {
 #: comparable, nor are runs at different tenant counts, rates or queue
 #: bounds; "transport" tags in-process vs wire-socket daemon records —
 #: end-to-end socket latency and in-process latency are different
-#: quantities and must never be silently compared)
+#: quantities and must never be silently compared; "iter" /
+#: "dtype_policy" / "steps" tag the fused-iteration section — a
+#: fused-kernel speedup measured under a different iter_fn, element-width
+#: policy or pinned iteration count is a different experiment and must
+#: hard-fail the compare instead of silently passing)
 CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
                "ragged", "path", "residency", "arrival", "transport",
-               "tenants", "rate", "flush_k", "queue_limit")
+               "tenants", "rate", "flush_k", "queue_limit",
+               "iter", "dtype_policy", "steps")
 
 
 class TruncatedBenchError(Exception):

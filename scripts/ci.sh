@@ -49,10 +49,19 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== allocator benchmark smoke (batched + sharded engine) =="
-python -m benchmarks.allocator_perf --batch --shard --smoke \
+echo "== allocator benchmark smoke (batched + sharded + fused engine) =="
+# --fused gates the fused Alg. 4.1 iteration kernel's f64-vs-f64 speedup
+# (ISSUE 9); the fused-iter differential test suite itself runs in the
+# tier-1 pytest pass above (fast tier included — none of it is slow-marked)
+python -m benchmarks.allocator_perf --batch --shard --fused --smoke \
     --json "${BENCH_DIR}/BENCH_allocator.json"
 python -m benchmarks.allocator_perf --smoke
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== roofline smoke (fused-iteration arithmetic intensity) =="
+    # full tier only: informational rows (no gate), skipped under --fast
+    python -m benchmarks.roofline --smoke
+fi
 
 echo "== streaming admission engine smoke (warm + coalesced + sharded + resident) =="
 # --shard measures BOTH residency modes: the host-round-trip shard path and

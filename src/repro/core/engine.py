@@ -37,6 +37,7 @@ another ``solve_*`` variant.
 """
 from __future__ import annotations
 
+import re
 import time
 from dataclasses import dataclass, replace
 from typing import (Any, Callable, Iterable, Iterator, List, Optional,
@@ -133,6 +134,31 @@ class TenantQuota:
 # --------------------------------------------------------------------------
 
 
+_F32_CHECKED_RE = re.compile(r"f32_checked(?:\[:([1-9]\d*)\])?$")
+
+
+def _parse_dtype_policy(policy: str):
+    """Parse a ``SolverConfig.dtype_policy`` string.
+
+    Parameters
+    ----------
+    policy : str
+        ``"f64"``, ``"f32_checked"`` or ``"f32_checked[:k]"``.
+
+    Returns
+    -------
+    tuple or None
+        ``("f64", None)`` or ``("f32_checked", k)`` (k defaults to 4);
+        None when the string is not a valid policy.
+    """
+    if policy == "f64":
+        return ("f64", None)
+    m = _F32_CHECKED_RE.fullmatch(policy)
+    if m:
+        return ("f32_checked", int(m.group(1)) if m.group(1) else 4)
+    return None
+
+
 @dataclass(frozen=True)
 class SolverConfig:
     """Every Algorithm 4.1 knob, kernel choice and placement in one object.
@@ -156,12 +182,37 @@ class SolverConfig:
         recompiles).
     dtype : jnp.dtype or str, optional
         Float dtype scenario leaves are coerced to by :func:`_coerce`.
-        ``None`` (default) keeps each input's native dtype.
+        ``None`` (default) keeps each input's native dtype.  Mutually
+        exclusive with ``dtype_policy`` (which subsumes it).
+    dtype_policy : str, optional
+        Checked precision policy, the supported alternative to raw
+        ``dtype``: ``"f64"`` coerces every solve to float64 (the bit
+        authority); ``"f32_checked"`` (optionally ``"f32_checked[:k]"``,
+        default k=4) runs the fast float32 path and then re-solves ``k``
+        evenly-spaced sample lanes of every batched/streaming solve in
+        float64 on the unfused reference path, raising ``RuntimeError``
+        (naming the lanes) if any sampled lane's allocation deviates
+        beyond the documented bound ``2 * eps_bar`` relative — both
+        precisions are ``eps_bar``-converged equilibria of the same
+        game, so they can legitimately sit anywhere inside one stopping
+        tolerance of each other, and the check flags anything worse.
+        Reports carry the measurement in ``dtype_check``.  ``None``
+        (default) applies no policy.  See docs/OPERATIONS.md for how to
+        choose (and the CPU-runner caveats).
     sweep_fn : callable, optional
         Batched RM price-sweep override, e.g. the Pallas kernel from
         ``repro.kernels.gnep_sweep.ops.make_batched_sweep_fn`` — applied on
         every batched/streaming solve.  Pass a memoized function object
         (it keys the compiled-program caches by identity).
+    iter_fn : object, optional
+        Fused-iteration override, e.g.
+        ``repro.kernels.gnep_iter.ops.make_fused_iter_fn()``: the whole
+        Alg. 4.1 inner iteration (sweep + best responses + bid update +
+        eps) runs as one fused step per while-loop body, with the
+        iteration-invariant prep hoisted out of the loop.  Takes
+        precedence over ``sweep_fn`` on every batched/streaming solve.
+        Pass a memoized object (identity keys the compiled-program
+        caches); its ``__name__`` is recorded in the fingerprint.
     mesh : jax.sharding.Mesh, optional
         1-D lane mesh (``repro.core.sharding.lane_mesh``): batched and
         streaming solves shard their lanes across the mesh's devices,
@@ -186,6 +237,42 @@ class SolverConfig:
     sweep_fn: Optional[Callable] = None
     mesh: Optional[Any] = None
     residency: str = "round-trip"
+    iter_fn: Optional[Any] = None
+    dtype_policy: Optional[str] = None
+
+    def __post_init__(self):
+        if self.dtype_policy is None:
+            return
+        if self.dtype is not None:
+            raise ValueError(
+                "dtype= and dtype_policy= are mutually exclusive — "
+                "dtype_policy subsumes the cast (use dtype_policy alone)")
+        if _parse_dtype_policy(self.dtype_policy) is None:
+            raise ValueError(
+                f"unknown dtype_policy {self.dtype_policy!r} — expected "
+                "'f64', 'f32_checked' or 'f32_checked[:k]' with k >= 1")
+
+    def effective_dtype(self):
+        """The dtype scenario leaves are coerced to under this config.
+
+        Returns
+        -------
+        jnp.dtype or None
+            ``dtype_policy``'s cast when a policy is set (f64 / f32),
+            otherwise the raw ``dtype`` knob (``None`` = keep native).
+        """
+        if self.dtype_policy is None:
+            return self.dtype
+        mode, _ = _parse_dtype_policy(self.dtype_policy)
+        return jnp.float64 if mode == "f64" else jnp.float32
+
+    def check_sample(self) -> int:
+        """Sample-lane count of the ``f32_checked`` cross-check (0 if the
+        policy does not check)."""
+        if self.dtype_policy is None:
+            return 0
+        mode, k = _parse_dtype_policy(self.dtype_policy)
+        return k if mode == "f32_checked" else 0
 
     def fingerprint(self) -> str:
         """Stable identity string for benchmark / baseline provenance.
@@ -200,9 +287,11 @@ class SolverConfig:
         str
             ``eps_bar=..|lam=..|max_iters=..|dtype=..|sweep=..|mesh=..``;
             the sweep kernel contributes its ``__name__``, the mesh its
-            shape and axis names.  A non-default ``residency`` appends
-            ``|residency=..`` (the default appends nothing, so fingerprints
-            recorded before the residency knob existed stay comparable).
+            shape and axis names.  Non-default ``residency`` / ``iter_fn``
+            / ``dtype_policy`` append ``|residency=..`` / ``|iter=..`` /
+            ``|dtype_policy=..`` in that order (defaults append nothing,
+            so fingerprints recorded before each knob existed stay
+            comparable).
         """
         dtype = ("native" if self.dtype is None
                  else jnp.dtype(self.dtype).name)
@@ -214,6 +303,11 @@ class SolverConfig:
                 + ":" + ",".join(self.mesh.axis_names))
         tail = ("" if self.residency == "round-trip"
                 else f"|residency={self.residency}")
+        if self.iter_fn is not None:
+            tail += "|iter=" + getattr(self.iter_fn, "__name__",
+                                       type(self.iter_fn).__name__)
+        if self.dtype_policy is not None:
+            tail += f"|dtype_policy={self.dtype_policy}"
         return (f"eps_bar={self.eps_bar}|lam={self.lam}"
                 f"|max_iters={self.max_iters}|dtype={dtype}"
                 f"|sweep={sweep}|mesh={mesh}{tail}")
@@ -385,10 +479,16 @@ class BatchSolveReport(SolveReport):
     feasible : jnp.ndarray
         (B,) per-lane feasibility flags (``sum(r_low) <= R`` and all
         ``E_i < 0``).
+    dtype_check : dict or None
+        The ``dtype_policy="f32_checked"`` measurement: sampled ``lanes``,
+        worst per-lane relative allocation deviation ``max_rel`` vs the
+        f64 reference re-solve, and the ``bound`` it was held to.  None
+        when no checking policy is active.
     """
     mask: Optional[jnp.ndarray] = None
     n_classes: Optional[jnp.ndarray] = None
     feasible: Optional[jnp.ndarray] = None
+    dtype_check: Optional[dict] = None
 
     @property
     def batch_size(self) -> int:
@@ -518,6 +618,85 @@ def _cast_floats(tree, dtype):
         tree)
 
 
+def _dtype_check(cfg: "SolverConfig", batch: ScenarioBatch, sol: Solution,
+                 masks=None) -> Optional[dict]:
+    """The ``dtype_policy="f32_checked"`` cross-check of a batched solve.
+
+    Re-solves ``cfg.check_sample()`` evenly-spaced sample lanes in float64
+    on the unfused reference path (cold start, no kernels, no mesh — the
+    most conservative configuration available) and compares allocations.
+    Both solves are ``eps_bar``-converged equilibria of the same game, so
+    their allocations can legitimately differ by up to one stopping
+    tolerance each; the check holds the per-lane relative L1 deviation to
+    ``2 * cfg.eps_bar`` (plus a small absolute slack for near-zero
+    allocations) and raising past it means the f32 path left the f64
+    equilibrium's basin — a real precision failure, not rounding noise.
+
+    Parameters
+    ----------
+    cfg : SolverConfig
+        The active config (supplies ``eps_bar`` and the sample count).
+    batch : ScenarioBatch
+        The batch that was solved (f32 leaves under the policy).
+    sol : Solution
+        The f32 solution to audit.
+    masks : jnp.ndarray, optional
+        Lane-validity mask ((B,) bool) restricting which lanes may be
+        sampled — streaming windows pass their occupancy so free slots
+        are never audited.  None samples over all lanes.
+
+    Returns
+    -------
+    dict or None
+        ``{"lanes": [...], "max_rel": float, "bound": float}``; None when
+        the config's policy does not check or no lane is eligible.
+
+    Raises
+    ------
+    RuntimeError
+        Naming the offending lanes when any sampled lane deviates beyond
+        the bound.
+    """
+    k = cfg.check_sample()
+    if k == 0:
+        return None
+    if not jax.config.jax_enable_x64:
+        # Without x64 the float64 re-solve silently truncates back to f32
+        # and the "check" compares the fast path against itself.
+        raise RuntimeError(
+            f"dtype_policy={cfg.dtype_policy!r} needs jax_enable_x64: with "
+            "x64 disabled the f64 reference re-solve truncates to float32 "
+            "and the cross-check can never fail")
+    eligible = (np.arange(batch.batch_size) if masks is None
+                else np.flatnonzero(np.asarray(masks)))
+    if eligible.size == 0:
+        return None
+    k = min(k, eligible.size)
+    pick = np.unique(np.linspace(0, eligible.size - 1, k).round().astype(int))
+    lanes = [int(b) for b in eligible[pick]]
+
+    sub = batch.take(np.asarray(lanes))
+    sub64 = ScenarioBatch(
+        scenarios=_cast_floats(sub.scenarios, jnp.float64),
+        mask=sub.mask, n_classes=sub.n_classes)
+    ref = game.solve_distributed_batch(sub64, eps_bar=cfg.eps_bar,
+                                       lam=cfg.lam, max_iters=cfg.max_iters)
+    r32 = jnp.asarray(sol.r)[np.asarray(lanes)].astype(jnp.float64)
+    r64 = ref.r
+    dev = jnp.sum(jnp.abs(r32 - r64), axis=1)
+    scale = jnp.maximum(jnp.sum(jnp.abs(r64), axis=1), 1.0)
+    rel = np.asarray(dev / scale)
+    bound = 2.0 * cfg.eps_bar + 1e-6
+    if np.any(rel > bound):
+        bad = [lanes[i] for i in np.flatnonzero(rel > bound)]
+        raise RuntimeError(
+            f"dtype_policy={cfg.dtype_policy!r}: lanes {bad} deviate from "
+            f"the f64 reference beyond {bound:.3g} relative "
+            f"(worst {float(rel.max()):.3g}) — the f32 fast path is not "
+            "trustworthy for this workload; use dtype_policy='f64'")
+    return {"lanes": lanes, "max_rel": float(rel.max()), "bound": bound}
+
+
 # --------------------------------------------------------------------------
 # The engine
 # --------------------------------------------------------------------------
@@ -555,6 +734,16 @@ class CapacityEngine:
             raise ValueError(
                 "residency='resident' needs a mesh= in the SolverConfig "
                 "(repro.core.sharding.lane_mesh)")
+        if (self.config.check_sample() > 0
+                and self.config.residency == "resident"):
+            # the resident flush donates its warm-start buffers to the
+            # solve, so the f64 shadow re-solve the check needs cannot see
+            # the same init — refusing keeps the check's semantics exact
+            # instead of silently weakening them
+            raise ValueError(
+                "dtype_policy='f32_checked' is not supported with "
+                "residency='resident' — use residency='round-trip' for "
+                "checked f32, or dtype_policy='f64' for resident sessions")
 
     # ------------------------------------------------------------- one-shot
     def solve(self, problem, *, method: str = "distributed",
@@ -601,13 +790,14 @@ class CapacityEngine:
         if method != "distributed":
             raise ValueError("batched solves support method='distributed' "
                              f"only, got {method!r}")
-        return self._solve_batch(_coerce(problem, dtype=self.config.dtype),
-                                 check_feasible)
+        return self._solve_batch(
+            _coerce(problem, dtype=self.config.effective_dtype()),
+            check_feasible)
 
     def _solve_single(self, scn: Scenario, method: str) -> SolveReport:
         cfg = self.config
-        if cfg.dtype is not None:
-            scn = _cast_floats(scn, cfg.dtype)
+        if cfg.effective_dtype() is not None:
+            scn = _cast_floats(scn, cfg.effective_dtype())
         t0 = time.perf_counter()
         if method == "centralized":
             sol = solve_centralized(scn)
@@ -628,6 +818,20 @@ class CapacityEngine:
                 f"sum(r_low)={float(jnp.sum(scn.r_low)):.1f} "
                 f"> R={float(scn.R):.1f} or some E_i >= 0")
 
+        if cfg.check_sample() > 0 and method == "distributed":
+            # single-instance flavor of _dtype_check: one f64 re-solve
+            sol64 = game.solve_distributed(
+                _cast_floats(scn, jnp.float64), eps_bar=cfg.eps_bar,
+                lam=cfg.lam, max_iters=cfg.max_iters)
+            dev = float(jnp.sum(jnp.abs(sol.r.astype(jnp.float64) - sol64.r)))
+            scale = max(float(jnp.sum(jnp.abs(sol64.r))), 1.0)
+            bound = 2.0 * cfg.eps_bar + 1e-6
+            if dev / scale > bound:
+                raise RuntimeError(
+                    f"dtype_policy={cfg.dtype_policy!r}: instance deviates "
+                    f"from the f64 reference beyond {bound:.3g} relative "
+                    f"({dev / scale:.3g}) — use dtype_policy='f64'")
+
         integer_sol = (round_solution(scn, sol.r, sol.sM, sol.sR, sol.psi)
                        if self.policies.rounding.enabled else None)
         return SolveReport(method=method, fractional=sol, integer=integer_sol,
@@ -642,11 +846,13 @@ class CapacityEngine:
                                            lam=cfg.lam,
                                            max_iters=cfg.max_iters,
                                            sweep_fn=cfg.sweep_fn,
-                                           mesh=cfg.mesh)
+                                           mesh=cfg.mesh,
+                                           iter_fn=cfg.iter_fn)
         if check_feasible and not bool(jnp.all(sol.feasible)):
             bad = [int(b) for b in jnp.nonzero(~sol.feasible)[0]]
             raise InfeasibleError(f"instances {bad} infeasible: "
                                   "sum(r_low) > R or some E_i >= 0")
+        dtype_check = _dtype_check(cfg, batch, sol)
 
         integer_sol = (round_solution_batch(batch, sol.r, sol.sM, sol.sR,
                                             sol.psi)
@@ -656,7 +862,8 @@ class CapacityEngine:
                                 config=cfg,
                                 elapsed_s=time.perf_counter() - t0,
                                 mask=batch.mask, n_classes=batch.n_classes,
-                                feasible=sol.feasible)
+                                feasible=sol.feasible,
+                                dtype_check=dtype_check)
 
     # ------------------------------------------------------------ sessions
     def open_window(self, lanes, *, n_max: Optional[int] = None,
@@ -692,7 +899,7 @@ class CapacityEngine:
         """
         if isinstance(lanes, AdmissionWindow):
             return WindowSession(self, lanes, quota=quota)
-        batch = _coerce(lanes, dtype=self.config.dtype)
+        batch = _coerce(lanes, dtype=self.config.effective_dtype())
         scns = [batch.instance(b) for b in range(batch.batch_size)]
         window = AdmissionWindow(scns, n_max=n_max or batch.n_max,
                                  growth_factor=growth_factor)
@@ -731,9 +938,12 @@ class CapacityEngine:
                                            lam=cfg.lam,
                                            max_iters=cfg.max_iters,
                                            sweep_fn=cfg.sweep_fn, init=init,
-                                           mesh=cfg.mesh)
+                                           mesh=cfg.mesh, iter_fn=cfg.iter_fn)
         window.commit(sol.r, sol.aux, sol.iters)
-        return self._window_report(window, batch, sol, resolved, t0)
+        dtype_check = _dtype_check(cfg, batch, sol,
+                                   masks=np.asarray(batch.mask).any(axis=1))
+        return self._window_report(window, batch, sol, resolved, t0,
+                                   dtype_check=dtype_check)
 
     def _solve_window_resident(self,
                                window: AdmissionWindow) -> WindowSolveReport:
@@ -748,7 +958,8 @@ class CapacityEngine:
         init, resolved = window.resident_warm_start(rbatch)
         sol_p = sharding.solve_resident_batch(
             rbatch, window.resident_mesh, eps_bar=cfg.eps_bar, lam=cfg.lam,
-            max_iters=cfg.max_iters, sweep_fn=cfg.sweep_fn, init=init)
+            max_iters=cfg.max_iters, sweep_fn=cfg.sweep_fn, init=init,
+            iter_fn=cfg.iter_fn)
         del init                  # donated: unusable after the solve
         window.commit(sol_p.r, sol_p.aux, sol_p.iters)
         b = window.batch_size
@@ -761,8 +972,9 @@ class CapacityEngine:
         return self._window_report(window, window.batch, sol, resolved, t0)
 
     def _window_report(self, window: AdmissionWindow, batch: ScenarioBatch,
-                       sol, resolved: np.ndarray,
-                       t0: float) -> WindowSolveReport:
+                       sol, resolved: np.ndarray, t0: float,
+                       dtype_check: Optional[dict] = None
+                       ) -> WindowSolveReport:
         """Shared tail of both flush paths: centralized cross-check,
         Algorithm 4.2 rounding, report assembly — all over the LOGICAL
         lane count."""
@@ -802,7 +1014,8 @@ class CapacityEngine:
                                  elapsed_s=time.perf_counter() - t0,
                                  mask=batch.mask, n_classes=batch.n_classes,
                                  feasible=sol.feasible, resolved=resolved,
-                                 centralized_gap=gap)
+                                 centralized_gap=gap,
+                                 dtype_check=dtype_check)
 
 
 class WindowSession:

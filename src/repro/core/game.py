@@ -346,7 +346,8 @@ def _lane_eps(r_new, r_old, mask):
 
 
 def _solve_batch_core(batch: ScenarioBatch, eps_bar, lam, max_iters,
-                      sweep_fn, init: Optional[BatchWarmStart]) -> Solution:
+                      sweep_fn, init: Optional[BatchWarmStart],
+                      iter_fn=None) -> Solution:
     """Traceable body of the batched Algorithm 4.1 (see the public wrapper
     ``solve_distributed_batch`` for semantics).  Called directly — on the
     local lane slice — by the shard_map body in ``repro.core.sharding``."""
@@ -371,18 +372,32 @@ def _solve_batch_core(batch: ScenarioBatch, eps_bar, lam, max_iters,
                                       sum_fill.astype(dt), p_fill.astype(dt),
                                       order, mask)
 
+    if iter_fn is not None:
+        # fused path: the iteration-invariant prep (greedy order, slack,
+        # r_low aggregates) is hoisted out of the while_loop once; each
+        # body evaluation is one fused step (repro.kernels.gnep_iter).
+        prep = iter_fn.prepare(scns, mask)
+
+        def iterate(s: BatchGameState):
+            return iter_fn.step(prep, scns, mask, s.r, s.bids, lam)
+    else:
+        def iterate(s: BatchGameState):
+            rho, r_new, _ = rm_batch(s.bids)
+            psi, _, _ = jax.vmap(
+                lambda scn, r, m: cm_best_response(scn, r, mask=m)
+            )(scns, r_new, mask)
+            bids_new = jax.vmap(
+                lambda scn, b, rh, ps, m: cm_bid_update(scn, b, rh, ps, lam,
+                                                        mask=m)
+            )(scns, s.bids, rho, psi, mask)
+            eps = jax.vmap(_lane_eps)(r_new, s.r, mask)
+            return r_new, rho, bids_new, eps
+
     def cond(s: BatchGameState):
         return jnp.any(s.active) & (s.it < max_iters)
 
     def body(s: BatchGameState):
-        rho, r_new, _ = rm_batch(s.bids)
-        psi, _, _ = jax.vmap(lambda scn, r, m: cm_best_response(scn, r, mask=m)
-                             )(scns, r_new, mask)
-        bids_new = jax.vmap(
-            lambda scn, b, rh, ps, m: cm_bid_update(scn, b, rh, ps, lam,
-                                                    mask=m)
-        )(scns, s.bids, rho, psi, mask)
-        eps = jax.vmap(_lane_eps)(r_new, s.r, mask)
+        r_new, rho, bids_new, eps = iterate(s)
 
         act = s.active
         keep = act[:, None]
@@ -410,18 +425,20 @@ def _solve_batch_core(batch: ScenarioBatch, eps_bar, lam, max_iters,
                     iters=final.lane_iters, aux=final.rho)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "sweep_fn"))
+@partial(jax.jit, static_argnames=("max_iters", "sweep_fn", "iter_fn"))
 def _solve_batch_jit(batch: ScenarioBatch, *, eps_bar, lam, max_iters,
-                     sweep_fn, init: Optional[BatchWarmStart]) -> Solution:
+                     sweep_fn, init: Optional[BatchWarmStart],
+                     iter_fn=None) -> Solution:
     """The single-program (unsharded) jit of ``_solve_batch_core``."""
-    return _solve_batch_core(batch, eps_bar, lam, max_iters, sweep_fn, init)
+    return _solve_batch_core(batch, eps_bar, lam, max_iters, sweep_fn, init,
+                             iter_fn=iter_fn)
 
 
 def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
                             lam: float = 0.05, max_iters: int = 200,
                             sweep_fn=None,
                             init: Optional[BatchWarmStart] = None,
-                            mesh=None) -> Solution:
+                            mesh=None, iter_fn=None) -> Solution:
     """Algorithm 4.1 for B stacked scenarios as a single XLA program.
 
     One ``while_loop`` drives all lanes; converged lanes are frozen by
@@ -466,6 +483,16 @@ def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
         results match the unsharded path to <= 1e-6 (in practice
         bit-equal).  ``None`` (default) keeps the whole batch on one
         device.
+    iter_fn : object, optional
+        Fused-iteration override (``repro.kernels.gnep_iter.ops
+        .make_fused_iter_fn``): an object with ``prepare(scns, mask)``
+        and ``step(prep, scns, mask, r, bids, lam)`` whose prep is
+        hoisted out of the while_loop and whose step runs one full
+        Alg. 4.1 inner iteration (sweep + pick + psi + bid update + eps)
+        as one fused region / kernel launch.  Mutually exclusive with
+        ``sweep_fn`` in spirit — when both are given, ``iter_fn`` wins
+        (the fused step subsumes the sweep).  Static jit argument: pass
+        a memoized object.  ``None`` (default) keeps the unfused chain.
 
     Returns
     -------
@@ -478,9 +505,10 @@ def solve_distributed_batch(batch: ScenarioBatch, *, eps_bar: float = 0.03,
         from repro.core.sharding import solve_sharded_batch
         return solve_sharded_batch(batch, mesh, eps_bar=eps_bar, lam=lam,
                                    max_iters=max_iters, sweep_fn=sweep_fn,
-                                   init=init)
+                                   init=init, iter_fn=iter_fn)
     return _solve_batch_jit(batch, eps_bar=eps_bar, lam=lam,
-                            max_iters=max_iters, sweep_fn=sweep_fn, init=init)
+                            max_iters=max_iters, sweep_fn=sweep_fn, init=init,
+                            iter_fn=iter_fn)
 
 
 # --------------------------------------------------------------------------

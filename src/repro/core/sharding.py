@@ -379,7 +379,7 @@ def resident_cold_init(batch: ScenarioBatch) -> game.BatchWarmStart:
 
 @lru_cache(maxsize=None)
 def _resident_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
-                     sweep_fn):
+                     sweep_fn, iter_fn):
     """Memoized donating variant of :func:`_sharded_solver`.
 
     Identical program to the ``with_init=True`` sharded solver, but the
@@ -393,7 +393,7 @@ def _resident_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
 
     def local_solve(batch: ScenarioBatch, init: game.BatchWarmStart):
         return game._solve_batch_core(batch, eps_bar, lam, max_iters,
-                                      sweep_fn, init)
+                                      sweep_fn, init, iter_fn=iter_fn)
 
     sharded = shard_map(local_solve, mesh=mesh, in_specs=(spec, spec),
                         out_specs=spec, check_rep=False)
@@ -403,7 +403,7 @@ def _resident_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
 def solve_resident_batch(batch: ScenarioBatch, mesh: Mesh, *,
                          eps_bar: float = 0.03, lam: float = 0.05,
                          max_iters: int = 200, sweep_fn=None,
-                         init: game.BatchWarmStart) -> Solution:
+                         init: game.BatchWarmStart, iter_fn=None) -> Solution:
     """Algorithm 4.1 over an already mesh-resident, lane-padded batch.
 
     The zero-copy flush path of device-resident window sessions: ``batch``
@@ -433,6 +433,10 @@ def solve_resident_batch(batch: ScenarioBatch, mesh: Mesh, *,
         Batched RM sweep override; pass a memoized function object.
     init : game.BatchWarmStart
         Fresh-buffer warm start over the padded lanes; donated.
+    iter_fn : object, optional
+        Fused-iteration override (see ``game.solve_distributed_batch``);
+        inside ``shard_map`` its prep/step see the *local* lane slice.
+        Pass a memoized object (it keys the program cache).
 
     Returns
     -------
@@ -448,13 +452,13 @@ def solve_resident_batch(batch: ScenarioBatch, mesh: Mesh, *,
             f"of the {mesh.devices.size}-device mesh — pad with "
             "pad_batch_lanes/padded_lane_count first")
     solver = _resident_solver(mesh, float(eps_bar), float(lam),
-                              int(max_iters), sweep_fn)
+                              int(max_iters), sweep_fn, iter_fn)
     return solver(batch, init)
 
 
 @lru_cache(maxsize=None)
 def _sharded_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
-                    sweep_fn, with_init: bool):
+                    sweep_fn, iter_fn, with_init: bool):
     """Memoized jitted shard_map'd Algorithm 4.1 for one solver config.
 
     Cached on (mesh, knobs, sweep_fn identity) so repeated solves — the
@@ -472,7 +476,8 @@ def _sharded_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
         # so local trajectories == unsharded trajectories, but the local
         # while_loop exits when the *local* lanes converge.
         return game._solve_batch_core(batch, eps_bar, lam, max_iters,
-                                      sweep_fn, init[0] if init else None)
+                                      sweep_fn, init[0] if init else None,
+                                      iter_fn=iter_fn)
 
     sharded = shard_map(local_solve, mesh=mesh,
                         in_specs=(spec, spec) if with_init else (spec,),
@@ -483,8 +488,8 @@ def _sharded_solver(mesh: Mesh, eps_bar: float, lam: float, max_iters: int,
 def solve_sharded_batch(batch: ScenarioBatch, mesh: Mesh, *,
                         eps_bar: float = 0.03, lam: float = 0.05,
                         max_iters: int = 200, sweep_fn=None,
-                        init: Optional[game.BatchWarmStart] = None
-                        ) -> Solution:
+                        init: Optional[game.BatchWarmStart] = None,
+                        iter_fn=None) -> Solution:
     """Algorithm 4.1 over B lanes sharded across the devices of ``mesh``.
 
     Semantics are identical to ``game.solve_distributed_batch`` (same
@@ -517,6 +522,10 @@ def solve_sharded_batch(batch: ScenarioBatch, mesh: Mesh, *,
         Warm start over the real B lanes (the streaming engine's frozen /
         dirty split); padded lanes are added frozen.  ``None`` = cold
         start.
+    iter_fn : object, optional
+        Fused-iteration override (see ``game.solve_distributed_batch``);
+        inside ``shard_map`` its prep/step see the *local* lane slice.
+        Pass a memoized object (it keys the program cache).
 
     Returns
     -------
@@ -531,7 +540,8 @@ def solve_sharded_batch(batch: ScenarioBatch, mesh: Mesh, *,
     n_shards = mesh.devices.size
     target = padded_lane_count(b, n_shards)
     solver = _sharded_solver(mesh, float(eps_bar), float(lam),
-                             int(max_iters), sweep_fn, init is not None)
+                             int(max_iters), sweep_fn, iter_fn,
+                             init is not None)
     # device_put is a no-op for leaves already placed by shard_batch, so the
     # steady state (resident sharded batch, e.g. fleet sweeps) pays zero
     # per-call resharding; a one-shot unsharded batch is placed here.  The

@@ -2,5 +2,6 @@
 #   flash_attention/ - blocked GQA flash attention (prefill/train)
 #   rwkv6/           - chunked WKV6 linear-attention scan
 #   gnep_sweep/      - the paper's RM candidate-price sweep (P5 inner loop)
+#   gnep_iter/       - fused Alg. 4.1 inner iteration (sweep+pick+bids+eps)
 # Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper) and
 # ref.py (pure-jnp oracle); validated on CPU with interpret=True.

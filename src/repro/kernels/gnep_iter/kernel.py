@@ -1,0 +1,247 @@
+"""Fused Alg. 4.1 iteration middle, tiled: build -> fill -> objective -> pick.
+
+``gnep_sweep`` tiles only the greedy fill of an *already materialized*
+``inc`` tensor; every iteration of the batched solver still pays a chain
+of jnp dispatches around it (admission pattern, objective, argmax,
+gathers).  This kernel fuses the whole O(B x Nc x N) middle of one
+Alg. 4.1 inner iteration into ONE launch over grid ``(B, Nc/BC, N/BN)``:
+
+* the candidate admission pattern ``y = bids >= cand`` and the increment
+  tensor ``inc = y * inc_max`` are built *inside* the kernel from the
+  (B, N) bid vector — the (B, Nc, N) tensor never round-trips through HBM;
+* the greedy running-sum fill reuses the ``gnep_sweep`` VMEM scratch
+  pattern: the class axis is sequential and carries per-candidate
+  ``cum`` / ``sum_fill`` / ``p_fill`` accumulators across class tiles,
+  and *within* a tile the columns advance one at a time (a fori_loop
+  seeded from the scratch carries) — exactly the column recurrence of
+  ``ref._scan_accumulators``, so every accumulator sees the same
+  additions in the same order at ANY ``(block_c, block_n)`` tiling;
+* at the last class tile the (P5) objective of the candidate tile is
+  formed from the accumulators and folded into a running argmax scratch
+  (best objective / index / price) carried across the *candidate* axis,
+  so the winning candidate leaves the kernel as two scalars per lane.
+
+A strictly-greater comparison across candidate tiles reproduces
+``jnp.argmax``'s first-maximum semantics exactly; padded candidate
+columns replicate the last real candidate (the (P5e) interval end
+``rho_hat``) so a padded duplicate can never *strictly* beat the real
+column it copies, and padded class columns expose ``inc_max = 0`` so they
+are inert in the fill.  All arithmetic runs in the input dtype: off-TPU
+(interpret mode) the f64 kernel is bit-equal to
+``repro.kernels.gnep_iter.ref`` at any tiling; the TPU path is f32 (see
+``ops.py``).  The per-column inner loop trades VPU width for that exact
+conformance — the class axis is short (N classes) in every paper
+workload, so the trade is cheap.
+
+The psi / bid-update / eps epilogue of the iteration stays jnp (it is
+O(B x N) and fuses into the surrounding while-loop body for free); see
+``ref.iter_step`` for the exact seam.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(bids_ref, incm_ref, p_ref, cand_ref, scal_ref,
+            fill_ref, obj_ref, best_ref, rho_ref,
+            cum_scr, sacc_scr, pacc_scr, bobj_scr, brho_scr, bidx_scr,
+            *, n_cblocks, n_blocks, block_c, block_n):
+    ci = pl.program_id(1)
+    ji = pl.program_id(2)
+
+    @pl.when((ci == 0) & (ji == 0))
+    def _init_best():
+        bobj_scr[...] = jnp.full_like(bobj_scr, -jnp.inf)
+        brho_scr[...] = jnp.zeros_like(brho_scr)
+        bidx_scr[...] = jnp.zeros_like(bidx_scr)
+
+    @pl.when(ji == 0)
+    def _init_acc():
+        cum_scr[...] = jnp.zeros_like(cum_scr)
+        sacc_scr[...] = jnp.zeros_like(sacc_scr)
+        pacc_scr[...] = jnp.zeros_like(pacc_scr)
+
+    bids = bids_ref[0]                                # (BN,)
+    incm = incm_ref[0]                                # (BN,)
+    pv = p_ref[0]                                     # (BN,)
+    cand = cand_ref[0]                                # (BC,)
+    spare = scal_ref[0, 0]
+    rho_bar = scal_ref[0, 1]
+    sum_r_low = scal_ref[0, 2]
+    p_r_low = scal_ref[0, 3]
+    const = scal_ref[0, 4]
+
+    # Column-by-column greedy fill, seeded from the cross-tile carries.
+    # This is ref._scan_accumulators' recurrence verbatim: admit
+    # (masked classes have incm = 0 so the validity mask is already
+    # folded in), advance the running admitted sum, clip against the
+    # remaining slack, fold into the sum/p accumulators.  Sequential
+    # per-column adds keep the accumulation order identical to the
+    # reference at any tiling.
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_n), 1)
+    zero = jnp.zeros((), incm.dtype)
+
+    def _column(j, carry):
+        cum, sacc, pacc, fill_acc = carry
+        inc = jnp.where(bids[j] >= cand, incm[j], zero)       # (BC,)
+        cum = cum + inc
+        fill = jnp.clip(spare - (cum - inc), 0.0, inc)
+        fill_acc = jnp.where(col_ids == j, fill[:, None], fill_acc)
+        return cum, sacc + fill, pacc + fill * pv[j], fill_acc
+
+    cum, sacc, pacc, fill_tile = jax.lax.fori_loop(
+        0, block_n, _column,
+        (cum_scr[...], sacc_scr[...], pacc_scr[...],
+         jnp.zeros((block_c, block_n), incm.dtype)))
+    fill_ref[0] = fill_tile.astype(fill_ref.dtype)
+    cum_scr[...] = cum
+    sacc_scr[...] = sacc
+    pacc_scr[...] = pacc
+
+    @pl.when(ji == n_blocks - 1)
+    def _pick():
+        # (P5) objective of this candidate tile, then fold into the
+        # running argmax.  Strictly-greater keeps the earliest maximum,
+        # matching jnp.argmax across tile boundaries (and jnp.argmax
+        # itself supplies first-max semantics inside the tile).
+        obj = ((cand - rho_bar) * (sum_r_low + sacc_scr[...])
+               + (p_r_low + pacc_scr[...]) - const)
+        obj_ref[0] = obj.astype(obj_ref.dtype)
+        tile_best = jnp.argmax(obj)
+        tile_max = jnp.max(obj)
+        better = tile_max > bobj_scr[0]
+        idx = (ci * block_c + tile_best).astype(bidx_scr.dtype)
+        bidx_scr[0] = jnp.where(better, idx, bidx_scr[0])
+        brho_scr[0] = jnp.where(better, cand[tile_best], brho_scr[0])
+        bobj_scr[0] = jnp.maximum(bobj_scr[0], tile_max)
+
+    @pl.when((ci == n_cblocks - 1) & (ji == n_blocks - 1))
+    def _final():
+        best_ref[0] = bidx_scr[0]
+        rho_ref[0] = brho_scr[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n",
+                                             "interpret"))
+def fused_iter_sweep(bids_sorted, inc_max_sorted, p_sorted, cand,
+                     spare, rho_bar, sum_r_low, p_r_low, const, *,
+                     block_c=128, block_n=512, interpret=False):
+    """One-launch fill/objective/argmax middle of an Alg. 4.1 iteration.
+
+    Grid ``(B, Nc/BC, N/BN)``: batch parallel, candidate and class axes
+    sequential (both carry scratch).  Inputs are the greedy-order
+    invariants of ``ref.prepare`` plus the per-iteration bids/candidates.
+
+    Parameters
+    ----------
+    bids_sorted : jnp.ndarray
+        (B, N) effective bids in greedy (p-descending) order.
+    inc_max_sorted : jnp.ndarray
+        (B, N) fill headroom per class in greedy order (0 when masked).
+    p_sorted : jnp.ndarray
+        (B, N) masked unit penalty-rates in greedy order.
+    cand : jnp.ndarray
+        (B, Nc) candidate prices (bids + the (P5e) interval ends; the
+        last column must be the largest-price end ``rho_hat`` — padding
+        replicates it).
+    spare : jnp.ndarray
+        (B,) slack capacity shared by every candidate.
+    rho_bar : jnp.ndarray
+        (B,) on-demand floor price (objective reference).
+    sum_r_low : jnp.ndarray
+        (B,) total guaranteed allocation.
+    p_r_low : jnp.ndarray
+        (B,) p-weighted guaranteed allocation.
+    const : jnp.ndarray
+        (B,) constant objective term ``sum(p * r_up)``.
+    block_c : int, optional
+        Candidate-axis tile size.
+    block_n : int, optional
+        Class-axis tile size.
+    interpret : bool, optional
+        Run in Pallas interpret mode (the off-TPU path).
+
+    Returns
+    -------
+    fill : jnp.ndarray
+        (B, Nc, N) greedy slack fill of every candidate (greedy order).
+    obj : jnp.ndarray
+        (B, Nc) the (P5) objective of every candidate.
+    best : jnp.ndarray
+        (B,) int32 winning candidate index (first maximum).
+    rho : jnp.ndarray
+        (B,) winning candidate price.
+    """
+    B, N = bids_sorted.shape
+    Nc = cand.shape[1]
+    dt = bids_sorted.dtype
+    block_c = min(block_c, Nc)
+    block_n = min(block_n, N)
+    pc = (-Nc) % block_c
+    pn = (-N) % block_n
+    # candidate padding replicates the last real column (rho_hat): a
+    # duplicate ties, never strictly wins, so `best` stays a real index
+    cand_p = jnp.pad(cand, ((0, 0), (0, pc)), mode="edge")
+    # padded classes are inert: inc_max = 0 kills their fill regardless
+    # of how the padded bid compares to any candidate
+    bids_p = jnp.pad(bids_sorted, ((0, 0), (0, pn)))
+    incm_p = jnp.pad(inc_max_sorted, ((0, 0), (0, pn)))
+    p_p = jnp.pad(p_sorted, ((0, 0), (0, pn)))
+    Ncp, Np = Nc + pc, N + pn
+    n_cblocks = Ncp // block_c
+    n_blocks = Np // block_n
+    scal = jnp.stack([spare, rho_bar, sum_r_low, p_r_low, const],
+                     axis=1).astype(dt)               # (B, 5)
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary"))
+        except Exception:
+            pass
+    if _VMEM is not None:
+        scratch = [_VMEM((block_c,), dt)] * 3 \
+            + [_VMEM((1,), dt)] * 2 + [_VMEM((1,), jnp.int32)]
+    else:  # pragma: no cover
+        scratch = [pl.ANY] * 6
+    fill, obj, best, rho = pl.pallas_call(
+        functools.partial(_kernel, n_cblocks=n_cblocks, n_blocks=n_blocks,
+                          block_c=block_c, block_n=block_n),
+        grid=(B, n_cblocks, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda bi, ci, ji: (bi, ji)),
+            pl.BlockSpec((1, block_n), lambda bi, ci, ji: (bi, ji)),
+            pl.BlockSpec((1, block_n), lambda bi, ci, ji: (bi, ji)),
+            pl.BlockSpec((1, block_c), lambda bi, ci, ji: (bi, ci)),
+            pl.BlockSpec((1, 5), lambda bi, ci, ji: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_c, block_n),
+                         lambda bi, ci, ji: (bi, ci, ji)),
+            pl.BlockSpec((1, block_c), lambda bi, ci, ji: (bi, ci)),
+            pl.BlockSpec((1,), lambda bi, ci, ji: (bi,)),
+            pl.BlockSpec((1,), lambda bi, ci, ji: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Ncp, Np), dt),
+            jax.ShapeDtypeStruct((B, Ncp), dt),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), dt),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(bids_p, incm_p, p_p, cand_p, scal)
+    return fill[:, :Nc, :N], obj[:, :Nc], best, rho

@@ -1,0 +1,357 @@
+"""Bit-authoritative reference for the fused Alg. 4.1 inner iteration.
+
+One best-reply iteration of the paper's distributed algorithm is, per lane:
+the RM price sweep (problem P5: candidate build -> greedy fill -> objective
+-> argmax), the CM best responses (Prop. 4.1 closed form) and the bid
+escalation (Alg. 4.1 lines 11-13).  ``repro.core.game._solve_batch_core``
+runs that as a chain of vmapped jnp ops, re-deriving the greedy sort order
+and every other iteration-invariant quantity inside the while-loop body.
+
+This module is the *fused* formulation the Pallas kernel implements:
+
+* :func:`prepare` hoists everything Algorithm 4.1 never changes across
+  iterations (the p-descending greedy permutation and its inverse, the
+  permuted fill increments, the slack capacity, the r_low aggregates and
+  the constant objective term) into one :class:`IterPrep`, computed once
+  per solve *outside* the while_loop;
+* :func:`iter_step` is one full inner iteration over the whole batch —
+  candidate build, sweep, pick, psi, bid update and the per-lane eps
+  check.  Its middle is a single running-sum scan over the class axis
+  (the kernel's VMEM-scratch algorithm written in jnp): each column
+  updates the per-candidate accumulators ``cum`` / ``sum_fill`` /
+  ``p_fill`` in place, so the O(B x Nc x N) ``inc`` / ``fill`` tensors
+  of the unfused chain are never materialized, and the winning lane's
+  fill row is recomputed exactly afterwards (scan rows are independent,
+  so the recomputation is bitwise the row the scan would have emitted).
+
+Numerics contract (``tests/test_fused_iter.py`` enforces both sides):
+
+* the Pallas kernel is bit-equal (f64, interpret mode) to this module at
+  ANY tiling — the kernel's per-column tile loop seeded from its scratch
+  carries reproduces the scan's accumulation order exactly, which is the
+  point of making the scan the reference;
+* against the *unfused* dispatch chain the fused path reorders the
+  prefix-sum reductions (running scan vs ``jnp.cumsum``/``@``), so f64
+  trajectories agree to float rounding, not bitwise — converged
+  equilibria match within tight tolerance and the harness pins that
+  bound.
+
+One structural rule holds throughout ``iter_step``: the loop body is
+*gather-free*.  Permutation moves and winner picks are one-hot masked
+sums (bit-exact: one nonzero per row), never ``take_along_axis`` —
+gathers composed with the column scan miscompile inside ``while_loop``
+under ``shard_map`` on CPU (jax 0.4.37), producing wrong lanes on every
+device but the first.  ``tests/test_fused_iter.py`` pins the fused-mesh
+trajectory bitwise against the unsharded one as the regression guard.
+
+``iter_step``'s middle is replaceable via ``middle_fn`` — that is where
+``repro.kernels.gnep_iter.kernel.fused_iter_sweep`` plugs in; everything
+around it stays pure jnp.  This file is the authority: the kernel is
+correct exactly when it matches these functions.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.game import _lane_eps, cm_best_response, cm_bid_update
+
+
+class IterPrep(NamedTuple):
+    """Iteration-invariant tensors of the fused Alg. 4.1 inner loop.
+
+    Everything here depends only on the scenario batch and its mask — the
+    while_loop state (bids, r) never feeds any of it, so it is computed
+    once per solve and closed over by the loop body.
+
+    Attributes
+    ----------
+    order : jnp.ndarray
+        (B, N) p-descending greedy fill permutation (stable argsort of
+        ``-p_eff``; padded classes sort last).
+    inv : jnp.ndarray
+        (B, N) inverse of ``order`` (undoes the greedy permutation).
+    mask_sorted : jnp.ndarray
+        (B, N) validity mask carried through ``order``.
+    inc_max_sorted : jnp.ndarray
+        (B, N) per-class fill headroom ``r_up - r_low`` (0 when masked),
+        in greedy order.
+    p_sorted : jnp.ndarray
+        (B, N) masked unit penalty-rates ``p`` in greedy order.
+    spare : jnp.ndarray
+        (B,) slack capacity ``R - sum(r_low)`` shared by every candidate.
+    r_low_eff : jnp.ndarray
+        (B, N) masked guaranteed allocation (slot order).
+    sum_r_low : jnp.ndarray
+        (B,) total guaranteed allocation.
+    p_r_low : jnp.ndarray
+        (B,) p-weighted guaranteed allocation.
+    const : jnp.ndarray
+        (B,) constant objective term ``sum(p * r_up)`` of (P5).
+    rho_bar : jnp.ndarray
+        (B,) on-demand floor price (the objective's reference price).
+    order_onehot : jnp.ndarray
+        (B, N, N) bool one-hot of ``order`` — ``iter_step`` applies the
+        greedy permutation as a contraction with this matrix instead of a
+        gather (see the no-gather note in :func:`iter_step`).  O(B N^2)
+        bool, cheap at the paper's class counts.
+    inv_onehot : jnp.ndarray
+        (B, N, N) bool one-hot of ``inv`` (the inverse permutation),
+        same role.
+    """
+    order: jnp.ndarray
+    inv: jnp.ndarray
+    mask_sorted: jnp.ndarray
+    inc_max_sorted: jnp.ndarray
+    p_sorted: jnp.ndarray
+    spare: jnp.ndarray
+    r_low_eff: jnp.ndarray
+    sum_r_low: jnp.ndarray
+    p_r_low: jnp.ndarray
+    const: jnp.ndarray
+    rho_bar: jnp.ndarray
+    order_onehot: jnp.ndarray
+    inv_onehot: jnp.ndarray
+
+
+def prepare(scns, mask) -> IterPrep:
+    """Hoist the iteration-invariant prep of the Alg. 4.1 inner loop.
+
+    Mirrors ``game._rm_candidates`` / ``game._rm_pick`` exactly for the
+    quantities that do not depend on the bids (same ops, same reduction
+    order), so only the middle's prefix-sum restructuring separates the
+    fused trajectory from the unfused one.
+
+    Parameters
+    ----------
+    scns : Scenario
+        Stacked scenario leaves ((B, n_max) per class, (B,) scalars).
+    mask : jnp.ndarray
+        (B, n_max) class-validity mask.
+
+    Returns
+    -------
+    IterPrep
+        The invariants, ready to close over the while_loop body.
+    """
+    n = mask.shape[1]
+    p_eff = jnp.where(mask, scns.p, 0.0)
+    order = jnp.argsort(-p_eff, axis=1)
+    inv = jnp.argsort(order, axis=1)
+    inc_max = jnp.where(mask, scns.r_up - scns.r_low, 0.0)
+    r_low_eff = jnp.where(mask, scns.r_low, 0.0)
+    take = jnp.take_along_axis
+    return IterPrep(
+        order=order,
+        inv=inv,
+        mask_sorted=take(mask, order, axis=1),
+        inc_max_sorted=take(inc_max, order, axis=1),
+        p_sorted=take(p_eff, order, axis=1),
+        spare=scns.R - jnp.sum(r_low_eff, axis=1),
+        r_low_eff=r_low_eff,
+        sum_r_low=jnp.sum(r_low_eff, axis=1),
+        p_r_low=jnp.sum(p_eff * r_low_eff, axis=1),
+        const=jnp.sum(p_eff * jnp.where(mask, scns.r_up, 0.0), axis=1),
+        rho_bar=scns.rho_bar,
+        order_onehot=order[:, :, None] == jnp.arange(n)[None, None, :],
+        inv_onehot=inv[:, :, None] == jnp.arange(n)[None, None, :])
+
+
+def _columns(prep: IterPrep, bids_sorted):
+    """Class-major views of the per-class scan inputs ((N, B) each).
+
+    Masked-out (padded) classes carry ``inc_max_sorted == 0``, so their
+    columns contribute exactly ``0.0`` to every accumulator — the scan
+    needs no explicit mask term.
+    """
+    return (jnp.moveaxis(bids_sorted, 1, 0),
+            jnp.moveaxis(prep.inc_max_sorted, 1, 0),
+            jnp.moveaxis(prep.p_sorted, 1, 0))
+
+
+def _scan_accumulators(prep: IterPrep, cand, bids_sorted):
+    """Run the per-class running-sum scan; return the final accumulators.
+
+    One :func:`jax.lax.scan` step per greedy-ordered class column ``j``:
+    admit (``bid_j >= cand``), advance the running admitted sum ``cum``,
+    clip the column's fill against the remaining slack, and fold it into
+    ``sum_fill`` / ``p_fill``.  No per-column outputs are emitted — the
+    O(B x Nc x N) ``fill`` tensor never exists.
+
+    Returns
+    -------
+    tuple
+        ``(cum, sum_fill, p_fill)``, each (B, Nc), after all N columns.
+    """
+    zeros = jnp.zeros(cand.shape, cand.dtype)
+
+    def step(carry, col):
+        cum, sacc, pacc = carry
+        b_j, im_j, p_j = col
+        inc = jnp.where(b_j[:, None] >= cand, im_j[:, None], 0.0)
+        cum = cum + inc
+        fill = jnp.clip(prep.spare[:, None] - (cum - inc), 0.0, inc)
+        return (cum, sacc + fill, pacc + fill * p_j[:, None]), None
+
+    carries, _ = jax.lax.scan(step, (zeros, zeros, zeros),
+                              _columns(prep, bids_sorted))
+    return carries
+
+
+def _objective(prep: IterPrep, cand, sum_fill, p_fill):
+    """The (P5) objective of every candidate from the scan accumulators."""
+    return ((cand - prep.rho_bar[:, None])
+            * (prep.sum_r_low[:, None] + sum_fill)
+            + (prep.p_r_low[:, None] + p_fill) - prep.const[:, None])
+
+
+def _fill_row(prep: IterPrep, rho, bids_sorted):
+    """Recompute the winning candidate's fill row ((B, N), greedy order).
+
+    Scan rows are independent (each candidate's accumulators never read
+    another's), so replaying the column recurrence for the single price
+    ``rho`` reproduces bitwise the row the full scan would have emitted.
+    """
+    def step(cum, col):
+        b_j, im_j, p_j = col
+        inc = jnp.where(b_j >= rho, im_j, 0.0)
+        cum = cum + inc
+        fill = jnp.clip(prep.spare - (cum - inc), 0.0, inc)
+        return cum, fill
+
+    B = bids_sorted.shape[0]
+    _, fill = jax.lax.scan(step, jnp.zeros((B,), bids_sorted.dtype),
+                           _columns(prep, bids_sorted))
+    return jnp.moveaxis(fill, 0, 1)
+
+
+def middle_reference(prep: IterPrep, cand, bids_sorted):
+    """The O(B x Nc x N) middle of one iteration: fill -> objective -> pick.
+
+    This is the region the Pallas kernel
+    (``repro.kernels.gnep_iter.kernel.fused_iter_sweep``) replaces: the
+    candidate admission pattern, the greedy running-sum fill, the (P5)
+    objective and its argmax — everything whose cost scales with the
+    candidate axis.  Unlike the production middle (which keeps only the
+    accumulators), this diagnostic variant also materializes the full
+    per-candidate ``fill`` tensor — column by column, in the exact scan
+    order — so the differential kernel tests can compare the kernel's
+    full ``fill``/``obj`` outputs bitwise.
+
+    Parameters
+    ----------
+    prep : IterPrep
+        Invariants from :func:`prepare`.
+    cand : jnp.ndarray
+        (B, Nc) candidate prices (all bids + the (P5e) interval ends).
+    bids_sorted : jnp.ndarray
+        (B, N) effective bids in greedy order.
+
+    Returns
+    -------
+    fill : jnp.ndarray
+        (B, Nc, N) greedy slack fill of every candidate (greedy order).
+    obj : jnp.ndarray
+        (B, Nc) the (P5) objective of every candidate.
+    best : jnp.ndarray
+        (B,) winning candidate index (first argmax, like ``jnp.argmax``).
+    rho : jnp.ndarray
+        (B,) winning candidate price.
+    """
+    zeros = jnp.zeros(cand.shape, cand.dtype)
+
+    def step(carry, col):
+        cum, sacc, pacc = carry
+        b_j, im_j, p_j = col
+        inc = jnp.where(b_j[:, None] >= cand, im_j[:, None], 0.0)
+        cum = cum + inc
+        fill = jnp.clip(prep.spare[:, None] - (cum - inc), 0.0, inc)
+        return (cum, sacc + fill, pacc + fill * p_j[:, None]), fill
+
+    (_, sum_fill, p_fill), fill_cols = jax.lax.scan(
+        step, (zeros, zeros, zeros), _columns(prep, bids_sorted))
+    fill = jnp.moveaxis(fill_cols, 0, 2)
+    obj = _objective(prep, cand, sum_fill, p_fill)
+    best = jnp.argmax(obj, axis=1)
+    rho = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+    return fill, obj, best, rho
+
+
+def iter_step(prep: IterPrep, scns, mask, r, bids, lam,
+              middle_fn: Optional[Callable] = None):
+    """One full Alg. 4.1 inner iteration over the batch (the fused body).
+
+    Candidate build -> (middle: fill/objective/argmax) -> allocation
+    un-permute -> CM best responses -> bid escalation -> per-lane eps.
+    With ``middle_fn=None`` the middle is the running column scan
+    (:func:`_scan_accumulators` + the exact winning-row replay of
+    :func:`_fill_row`); passing the Pallas middle changes only where the
+    O(B x Nc x N) region runs — both orders of accumulation are
+    identical, so the swap is bitwise invisible.
+
+    Parameters
+    ----------
+    prep : IterPrep
+        Invariants from :func:`prepare` (computed outside the loop).
+    scns : Scenario
+        Stacked scenario leaves (the per-class/scalar batch layout).
+    mask : jnp.ndarray
+        (B, n_max) class-validity mask.
+    r : jnp.ndarray
+        (B, n_max) current allocation (eps is measured against it).
+    bids : jnp.ndarray
+        (B, n_max) current CM bids.
+    lam : float
+        Bid-escalation step of ``game.cm_bid_update``.
+    middle_fn : callable, optional
+        Override of the fill/objective/argmax middle,
+        ``middle_fn(prep, cand, bids_sorted) -> (fill_best, best, rho)``
+        — the Pallas kernel plugs in here.  ``None`` runs the jnp
+        reference middle.
+
+    Returns
+    -------
+    r_new : jnp.ndarray
+        (B, n_max) RM allocation of this iteration.
+    rho : jnp.ndarray
+        (B,) RM price posted this iteration.
+    bids_new : jnp.ndarray
+        (B, n_max) escalated bids.
+    eps : jnp.ndarray
+        (B,) per-lane relative allocation change vs ``r``.
+    """
+    # No-gather invariant: every indexed move in this body is a one-hot
+    # contraction (or masked sum), never ``take_along_axis``.  Gathers
+    # composed with the column scan miscompile inside while_loop under
+    # shard_map on CPU (jax 0.4.37, check_rep=False): every device but
+    # the first computes wrong lanes.  Each one-hot row has exactly one
+    # nonzero and fills are finite, so the contractions move the exact
+    # same values, bit for bit.
+    bids_eff = jnp.where(mask, bids, scns.rho_bar[:, None])
+    cand = jnp.concatenate(
+        [bids_eff, scns.rho_bar[:, None], scns.rho_hat[:, None]], axis=1)
+    bids_sorted = jnp.sum(
+        jnp.where(prep.order_onehot, bids_eff[:, None, :], 0.0), axis=2)
+
+    if middle_fn is None:
+        _, sum_fill, p_fill = _scan_accumulators(prep, cand, bids_sorted)
+        obj = _objective(prep, cand, sum_fill, p_fill)
+        best = jnp.argmax(obj, axis=1)
+        rho = jnp.sum(jnp.where(best[:, None] == jnp.arange(cand.shape[1]),
+                                cand, 0.0), axis=1)
+        fill_best = _fill_row(prep, rho, bids_sorted)
+    else:
+        fill_best, best, rho = middle_fn(prep, cand, bids_sorted)
+
+    r_new = prep.r_low_eff + jnp.sum(
+        jnp.where(prep.inv_onehot, fill_best[:, None, :], 0.0), axis=2)
+
+    psi, _, _ = jax.vmap(lambda s, rr, m: cm_best_response(s, rr, mask=m)
+                         )(scns, r_new, mask)
+    bids_new = jax.vmap(
+        lambda s, b, rh, ps, m: cm_bid_update(s, b, rh, ps, lam, mask=m)
+    )(scns, bids, rho, psi, mask)
+    eps = jax.vmap(_lane_eps)(r_new, r, mask)
+    return r_new, rho, bids_new, eps

@@ -1,0 +1,127 @@
+"""Shared ULP-scaled tolerance helpers for kernel differential tests.
+
+PR 1 left a hand-rolled scale-aware tolerance inside
+``test_kernels.py::test_gnep_sweep``: a kernel and its reference that sum
+the same prefix in different orders disagree by O(ulp(running_sum)), so a
+fixed ``atol`` either flakes on large sums or hides real bugs on small
+ones.  That reasoning is general — every differential harness comparing
+two reduction orders needs it — so it lives here now, phrased in ULPs:
+
+* :func:`ulp_at` — the size of one unit-in-the-last-place at a given
+  magnitude, the only machine-independent currency for rounding error;
+* :func:`reduction_ulp_atol` — the absolute tolerance for comparing two
+  different-order reductions of the same summands;
+* :func:`assert_ulp_close` — ``assert_allclose`` with the ``atol``
+  derived from ULPs at an explicit scale instead of guessed constants;
+* :func:`assert_bitwise_equal` — the *other* side of the contract: where
+  two formulations accumulate in the SAME order (the fused gnep_iter
+  kernel vs its scan reference), the right tolerance is none at all, and
+  a bytes-level compare says so unambiguously (it also distinguishes
+  ``-0.0`` from ``0.0`` and NaN payloads, which ``==`` cannot).
+
+Used by ``test_kernels.py`` (gnep_sweep) and ``test_fused_iter.py``.
+"""
+import numpy as np
+
+
+def ulp_at(x, dtype=None):
+    """One ULP of ``dtype`` at the magnitude of ``x`` (a python float).
+
+    ``x`` may be an array — its largest \\|value\\| sets the magnitude.  A
+    zero/empty magnitude falls back to the dtype's smallest positive
+    normal so the result is never 0 (a zero tolerance by accident is a
+    bug magnet).
+
+    Parameters
+    ----------
+    x : array_like
+        Value(s) whose magnitude anchors the ULP.
+    dtype : numpy dtype, optional
+        Float type whose precision to use; defaults to ``x``'s dtype.
+    """
+    arr = np.asarray(x)
+    info = np.finfo(np.dtype(dtype) if dtype is not None else arr.dtype)
+    mag = float(np.max(np.abs(arr))) if arr.size else 0.0
+    return max(mag, float(info.tiny)) * float(info.eps)
+
+
+def reduction_ulp_atol(summands, axis, *, ulps=4, dtype=None):
+    """Absolute tolerance for two different-order reductions of ``summands``.
+
+    Reducing the same terms blockwise-with-carry vs one ``cumsum`` (the
+    gnep kernels' situation) perturbs each partial sum by a few ULPs *of
+    the running-sum magnitude*, not of the individual terms; downstream
+    clips/min-maxes preserve that scale.  This returns ``ulps`` ULPs at
+    the largest reduction magnitude along ``axis``.
+
+    Parameters
+    ----------
+    summands : array_like
+        The terms being reduced (e.g. the fill increments).
+    axis : int or tuple
+        Reduction axis/axes of the compared computation.
+    ulps : int, optional
+        Error budget in ULPs (default 4: a handful of reorderings).
+    dtype : numpy dtype, optional
+        Precision of the compared computation; defaults to the summands'.
+    """
+    arr = np.asarray(summands)
+    sums = np.sum(np.abs(arr.astype(np.float64)), axis=axis)
+    return ulps * ulp_at(sums, dtype if dtype is not None else arr.dtype)
+
+
+def assert_ulp_close(actual, desired, *, ulps=4, scale=None, rtol=0.0,
+                     err_msg=""):
+    """``assert_allclose`` with an ULP-derived absolute tolerance.
+
+    Parameters
+    ----------
+    actual, desired : array_like
+        The two results to compare.
+    ulps : int, optional
+        Error budget in ULPs (default 4).
+    scale : array_like, optional
+        Magnitude anchor for the ULP; defaults to ``desired`` itself.
+        Pass the running-sum array when comparing reduction outputs whose
+        elements are much smaller than the sums that produced them.
+    rtol : float, optional
+        Extra elementwise relative term, forwarded to ``assert_allclose``.
+    err_msg : str, optional
+        Failure-message prefix, forwarded to ``assert_allclose``.
+    """
+    d = np.asarray(desired)
+    anchor = d if scale is None else scale
+    np.testing.assert_allclose(
+        np.asarray(actual), d, rtol=rtol,
+        atol=ulps * ulp_at(anchor, d.dtype), err_msg=err_msg)
+
+
+def assert_bitwise_equal(actual, desired, label=""):
+    """Assert two arrays are identical down to the last bit.
+
+    Shape, dtype and the raw bytes must all match — the assertion a
+    *same-accumulation-order* differential contract demands (gnep_iter
+    kernel vs its scan reference).  On mismatch the message reports the
+    worst absolute deviation and the count of differing elements, which
+    is what one actually wants to know when bit-equality breaks.
+
+    Parameters
+    ----------
+    actual, desired : array_like
+        The two results to compare.
+    label : str, optional
+        Name of the compared quantity for the failure message.
+    """
+    a, d = np.asarray(actual), np.asarray(desired)
+    tag = f"{label}: " if label else ""
+    assert a.shape == d.shape, f"{tag}shape {a.shape} != {d.shape}"
+    assert a.dtype == d.dtype, f"{tag}dtype {a.dtype} != {d.dtype}"
+    if a.tobytes() == d.tobytes():
+        return
+    if np.issubdtype(a.dtype, np.floating):
+        neq = a.view(np.uint8) != d.view(np.uint8)
+        dev = float(np.max(np.abs(np.nan_to_num(a - d))))
+        raise AssertionError(
+            f"{tag}not bit-equal: {int(np.count_nonzero(neq))} differing "
+            f"byte(s), max abs deviation {dev:.3e}")
+    raise AssertionError(f"{tag}not bit-equal")

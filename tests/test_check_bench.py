@@ -88,6 +88,35 @@ def test_gate_fails_residency_mismatch(tmp_path, monkeypatch):
     assert run_gate(again, base, fresh, monkeypatch) == 0
 
 
+def test_gate_fails_fused_iter_config_mismatch(tmp_path, monkeypatch):
+    """The `iter` / `dtype_policy` / `steps` tags are config: a fused-
+    kernel speedup measured under a different iter_fn, element-width
+    policy or pinned iteration count is a different experiment (ISSUE 9)
+    and must hard-fail the compare instead of silently passing."""
+    for key, other in [("iter", "gnep_iter(force_pallas=True)"),
+                       ("dtype_policy", "f32-vs-f64"),
+                       ("steps", 96)]:
+        base = record(speedup=1.6)
+        fresh = record(speedup=1.6)
+        base["results"]["batch"].update(
+            {"iter": "gnep_iter(force_pallas=False)",
+             "dtype_policy": "f64-vs-f64", "steps": 48})
+        fresh["results"]["batch"].update(base["results"]["batch"])
+        fresh["results"]["batch"][key] = other
+        d = tmp_path / f"mismatch-{key}"
+        d.mkdir()
+        assert run_gate(d, base, fresh, monkeypatch) == 1
+    base = record(speedup=1.6)
+    fresh = record(speedup=1.55)
+    tags = {"iter": "gnep_iter(force_pallas=False)",
+            "dtype_policy": "f64-vs-f64", "steps": 48}
+    base["results"]["batch"].update(tags)
+    fresh["results"]["batch"].update(tags)
+    ok = tmp_path / "matching-tags"
+    ok.mkdir()
+    assert run_gate(ok, base, fresh, monkeypatch) == 0
+
+
 def test_gate_latency_ceiling_passes_within_band(tmp_path, monkeypatch):
     """Latency metrics gate in the opposite direction: lower is better,
     so a drop is always fine and a rise passes only inside the ceiling."""

@@ -1,0 +1,491 @@
+"""Differential conformance harness for the fused Alg. 4.1 iteration kernel.
+
+The fused path (``repro.kernels.gnep_iter``, ISSUE 9) makes a two-sided
+numerics promise and this file is its enforcement:
+
+* **kernel side, bitwise**: the Pallas kernel (interpret mode off-TPU) is
+  bit-equal to the pure-jnp reference ``ref.py`` at ANY tiling, per
+  iteration and at the converged equilibrium — under ragged masks, inert
+  padded lanes, warm starts, a sharded lane mesh and device-resident
+  window sessions.  The mesh case doubles as the regression pin for the
+  while_loop + shard_map gather miscompile ``ref.iter_step`` works
+  around (its body is gather-free for exactly that reason).
+* **unfused side, tolerance**: against the unfused dispatch chain the
+  fused formulation reorders prefix sums, so equilibria agree to ULPs
+  (``tests/_tolerance.py``), not bits — with identical iteration counts.
+
+Also here: the ``SolverConfig`` golden-fingerprint table (every knob,
+including ``iter_fn`` / ``dtype_policy``), the ``dtype_policy``
+validation matrix, the ``f32_checked`` cross-check behavior, and the
+PR 6/7 donation-aliasing regression properties on the fused resident
+path.  Hypothesis properties skip loudly when the package is absent
+(``tests/_hypothesis_compat``).
+"""
+import dataclasses
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _tolerance import assert_bitwise_equal, assert_ulp_close
+from repro.core import (AdmissionWindow, CapacityEngine, FlushPolicy,
+                        Policies, RoundingPolicy, SolverConfig, lane_mesh,
+                        sample_event_trace, sample_scenario)
+from repro.core.engine import _dtype_check
+from repro.core.game import cold_start, solve_distributed_batch
+from repro.core.sharding import solve_sharded_batch
+from repro.core.types import Solution, stack_scenarios
+from repro.kernels.gnep_iter import ref
+from repro.kernels.gnep_iter.kernel import fused_iter_sweep
+from repro.kernels.gnep_iter.ops import make_fused_iter_fn
+
+D = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    D < 2, reason="needs >= 2 devices (conftest forces 8 on CPU)")
+
+RAGGED_NS = (5, 12, 3, 9, 12, 7)       # ragged: n_max never matches lane 0
+IT_JNP = make_fused_iter_fn()
+IT_PALLAS = make_fused_iter_fn(force_pallas=True)
+SOLUTION_FIELDS = [f.name for f in dataclasses.fields(Solution)]
+
+
+def make_batch(seed=0, ns=RAGGED_NS):
+    key = jax.random.PRNGKey(seed)
+    return stack_scenarios(
+        [sample_scenario(jax.random.fold_in(key, i), n, capacity_factor=0.95)
+         for i, n in enumerate(ns)])
+
+
+def cold_state(batch):
+    """(prep, r, bids) at the paper's cold init."""
+    scns, mask = batch.scenarios, batch.mask
+    prep = ref.prepare(scns, mask)
+    r = jnp.where(mask, scns.r_low, 0.0)
+    bids = jnp.broadcast_to(scns.rho_bar[:, None],
+                            mask.shape).astype(r.dtype)
+    return prep, r, bids
+
+
+def middle_inputs(batch, steps=0):
+    """Kernel-middle inputs after ``steps`` reference iterations."""
+    scns, mask = batch.scenarios, batch.mask
+    prep, r, bids = cold_state(batch)
+    for _ in range(steps):
+        r, _, bids, _ = ref.iter_step(prep, scns, mask, r, bids, 0.05)
+    bids_eff = jnp.where(mask, bids, scns.rho_bar[:, None])
+    cand = jnp.concatenate(
+        [bids_eff, scns.rho_bar[:, None], scns.rho_hat[:, None]], axis=1)
+    bids_sorted = jnp.take_along_axis(bids_eff, prep.order, axis=1)
+    return prep, cand, bids_sorted
+
+
+def assert_solutions_bitequal(a, b, fields=SOLUTION_FIELDS):
+    for fld in fields:
+        assert_bitwise_equal(np.asarray(getattr(a, fld)),
+                             np.asarray(getattr(b, fld)), label=fld)
+
+
+# --------------------------------------------------------------------------
+# Kernel vs scan reference: bit-equal at any tiling, any iteration
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bc,bn", [(128, 512), (7, 5), (16, 8), (1, 1)])
+@pytest.mark.parametrize("steps", [0, 3])
+def test_kernel_bitwise_vs_reference_any_tiling(bc, bn, steps):
+    """fused_iter_sweep == middle_reference bit for bit: full fill tensor,
+    objective, argmax and winning price — including tiles that straddle
+    the candidate/class extents and the degenerate (1, 1) tiling, on both
+    cold bids and a mid-trajectory bid state."""
+    prep, cand, bids_sorted = middle_inputs(make_batch(), steps=steps)
+    f_r, o_r, b_r, r_r = ref.middle_reference(prep, cand, bids_sorted)
+    f_k, o_k, b_k, r_k = fused_iter_sweep(
+        bids_sorted, prep.inc_max_sorted, prep.p_sorted, cand, prep.spare,
+        prep.rho_bar, prep.sum_r_low, prep.p_r_low, prep.const,
+        block_c=bc, block_n=bn, interpret=True)
+    assert_bitwise_equal(np.asarray(f_k), np.asarray(f_r), label="fill")
+    assert_bitwise_equal(np.asarray(o_k), np.asarray(o_r), label="obj")
+    # argmax indices: value equality (the kernel's running argmax is i32,
+    # jnp.argmax under x64 is i64 — width is representation, not numerics)
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r),
+                                  err_msg="best")
+    assert_bitwise_equal(np.asarray(r_k), np.asarray(r_r), label="rho")
+
+
+def test_fused_step_pallas_bitwise_vs_jnp_chain():
+    """The full fused step (candidate build -> middle -> un-permute -> CM
+    responses -> bid update -> eps) with the Pallas middle plugged in is
+    bit-equal to the pure-jnp step, iterated feeding back its own state."""
+    batch = make_batch(seed=2)
+    scns, mask = batch.scenarios, batch.mask
+    prep = IT_PALLAS.prepare(scns, mask)
+    _, r_j, bids_j = cold_state(batch)
+    r_p, bids_p = r_j, bids_j
+    for _ in range(4):
+        r_j, rho_j, bids_j, eps_j = IT_JNP.step(
+            prep, scns, mask, r_j, bids_j, 0.05)
+        r_p, rho_p, bids_p, eps_p = IT_PALLAS.step(
+            prep, scns, mask, r_p, bids_p, 0.05)
+        assert_bitwise_equal(np.asarray(r_p), np.asarray(r_j), label="r")
+        assert_bitwise_equal(np.asarray(rho_p), np.asarray(rho_j),
+                             label="rho")
+        assert_bitwise_equal(np.asarray(bids_p), np.asarray(bids_j),
+                             label="bids")
+        assert_bitwise_equal(np.asarray(eps_p), np.asarray(eps_j),
+                             label="eps")
+
+
+def test_fused_solve_pallas_bitwise_vs_jnp():
+    """Converged equilibria of the jnp-middle and Pallas-middle fused
+    solves are bit-identical across every Solution field."""
+    batch = make_batch(seed=3)
+    sol_j = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    sol_p = solve_distributed_batch(batch, iter_fn=IT_PALLAS)
+    assert_solutions_bitequal(sol_j, sol_p)
+
+
+# --------------------------------------------------------------------------
+# Fused vs unfused dispatch chain: ULP-tolerance equilibria, same iters
+# --------------------------------------------------------------------------
+
+def test_fused_vs_unfused_equilibrium_ulp():
+    """The fused formulation reorders the prefix sums (running scan vs
+    cumsum), so against the unfused chain the converged allocations agree
+    to a few ULPs at the allocation scale — with IDENTICAL per-lane
+    iteration counts (the eps trajectory crosses the threshold at the
+    same step, or the fusion changed semantics)."""
+    batch = make_batch(seed=4)
+    sol_u = solve_distributed_batch(batch)
+    sol_f = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    assert_bitwise_equal(np.asarray(sol_f.iters), np.asarray(sol_u.iters),
+                         label="iters")
+    assert_bitwise_equal(np.asarray(sol_f.feasible),
+                         np.asarray(sol_u.feasible), label="feasible")
+    for fld in ("r", "psi", "sM", "sR"):
+        assert_ulp_close(getattr(sol_f, fld), getattr(sol_u, fld), ulps=64,
+                         scale=np.asarray(sol_u.r), err_msg=fld)
+    for fld in ("cost", "penalty", "total"):
+        assert_ulp_close(getattr(sol_f, fld), getattr(sol_u, fld), ulps=64,
+                         scale=np.asarray(sol_u.total), err_msg=fld)
+
+
+def test_fused_warm_start_and_frozen_lanes():
+    """Warm-start semantics are shared with the unfused solver: an
+    explicit cold_start equals the implicit one bitwise, and frozen lanes
+    (active=False) pass their stored state straight through while active
+    lanes converge exactly as in an all-active solve."""
+    batch = make_batch(seed=5)
+    sol_a = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    sol_b = solve_distributed_batch(batch, init=cold_start(batch),
+                                    iter_fn=IT_JNP)
+    assert_solutions_bitequal(sol_a, sol_b)
+
+    frozen = np.zeros(len(RAGGED_NS), bool)
+    frozen[[1, 3]] = True
+    init = cold_start(batch)
+    sentinel_r = jnp.where(jnp.asarray(frozen)[:, None],
+                           jnp.full_like(init.r, 7.25), init.r)
+    init = init._replace(
+        r=sentinel_r,
+        rho=jnp.where(jnp.asarray(frozen), 3.5, init.rho),
+        lane_iters=jnp.where(jnp.asarray(frozen), 11,
+                             init.lane_iters).astype(init.lane_iters.dtype),
+        active=jnp.asarray(~frozen))
+    sol_w = solve_distributed_batch(batch, init=init, iter_fn=IT_JNP)
+    r = np.asarray(sol_w.r)
+    assert_bitwise_equal(r[frozen], np.asarray(sentinel_r)[frozen],
+                         label="frozen r pass-through")
+    np.testing.assert_array_equal(np.asarray(sol_w.iters)[frozen], 11)
+    assert_bitwise_equal(r[~frozen], np.asarray(sol_a.r)[~frozen],
+                         label="active lanes vs all-active solve")
+
+
+def test_fused_padded_scenario_slots_inert():
+    """Garbage in masked-out scenario slots must not perturb the fused
+    solve — every prep/step input is masked before use."""
+    batch = make_batch(seed=6)
+    mask = np.asarray(batch.mask)
+
+    def poison(x):
+        arr = np.asarray(x)
+        if arr.ndim == 2 and arr.shape == mask.shape:
+            return jnp.asarray(np.where(mask, arr, 1e6))
+        return x
+
+    poisoned = dataclasses.replace(
+        batch, scenarios=jax.tree_util.tree_map(poison, batch.scenarios))
+    sol_a = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    sol_b = solve_distributed_batch(poisoned, iter_fn=IT_JNP)
+    # valid entries bit-equal; padded slots may echo their (poisoned)
+    # inputs in psi (existing engine convention: r/sM are zeroed there,
+    # psi is not), so the contract covers masked entries + lane scalars
+    for fld in ("r", "psi", "sM", "sR"):
+        assert_bitwise_equal(np.asarray(getattr(sol_a, fld))[mask],
+                             np.asarray(getattr(sol_b, fld))[mask],
+                             label=fld)
+    for fld in ("cost", "penalty", "total", "feasible", "iters"):
+        assert_bitwise_equal(np.asarray(getattr(sol_a, fld)),
+                             np.asarray(getattr(sol_b, fld)), label=fld)
+
+
+# --------------------------------------------------------------------------
+# Residency: mesh-sharded and device-resident fused solves, bit for bit
+# --------------------------------------------------------------------------
+
+@needs_devices
+def test_fused_mesh_bitwise_vs_unsharded():
+    """Regression pin for the while_loop + shard_map gather miscompile
+    (jax 0.4.37, CPU): with any gather in the loop body every device but
+    the first computes wrong lanes.  ``ref.iter_step`` is gather-free so
+    the sharded fused solve — inert-lane padding included (6 lanes over a
+    4-mesh pads 2) — must equal the unsharded one bitwise."""
+    mesh = lane_mesh(min(4, D))
+    batch = make_batch(seed=7)
+    sol_1 = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    sol_m = solve_sharded_batch(batch, mesh, iter_fn=IT_JNP)
+    assert_solutions_bitequal(sol_1, sol_m)
+
+
+def _session_pair(iter_fn, residency_pair=("resident", "round-trip"),
+                  seed=0, lanes=4, n=4, n_max=8):
+    mesh = lane_mesh(min(4, D))
+    key = jax.random.PRNGKey(seed)
+
+    def make():
+        scns = [sample_scenario(jax.random.fold_in(key, i), n,
+                                capacity_factor=1.3) for i in range(lanes)]
+        return AdmissionWindow(scns, n_max=n_max)
+
+    sessions = []
+    for residency in residency_pair:
+        eng = CapacityEngine(
+            SolverConfig(mesh=mesh, residency=residency, iter_fn=iter_fn),
+            Policies(flush=FlushPolicy(max_events=1),
+                     rounding=RoundingPolicy(False)))
+        sessions.append(eng.open_window(make()))
+    return sessions, make()
+
+
+@needs_devices
+def test_fused_resident_bitequal_and_donation_safe():
+    """Device-resident window sessions with the fused iteration: every
+    flush report is bit-equal to the host-round-trip session's, and — the
+    PR 6/7 zero-copy regression class — the donated warm-start buffers of
+    later flushes never invalidate or rewrite arrays inside reports that
+    were already returned."""
+    (s_res, s_rt), trace_window = _session_pair(IT_JNP, seed=8)
+    reports, snapshots = [], []
+
+    def record(rep_res, rep_rt):
+        la = jax.tree_util.tree_flatten(rep_res.fractional)[0]
+        lb = jax.tree_util.tree_flatten(rep_rt.fractional)[0]
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert_bitwise_equal(np.asarray(x), np.asarray(y),
+                                 label="flush report leaf")
+        reports.append(rep_res)
+        snapshots.append(jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf).copy(), rep_res.fractional))
+
+    record(s_res.solve(), s_rt.solve())
+    for ev in sample_event_trace(9, trace_window, 6):
+        s_res.window.apply(ev)
+        s_rt.window.apply(ev)
+        record(s_res.solve(), s_rt.solve())
+    assert s_res.window.is_resident and not s_rt.window.is_resident
+    for rep, snap in zip(reports, snapshots):
+        got = jax.tree_util.tree_flatten(rep.fractional)[0]
+        want = jax.tree_util.tree_flatten(snap)[0]
+        for x, y in zip(got, want):     # donated buffers would raise here
+            np.testing.assert_array_equal(np.asarray(x), y)
+
+
+# --------------------------------------------------------------------------
+# SolverConfig: golden fingerprints, dtype-policy validation, f32_checked
+# --------------------------------------------------------------------------
+
+def test_fingerprint_golden_table():
+    """Every knob's fingerprint contribution, pinned verbatim.  The
+    default string must stay EXACTLY stable — committed benchmark
+    baselines key on it — and non-default residency/iter/dtype_policy
+    append in that fixed order so pre-knob records remain comparable."""
+    base = ("eps_bar=0.03|lam=0.05|max_iters=200|dtype=native"
+            "|sweep=reference|mesh=none")
+    assert SolverConfig().fingerprint() == base
+
+    def named_sweep():
+        pass  # only the __name__ is fingerprinted
+
+    mesh = lane_mesh(min(2, D))
+    table = [
+        (SolverConfig(eps_bar=0.1),
+         base.replace("eps_bar=0.03", "eps_bar=0.1")),
+        (SolverConfig(lam=0.2), base.replace("lam=0.05", "lam=0.2")),
+        (SolverConfig(max_iters=50),
+         base.replace("max_iters=200", "max_iters=50")),
+        (SolverConfig(dtype="float32"),
+         base.replace("dtype=native", "dtype=float32")),
+        (SolverConfig(sweep_fn=named_sweep),
+         base.replace("sweep=reference", "sweep=named_sweep")),
+        (SolverConfig(mesh=mesh),
+         base.replace("mesh=none", f"mesh={mesh.devices.shape[0]}:lanes")),
+        (SolverConfig(mesh=mesh, residency="resident"),
+         base.replace("mesh=none", f"mesh={mesh.devices.shape[0]}:lanes")
+         + "|residency=resident"),
+        (SolverConfig(iter_fn=IT_JNP),
+         base + "|iter=gnep_iter(force_pallas=False)"),
+        (SolverConfig(iter_fn=IT_PALLAS),
+         base + "|iter=gnep_iter(force_pallas=True)"),
+        (SolverConfig(dtype_policy="f64"), base + "|dtype_policy=f64"),
+        (SolverConfig(dtype_policy="f32_checked"),
+         base + "|dtype_policy=f32_checked"),
+        (SolverConfig(dtype_policy="f32_checked[:2]"),
+         base + "|dtype_policy=f32_checked[:2]"),
+        (SolverConfig(mesh=mesh, residency="resident", iter_fn=IT_JNP),
+         base.replace("mesh=none", f"mesh={mesh.devices.shape[0]}:lanes")
+         + "|residency=resident|iter=gnep_iter(force_pallas=False)"),
+        (SolverConfig(iter_fn=IT_JNP, dtype_policy="f32_checked"),
+         base + "|iter=gnep_iter(force_pallas=False)"
+         + "|dtype_policy=f32_checked"),
+    ]
+    for cfg, want in table:
+        assert cfg.fingerprint() == want, (
+            f"fingerprint drift: {cfg.fingerprint()!r} != {want!r}")
+
+
+def test_dtype_policy_validation():
+    """The policy grammar is closed: exactly "f64", "f32_checked" and
+    "f32_checked[:k]" (k >= 1) parse; everything else — and combining a
+    policy with a raw dtype — is a construction-time ValueError."""
+    assert SolverConfig(dtype_policy="f64").effective_dtype() == jnp.float64
+    cfg = SolverConfig(dtype_policy="f32_checked")
+    assert cfg.effective_dtype() == jnp.float32 and cfg.check_sample() == 4
+    assert SolverConfig(dtype_policy="f32_checked[:2]").check_sample() == 2
+    assert SolverConfig().check_sample() == 0
+    assert SolverConfig(dtype="float32").effective_dtype() == "float32"
+    for bad in ("f32", "f32_checked[:0]", "f32_checked[2]", "F32_CHECKED",
+                "f32_checked[:-1]", "f64 "):
+        with pytest.raises(ValueError):
+            SolverConfig(dtype_policy=bad)
+    with pytest.raises(ValueError):
+        SolverConfig(dtype="float32", dtype_policy="f64")
+
+
+@needs_devices
+def test_f32_checked_refused_with_resident_residency():
+    """Resident sessions donate their warm-start buffers, so the shadow
+    f64 re-solve could never see the same init — the engine must refuse
+    the combination up front rather than check the wrong thing."""
+    with pytest.raises(ValueError):
+        CapacityEngine(SolverConfig(dtype_policy="f32_checked",
+                                    mesh=lane_mesh(min(2, D)),
+                                    residency="resident"))
+
+
+def test_f32_checked_refused_without_x64():
+    """With x64 disabled the f64 reference re-solve silently truncates to
+    float32 and the cross-check compares the fast path against itself —
+    the solve must refuse loudly instead of reporting a vacuous pass.
+    Runs in a subprocess because conftest pins x64 on for this one."""
+    import subprocess
+    import sys
+    code = (
+        "import jax\n"
+        "from repro.core import CapacityEngine, SolverConfig, "
+        "sample_scenario\n"
+        "scns = [sample_scenario(jax.random.PRNGKey(i), 5) "
+        "for i in range(3)]\n"
+        "eng = CapacityEngine(SolverConfig(dtype_policy='f32_checked[:2]'))\n"
+        "try:\n"
+        "    eng.solve(scns)\n"
+        "except RuntimeError as e:\n"
+        "    assert 'jax_enable_x64' in str(e), e\n"
+        "else:\n"
+        "    raise SystemExit('f32_checked passed without x64')\n")
+    env = {**os.environ, "JAX_PLATFORMS": "cpu", "JAX_ENABLE_X64": "0",
+           "PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src")}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_f32_checked_batch_solve_reports_check():
+    """The f32 fast path solves in float32 and the report carries the
+    cross-check measurement: k evenly-spaced lanes re-solved in f64, the
+    worst relative L1 deviation, and the documented bound."""
+    scns = [sample_scenario(jax.random.PRNGKey(i), n, capacity_factor=0.95)
+            for i, n in enumerate((5, 9, 3, 7, 6))]
+    rep = CapacityEngine(
+        SolverConfig(dtype_policy="f32_checked[:3]", iter_fn=IT_JNP)
+    ).solve(scns)
+    assert rep.fractional.r.dtype == jnp.float32
+    chk = rep.dtype_check
+    assert chk is not None and len(chk["lanes"]) == 3
+    assert chk["max_rel"] <= chk["bound"]
+    assert chk["bound"] == pytest.approx(2 * 0.03 + 1e-6)
+
+    rep64 = CapacityEngine(SolverConfig(dtype_policy="f64")).solve(scns)
+    assert rep64.fractional.r.dtype == jnp.float64
+    assert rep64.dtype_check is None
+
+
+def test_f32_checked_violation_raises_naming_lanes():
+    """A solution outside the f64 equilibrium's basin must raise, and the
+    error must say WHICH lanes failed (that is what makes the check
+    actionable in a fleet log)."""
+    batch = make_batch(seed=10)
+    batch32 = jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32)
+                   if hasattr(x, "dtype")
+                   and jnp.issubdtype(x.dtype, jnp.floating) else x), batch)
+    cfg = SolverConfig(dtype_policy="f32_checked[:2]")
+    sol = solve_distributed_batch(batch32)
+    assert _dtype_check(cfg, batch32, sol)["max_rel"] <= 2 * 0.03 + 1e-6
+    bad = dataclasses.replace(sol, r=sol.r * 1.5)
+    with pytest.raises(RuntimeError, match="lane"):
+        _dtype_check(cfg, batch32, bad)
+
+
+# --------------------------------------------------------------------------
+# Properties (hypothesis; loud skip when the package is absent)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_prop_fused_step_bitwise_any_batch(seed):
+    """For arbitrary scenario batches and bid states, one Pallas-middle
+    fused step is bit-equal to the jnp-middle step."""
+    rng = np.random.RandomState(seed)
+    ns = tuple(int(x) for x in rng.randint(2, 11, size=4))
+    batch = make_batch(seed=seed % 1000, ns=ns)
+    scns, mask = batch.scenarios, batch.mask
+    prep = ref.prepare(scns, mask)
+    _, r, bids = cold_state(batch)
+    bids = bids * (1.0 + 0.3 * jnp.asarray(rng.rand(*bids.shape)))
+    out_j = IT_JNP.step(prep, scns, mask, r, bids, 0.05)
+    out_p = IT_PALLAS.step(prep, scns, mask, r, bids, 0.05)
+    for x, y, nm in zip(out_p, out_j, ("r", "rho", "bids", "eps")):
+        assert_bitwise_equal(np.asarray(x), np.asarray(y), label=nm)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_prop_fused_equilibrium_matches_unfused(seed):
+    """For arbitrary batches the fused solve reaches the unfused
+    equilibrium: identical iteration counts, allocations within ULPs."""
+    rng = np.random.RandomState(seed)
+    ns = tuple(int(x) for x in rng.randint(2, 11, size=4))
+    batch = make_batch(seed=seed % 1000, ns=ns)
+    sol_u = solve_distributed_batch(batch)
+    sol_f = solve_distributed_batch(batch, iter_fn=IT_JNP)
+    assert_bitwise_equal(np.asarray(sol_f.iters), np.asarray(sol_u.iters),
+                         label="iters")
+    assert_ulp_close(sol_f.r, sol_u.r, ulps=64, scale=np.asarray(sol_u.r),
+                     err_msg="r")
+
+
+if not HAVE_HYPOTHESIS:
+    pass  # @given shims the tests into loud skips (tests/_hypothesis_compat)

@@ -11,6 +11,8 @@ from repro.kernels.gnep_sweep.ref import reference as sweep_ref
 from repro.kernels.rwkv6.kernel import wkv6
 from repro.kernels.rwkv6.ref import reference as wkv_ref
 
+from _tolerance import assert_ulp_close
+
 KEY = jax.random.PRNGKey(0)
 
 
@@ -81,15 +83,15 @@ def test_gnep_sweep(Nc, N, bc, bn):
     fill_r, sf_r, pf_r = sweep_ref(inc, spare, p)
     # Kernel and reference are both f32 but sum the prefix in different
     # orders (blockwise carry vs one cumsum); near the clip boundary the
-    # fill difference is O(ulp(sum(inc))), so the absolute tolerance must
-    # scale with the running-sum magnitude (~2 f32 ulps of it).
-    atol = 4 * float(jnp.sum(inc, axis=1).max()) * np.finfo(np.float32).eps
-    np.testing.assert_allclose(np.asarray(fill), np.asarray(fill_r),
-                               rtol=1e-5, atol=max(atol, 1e-4))
-    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_r),
-                               rtol=1e-5, atol=max(atol, 1e-3))
-    np.testing.assert_allclose(np.asarray(pf), np.asarray(pf_r),
-                               rtol=1e-5, atol=max(100 * atol, 1e-2))
+    # fill difference is O(ulp(sum(inc))), so the tolerance is ULPs at the
+    # running-sum magnitude — for pf, at the p-weighted sum's magnitude.
+    assert_ulp_close(fill, fill_r, ulps=8,
+                     scale=jnp.sum(inc, axis=1), rtol=1e-5, err_msg="fill")
+    assert_ulp_close(sf, sf_r, ulps=8,
+                     scale=jnp.sum(inc, axis=1), rtol=1e-5, err_msg="sum_fill")
+    assert_ulp_close(pf, pf_r, ulps=8,
+                     scale=jnp.sum(inc * p[None, :], axis=1), rtol=1e-5,
+                     err_msg="p_fill")
 
 
 def test_gnep_sweep_plugs_into_rm_solve():
