@@ -1,0 +1,141 @@
+"""Capacity-planner throughput: design-space candidates solved per second.
+
+Expands a :class:`repro.core.planning.PlanSpec` fleet grid and times
+``solve_plan``'s chunked batch path end-to-end (grid stacking + padded
+chunk solves + frontier reduction), reported in candidates/sec — the
+number that says how large a design space an operator can sweep
+interactively.
+
+``--shard`` additionally times the same plan lane-sharded over a 1-D
+device mesh (forced host devices on CPU — the flag is injected
+automatically when missing).  The warm-start mode (deadline-axis seeding)
+is timed as an ungated context row: its benefit depends on how close
+adjacent deadline points' equilibria are, which is workload-dependent.
+
+``--json PATH`` writes the machine-readable record (``BENCH_plan.json``
+by convention) that ``scripts/check_bench.py`` gates CI against; the
+``grid`` / ``profile`` / ``fleet`` tags are config — records measured
+over different design spaces are never compared.
+"""
+import argparse
+import sys
+
+# Forced host devices must be configured BEFORE jax initializes its backend,
+# hence the sys.argv sniff at import time; programmatic main([...]) callers
+# import jax first and must set the topology themselves.
+if "--shard" in sys.argv:
+    from repro._env import force_host_devices
+    force_host_devices()
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed, write_bench_json
+from repro.core import SolverConfig, lane_mesh
+from repro.core.planning import (PlanSpec, VMTier, generate_grid,
+                                 solve_plan)
+
+TIERS = (VMTier("small", 1.0, 6.0), VMTier("mid", 2.0, 10.0),
+         VMTier("large", 4.0, 16.0), VMTier("xlarge", 8.0, 28.0))
+
+
+def make_spec(smoke: bool) -> PlanSpec:
+    """The benchmark's fixed design space (smoke: 48, full: 1024 points)."""
+    if smoke:
+        return PlanSpec(
+            n_classes=12, profile="bursty", rate=50.0, trace_events=256,
+            cluster_sizes=(2000.0, 6000.0, 18000.0, 54000.0),
+            vm_tiers=TIERS[:2], penalty_scales=(1.0, 2.0),
+            deadline_scales=(0.8, 1.0, 1.2), seed=0)
+    return PlanSpec(
+        n_classes=12, profile="bursty", rate=50.0, trace_events=1024,
+        cluster_sizes=tuple(float(r) for r in
+                            np.geomspace(1000.0, 128000.0, 8).round()),
+        vm_tiers=TIERS, penalty_scales=(0.5, 1.0, 2.0, 4.0),
+        deadline_scales=tuple(np.linspace(0.7, 1.4, 8).round(2)), seed=0)
+
+
+def fleet_tag(spec: PlanSpec) -> str:
+    """Compact design-space descriptor recorded as a config tag."""
+    return "x".join(map(str, spec.grid_shape))
+
+
+def run_grid(spec, candidates, *, chunk, mesh=None, iters=3,
+             warm=False) -> dict:
+    """Time one plan solve configuration; returns its metrics section."""
+    cfg = SolverConfig(mesh=mesh)
+    B = len(candidates)
+
+    def once():
+        # warm mode needs the spec (chain structure); cold mode takes the
+        # pre-expanded list so repeated timings don't re-derive the grid
+        return solve_plan(spec if warm else candidates, config=cfg,
+                          chunk=chunk, warm_start=warm)
+
+    t = timed(once, iters=iters)
+    rep = once()
+    cps = B / t
+    name = (f"plan_{fleet_tag(spec)}_chunk{chunk}"
+            f"{'_warm' if warm else ''}"
+            f"{f'_dev{mesh.devices.size}' if mesh is not None else ''}")
+    row(name, t, f"candidates={B};cps={cps:.0f};"
+        f"feasible={int(rep.feasible.sum())};chunks={rep.n_chunks}")
+    return {"B": chunk, "n": spec.n_classes, "grid": B,
+            "profile": spec.profile, "fleet": fleet_tag(spec),
+            "candidates_per_sec": cps,
+            "feasible_frac": float(rep.feasible.mean())}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shard", action="store_true",
+                    help="also time the plan lane-sharded over a device "
+                         "mesh")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="candidates per solve dispatch (default: 16 "
+                         "smoke / 64 full)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI smoke: 48-candidate grid")
+    ap.add_argument("--json", nargs="?", const="BENCH_plan.json",
+                    default=None, metavar="PATH",
+                    help="write machine-readable results "
+                         "(default PATH: BENCH_plan.json)")
+    args = ap.parse_args(argv)
+
+    spec = make_spec(args.smoke)
+    chunk = args.chunk if args.chunk is not None else (16 if args.smoke
+                                                      else 64)
+    candidates = generate_grid(spec)
+    iters = 3
+
+    results = {}
+    results["grid"] = run_grid(spec, candidates, chunk=chunk, iters=iters)
+    # warm-start context row (ungated): merged into the grid section so the
+    # two cadences share one config block
+    warm = run_grid(spec, candidates, chunk=chunk, iters=iters, warm=True)
+    results["grid"]["warm_candidates_per_sec"] = warm["candidates_per_sec"]
+
+    if args.shard:
+        if jax.device_count() == 1:
+            print("plan_perf: WARNING single-device topology — set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count=8 (or "
+                  "call repro._env.force_host_devices) before jax "
+                  "initializes; the shard row measures nothing sharded",
+                  file=sys.stderr)
+        mesh = lane_mesh()
+        shard = run_grid(spec, candidates, chunk=chunk, mesh=mesh,
+                         iters=iters)
+        shard["max_devices"] = mesh.devices.size
+        results["grid_shard"] = shard
+
+    if args.json:
+        # solver-config provenance: check_bench.py treats the fingerprint as
+        # configuration and refuses cross-config compares.  The sections
+        # above run under SolverConfig() / SolverConfig(mesh=...) — the
+        # mesh lives in the per-section max_devices tag instead.
+        write_bench_json(args.json, "plan", results, smoke=args.smoke,
+                         solver_config=SolverConfig().fingerprint())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fleet capacity planning in miniature: sweep a small design space
+(cluster size x VM tier x deadline tightness) sized against a bursty
+workload trace, then query the cheapest feasible design and the
+cost/penalty Pareto frontier — the D-SPACE4Cloud design-tool loop built on
+the paper's allocator (docs/OPERATIONS.md "Capacity planning").
+
+    PYTHONPATH=src python examples/capacity_plan.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import PlanSpec, VMTier, generate_grid, solve_plan
+
+SPEC = PlanSpec(
+    n_classes=4,
+    profile="bursty",                  # size the fleet for bursty load
+    rate=50.0,
+    cluster_sizes=(1000.0, 2500.0, 6000.0),
+    vm_tiers=(VMTier("small", 1.0, 6.0), VMTier("large", 2.0, 10.0)),
+    deadline_scales=(0.8, 1.0, 1.2),
+    penalty_scales=(1.0, 2.0),
+    seed=7,
+)
+
+
+def main():
+    grid = generate_grid(SPEC)
+    print(f"=== design space: {'x'.join(map(str, SPEC.grid_shape))} grid "
+          f"= {len(grid)} candidates, profile={SPEC.profile} ===")
+
+    report = solve_plan(SPEC, chunk=12)
+    n_feas = int(report.feasible.sum())
+    print(f"solved in {report.elapsed_s:.2f}s "
+          f"({report.n_chunks} chunks of {report.chunk}); "
+          f"{n_feas}/{report.n_candidates} designs feasible")
+
+    cheapest = report.cheapest_feasible()
+    if cheapest is None:
+        print("no feasible design — grow the cluster axis")
+    else:
+        p = report.point(cheapest)
+        print(f"\ncheapest feasible design: R={p['cluster_size']:.0f} "
+              f"tier={p['tier']} deadline_scale={p['deadline_scale']}")
+        print(f"  power cost {p['cost']:.1f} cents, "
+              f"rejection penalty {p['penalty']:.1f} cents")
+
+    print("\n(cost, penalty) Pareto frontier over feasible designs:")
+    print(f"{'idx':>5} {'R':>7} {'tier':>7} {'dl':>5} {'pen_scale':>9} "
+          f"{'cost':>11} {'penalty':>11}")
+    for i in report.pareto_frontier():
+        p = report.point(int(i))
+        print(f"{p['index']:>5} {p['cluster_size']:>7.0f} {p['tier']:>7} "
+              f"{p['deadline_scale']:>5} {p['penalty_scale']:>9} "
+              f"{p['cost']:>11.1f} {p['penalty']:>11.1f}")
+
+    # a penalty budget turns the frontier into a constrained pick
+    budget = 1000.0
+    j = report.cheapest_feasible(max_penalty=budget)
+    if j is not None:
+        p = report.point(j)
+        print(f"\ncheapest design under a {budget:.0f}-cent penalty budget: "
+              f"#{p['index']} (R={p['cluster_size']:.0f}, tier={p['tier']}, "
+              f"cost {p['cost']:.1f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,7 @@ GATED = {
     "scenarios_per_sec": "throughput",
     "events_per_sec": "throughput",
     "iterations_per_sec": "throughput",
+    "candidates_per_sec": "throughput",
     "admission_p50_ms": "latency",
     "admission_p99_ms": "latency",
 }
@@ -68,11 +69,15 @@ GATED = {
 #: "dtype_policy" / "steps" tag the fused-iteration section — a
 #: fused-kernel speedup measured under a different iter_fn, element-width
 #: policy or pinned iteration count is a different experiment and must
-#: hard-fail the compare instead of silently passing)
+#: hard-fail the compare instead of silently passing; "grid" / "profile" /
+#: "fleet" tag the capacity-planner sections of BENCH_plan.json — a
+#: candidates/sec number over a different design-space size, workload
+#: profile or fleet axis shape is a different sweep and must never be
+#: silently compared)
 CONFIG_KEYS = ("B", "n", "n_events", "chunk", "coalesce", "max_devices",
                "ragged", "path", "residency", "arrival", "transport",
                "tenants", "rate", "flush_k", "queue_limit",
-               "iter", "dtype_policy", "steps")
+               "iter", "dtype_policy", "steps", "grid", "profile", "fleet")
 
 
 class TruncatedBenchError(Exception):

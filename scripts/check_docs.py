@@ -35,9 +35,10 @@ DOC_FILES = [ROOT / "README.md", ROOT / "benchmarks" / "README.md",
              *sorted((ROOT / "docs").glob("*.md"))]
 
 CORE_MODULES = ["types", "profiles", "game", "centralized", "rounding",
-                "streaming", "sharding", "engine", "allocator"]
+                "streaming", "sharding", "engine", "allocator", "traces",
+                "planning"]
 PARAM_STRICT = {"game", "centralized", "streaming", "sharding", "engine",
-                "allocator"}
+                "allocator", "planning"}
 
 #: anchor-checked docs -> minimum recognized anchors.  Fewer than the
 #: minimum means the doc format (or ANCHOR_RE) drifted and the check is

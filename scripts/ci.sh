@@ -77,5 +77,19 @@ echo "== admission daemon smoke (poisson/flash/diurnal, in-process + wire) =="
 python -m benchmarks.allocd_perf --smoke --wire \
     --json "${BENCH_DIR}/BENCH_allocd.json"
 
+echo "== capacity planner smoke (chunked grid sweep, sharded + warm start) =="
+# the 48-candidate design-space sweep; check_bench gates candidates/sec on
+# both the unsharded and lane-sharded sections (ISSUE 10).  The chunked==
+# one-shot bit-equality contract itself is proven in tests/test_planning.py
+python -m benchmarks.plan_perf --shard --smoke \
+    --json "${BENCH_DIR}/BENCH_plan.json"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== capacity planner full grid (1024 candidates, informational) =="
+    # full tier only: the 8x4x4x8 design space at chunk 64 — a larger sweep
+    # than the gated smoke, run without --json (no baseline at this size)
+    python -m benchmarks.plan_perf --shard
+fi
+
 echo "== benchmark regression gate (vs benchmarks/baselines/) =="
 python scripts/check_bench.py --fresh-dir "${BENCH_DIR}"

@@ -19,6 +19,8 @@ from repro.core.game import (BatchWarmStart, cm_best_response, cm_bid_update,
                              cold_start, distributed_walltime_estimate,
                              rm_solve, solve_distributed,
                              solve_distributed_batch, solve_distributed_python)
+from repro.core.planning import (Candidate, PlanReport, PlanSpec, VMTier,
+                                 generate_grid, solve_plan)
 from repro.core.profiles import (from_roofline, sample_class_params,
                                  sample_scenario)
 from repro.core.rounding import (IntegerSolution, round_solution,
@@ -29,6 +31,9 @@ from repro.core.sharding import (LANE_AXIS, lane_mesh, lane_sharding,
                                  solve_sharded_batch)
 from repro.core.streaming import (AdmissionWindow, EventEpoch, FlushPolicy,
                                   grown_n_max, replay, sample_event_trace)
+from repro.core.traces import (ARRIVAL_PROFILES, bursty_times, diurnal_times,
+                               flash_crowd_times, poisson_times,
+                               straggler_times)
 from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
                               RAW_CLASS_FIELDS, Scenario, ScenarioBatch,
                               SLAEdit, Solution, StreamEvent, WindowState,
@@ -36,24 +41,31 @@ from repro.core.types import (CapacityChange, ClassArrival, ClassDeparture,
                               objective, pad_scenario, stack_scenarios)
 
 __all__ = [
+    "ARRIVAL_PROFILES",
     "AdmissionWindow", "AllocationResult", "BatchAllocationResult",
-    "BatchSolveReport", "BatchWarmStart", "CapacityChange", "CapacityEngine",
+    "BatchSolveReport", "BatchWarmStart", "Candidate", "CapacityChange",
+    "CapacityEngine",
     "ClassArrival", "ClassDeparture", "CompactionPolicy", "CrossCheckPolicy",
     "EventEpoch", "FlushPolicy", "InfeasibleError", "IntegerSolution",
+    "PlanReport", "PlanSpec",
     "Policies", "QuotaExceededError", "RAW_CLASS_FIELDS", "RoundingPolicy",
-    "SLAEdit", "TenantQuota",
+    "SLAEdit", "TenantQuota", "VMTier",
     "Scenario", "ScenarioBatch", "Solution", "SolveReport", "SolverConfig",
     "StreamEvent", "StreamingResult", "WindowSession", "WindowSolveReport",
-    "WindowState", "LANE_AXIS", "cm_best_response", "cm_bid_update",
+    "WindowState", "LANE_AXIS", "bursty_times", "cm_best_response",
+    "cm_bid_update",
     "cold_start", "deadline_lhs", "derive", "distributed_walltime_estimate",
-    "from_roofline", "grown_n_max", "kkt_residual", "lane_mesh",
-    "lane_sharding",
+    "diurnal_times", "flash_crowd_times",
+    "from_roofline", "generate_grid", "grown_n_max", "kkt_residual",
+    "lane_mesh", "lane_sharding",
     "neutral_class_values", "objective", "objective_of_r", "pad_batch_lanes",
-    "pad_scenario", "pad_warm_start", "padded_lane_count", "replay",
+    "pad_scenario", "pad_warm_start", "padded_lane_count", "poisson_times",
+    "replay",
     "rm_solve", "round_solution", "round_solution_batch", "shard_batch",
     "sample_class_params", "sample_event_trace", "sample_scenario",
-    "solve", "solve_batch", "solve_coalesced",
+    "solve", "solve_batch", "solve_coalesced", "solve_plan",
     "solve_centralized", "solve_centralized_batch", "solve_distributed",
     "solve_distributed_batch", "solve_distributed_python",
     "solve_sharded_batch", "solve_streaming", "stack_scenarios",
+    "straggler_times",
 ]

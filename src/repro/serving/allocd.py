@@ -562,107 +562,19 @@ class AllocDaemon:
 
 
 # ---------------------------------------------------------------- drivers
-def poisson_times(seed: int, n: int, rate: float) -> np.ndarray:
-    """Open-loop Poisson arrival schedule: `n` times at `rate` events/s.
-
-    Parameters
-    ----------
-    seed : int
-        RNG seed (numpy Generator).
-    n : int
-        Number of arrivals.
-    rate : float
-        Mean arrival rate in events per second.
-
-    Returns
-    -------
-    numpy.ndarray
-        Monotone arrival offsets [s] from the run start, shape ``(n,)``.
-    """
-    rng = np.random.default_rng(seed)
-    return np.cumsum(rng.exponential(1.0 / rate, size=n))
-
-
-def flash_crowd_times(seed: int, n: int, rate: float, *,
-                      burst_factor: float = 8.0,
-                      burst_frac: float = 0.4) -> np.ndarray:
-    """Flash-crowd schedule: Poisson baseline with a mid-run burst.
-
-    The middle ``burst_frac`` of events arrive ``burst_factor`` times
-    faster than `rate` — the diurnal-spike regime the Hadoop utilization
-    literature reports, compressed into one run.
-
-    Parameters
-    ----------
-    seed : int
-        RNG seed.
-    n : int
-        Number of arrivals.
-    rate : float
-        Baseline arrival rate in events per second.
-    burst_factor : float, optional
-        Rate multiplier inside the burst.
-    burst_frac : float, optional
-        Fraction of events (centered) arriving at the burst rate.
-
-    Returns
-    -------
-    numpy.ndarray
-        Monotone arrival offsets [s] from the run start, shape ``(n,)``.
-    """
-    rng = np.random.default_rng(seed)
-    lo = int(n * (0.5 - burst_frac / 2.0))
-    hi = int(n * (0.5 + burst_frac / 2.0))
-    rates = np.full(n, rate, dtype=np.float64)
-    rates[lo:hi] *= burst_factor
-    return np.cumsum(rng.exponential(1.0, size=n) / rates)
-
-
-def diurnal_times(seed: int, n: int, rate: float, *,
-                  peak_factor: float = 4.0,
-                  cycles: float = 2.0) -> np.ndarray:
-    """Diurnal arrival schedule: sinusoidally modulated Poisson process.
-
-    The day/night utilization cycle of the Hadoop trace studies, compressed
-    into one run: the instantaneous rate swings between ``rate`` (the
-    trough) and ``peak_factor * rate`` (the peak) along ``cycles`` full
-    sine periods over the trace.  Unlike :func:`flash_crowd_times`'s one
-    hard step, the load ramps smoothly — the regime where a deadline-aware
-    flush scheduler has time to adapt its cadence.
-
-    Parameters
-    ----------
-    seed : int
-        RNG seed.
-    n : int
-        Number of arrivals.
-    rate : float
-        Trough arrival rate in events per second.
-    peak_factor : float, optional
-        Peak-to-trough rate ratio (>= 1).
-    cycles : float, optional
-        Number of full diurnal periods spanned by the trace.
-
-    Returns
-    -------
-    numpy.ndarray
-        Monotone arrival offsets [s] from the run start, shape ``(n,)``.
-    """
-    rng = np.random.default_rng(seed)
-    phase = np.linspace(0.0, 2.0 * np.pi * cycles, n, endpoint=False)
-    # rate(k) in [rate, peak_factor * rate], sinusoidal; thinning-free
-    # construction: scale each exponential gap by its local rate
-    rates = rate * (1.0 + (peak_factor - 1.0) * 0.5 * (1.0 - np.cos(phase)))
-    return np.cumsum(rng.exponential(1.0, size=n) / rates)
-
-
-ARRIVAL_PROFILES = {
-    "poisson": poisson_times,
-    "flash": flash_crowd_times,
-    "diurnal": diurnal_times,
-}
-"""Open-loop arrival schedule generators by profile name (the benchmark's
-``--arrival`` vocabulary: steady baseline, flash-crowd step, diurnal sine)."""
+# The arrival-schedule generators live in repro.core.traces (the shared
+# workload-trace library, ISSUE 10) so the capacity planner and the daemon
+# are driven by identical workloads.  Re-exported here bit-compatibly —
+# same functions, same RNG streams — so existing callers, committed
+# BENCH_allocd.json sections and the trace-conformance tests are unchanged.
+from repro.core.traces import (            # noqa: E402  (re-export)
+    ARRIVAL_PROFILES,
+    bursty_times,
+    diurnal_times,
+    flash_crowd_times,
+    poisson_times,
+    straggler_times,
+)
 
 
 async def drive_open_loop(daemon: AllocDaemon,

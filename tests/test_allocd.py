@@ -460,5 +460,7 @@ def test_diurnal_times_profile():
     trough = np.mean(gaps[: n // 20])
     peak = np.mean(gaps[n // 4 - n // 40: n // 4 + n // 40])
     assert trough / peak > 2.0
-    assert set(ARRIVAL_PROFILES) == {"poisson", "flash", "diurnal"}
+    # the daemon's original profiles survive in the shared library
+    # (core/traces.py may carry more — tests/test_planning.py pins the set)
+    assert {"poisson", "flash", "diurnal"} <= set(ARRIVAL_PROFILES)
     assert ARRIVAL_PROFILES["diurnal"] is diurnal_times

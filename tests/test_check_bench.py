@@ -117,6 +117,34 @@ def test_gate_fails_fused_iter_config_mismatch(tmp_path, monkeypatch):
     assert run_gate(ok, base, fresh, monkeypatch) == 0
 
 
+def test_gate_fails_plan_grid_config_mismatch(tmp_path, monkeypatch):
+    """The `grid` / `profile` / `fleet` tags are config: a planner
+    candidates/sec number over a different design-space size, workload
+    profile or fleet axis shape (ISSUE 10) is a different sweep and must
+    hard-fail the compare instead of silently passing."""
+    tags = {"grid": 48, "profile": "bursty", "fleet": "4x2x2x3"}
+    for key, other in [("grid", 96), ("profile", "poisson"),
+                       ("fleet", "8x4x4x8")]:
+        base = record(candidates_per_sec=400.0)
+        fresh = record(candidates_per_sec=400.0)
+        base["results"]["batch"].update(tags)
+        fresh["results"]["batch"].update({**tags, key: other})
+        d = tmp_path / f"mismatch-{key}"
+        d.mkdir()
+        assert run_gate(d, base, fresh, monkeypatch) == 1
+    base = record(candidates_per_sec=400.0)
+    fresh = record(candidates_per_sec=30.0)      # matching tags, collapse
+    base["results"]["batch"].update(tags)
+    fresh["results"]["batch"].update(tags)
+    collapse = tmp_path / "matching-tags-collapse"
+    collapse.mkdir()
+    assert run_gate(collapse, base, fresh, monkeypatch) == 1
+    fresh["results"]["batch"]["candidates_per_sec"] = 350.0   # in band
+    ok = tmp_path / "matching-tags-ok"
+    ok.mkdir()
+    assert run_gate(ok, base, fresh, monkeypatch) == 0
+
+
 def test_gate_latency_ceiling_passes_within_band(tmp_path, monkeypatch):
     """Latency metrics gate in the opposite direction: lower is better,
     so a drop is always fine and a rise passes only inside the ceiling."""
